@@ -1,0 +1,54 @@
+"""Fig. 10: design-space exploration — energy savings vs accuracy for 2-bit
+(ternary, phi=1) and 3-bit (phi=4) encodings across vector lengths N.
+
+Paper headline (ConvNet/CIFAR-10): 2-bit -> 91.95% energy eff. @ 68.47% acc;
+3-bit -> 88.82% energy eff. @ 73.28% acc — i.e. 3-bit buys much more accuracy
+for slightly less energy saving.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import train_cnn
+from repro.core.energy import energy_savings
+from repro.core.policy import QuantPolicy
+from repro.core.qsq import QSQConfig
+from repro.models.cnn import CONVNET4, cnn_accuracy
+from repro.quant import dequantize_pytree, quantize_pytree
+
+
+def main(verbose: bool = True, vector_lengths=(2, 4, 8, 16, 32, 64)):
+    t0 = time.time()
+    params, tr_i, tr_l, ev_i, ev_l = train_cnn(CONVNET4, steps=220, lr=1.5e-3)
+    acc_fp = cnn_accuracy(params, CONVNET4, ev_i, ev_l)
+    numel = 2**20  # energy model reference tensor
+
+    rows = [("fig10/float", acc_fp, 0.0)]
+    design_points = []
+    for phi, be in ((1, 2), (4, 3)):
+        for n in vector_lengths:
+            policy = QuantPolicy(base=QSQConfig(phi=phi, group_size=n), min_numel=256)
+            deq = dequantize_pytree(quantize_pytree(params, policy), like=params)
+            acc = cnn_accuracy(deq, CONVNET4, ev_i, ev_l)
+            es = energy_savings(numel, n, be)
+            rows.append((f"fig10/be{be}_N{n}", acc, es))
+            design_points.append((be, n, acc, es))
+    dt = time.time() - t0
+    if verbose:
+        print("Fig. 10 — design space (energy savings vs accuracy):")
+        for name, acc, es in rows:
+            print(f"  {name:20s} acc={acc:.4f} energy_savings={es * 100:.2f}%")
+        # the paper's qualitative claim: at matched N, 2-bit saves slightly
+        # more energy but loses much more accuracy
+        for n in vector_lengths:
+            p2 = next(p for p in design_points if p[0] == 2 and p[1] == n)
+            p3 = next(p for p in design_points if p[0] == 3 and p[1] == n)
+            print(f"  N={n:3d}: 2b acc={p2[2]:.3f}/es={p2[3]:.3f} | "
+                  f"3b acc={p3[2]:.3f}/es={p3[3]:.3f} | "
+                  f"claim(2b es>3b es)={p2[3] > p3[3]} claim(3b acc>=2b acc)={p3[2] >= p2[2]}")
+    return [(name, dt / len(rows) * 1e6, f"acc={acc:.4f}|es={es:.4f}")
+            for name, acc, es in rows]
+
+
+if __name__ == "__main__":
+    main()

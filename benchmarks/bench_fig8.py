@@ -1,0 +1,46 @@
+"""Fig. 8: per-layer quantization sensitivity of the 4-layer ConvNet for
+varying vector lengths N (the paper quantizes the 1st/2nd/3rd/4th conv layer
+one at a time and reports accuracy)."""
+from __future__ import annotations
+
+import re
+import time
+
+from benchmarks.common import train_cnn
+from repro.core.policy import QuantPolicy
+from repro.core.qsq import QSQConfig
+from repro.models.cnn import CONVNET4, cnn_accuracy
+from repro.quant import dequantize_pytree, quantize_pytree
+
+
+def main(verbose: bool = True, vector_lengths=(4, 16, 64)):
+    t0 = time.time()
+    params, tr_i, tr_l, ev_i, ev_l = train_cnn(CONVNET4, steps=220, lr=1.5e-3)
+    acc_fp = cnn_accuracy(params, CONVNET4, ev_i, ev_l)
+    rows = [("fig8/float", acc_fp, "")]
+
+    for n in vector_lengths:
+        for layer in range(4):
+            # quantize ONLY conv layer `layer`: exclude everything else
+            policy = QuantPolicy(
+                base=QSQConfig(phi=4, group_size=n),
+                min_numel=1,
+                min_ndim=2,
+                exclude_res=tuple(
+                    [rf"convs/{i}/" for i in range(4) if i != layer] + ["fcs/"]
+                ),
+            )
+            deq = dequantize_pytree(quantize_pytree(params, policy), like=params)
+            acc = cnn_accuracy(deq, CONVNET4, ev_i, ev_l)
+            rows.append((f"fig8/N{n}_conv{layer + 1}", acc, f"drop={acc_fp - acc:+.4f}"))
+    dt = time.time() - t0
+    if verbose:
+        print("Fig. 8 — ConvNet per-layer quantization (accuracy):")
+        for name, acc, extra in rows:
+            print(f"  {name:22s} acc={acc:.4f} {extra}")
+    return [(name, dt / len(rows) * 1e6, f"{acc:.4f}{('|' + e) if e else ''}")
+            for name, acc, e in rows]
+
+
+if __name__ == "__main__":
+    main()

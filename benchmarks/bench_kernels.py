@@ -1,0 +1,72 @@
+"""Kernel microbenchmarks: fused QSQ dequant-matmul vs dense matmul.
+
+On this CPU container the Pallas kernel runs in interpret mode (correctness
+only — interpret timing is meaningless), so the WALL numbers compare the
+jitted XLA reference paths; the DERIVED numbers are the structural win on the
+target TPU: HBM bytes for weight streaming (the paper's energy/bandwidth
+claim, Eq. 11/12, restated as the decode-shape memory-roofline term).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit_us
+from repro.core import codec
+from repro.core.energy import TPU_HBM_BW
+from repro.kernels import ops, ref
+
+CASES = [
+    # (M, K, N, G) — decode-ish GEMMs (small M = batch, big K/N = weights)
+    (8, 2048, 2048, 64),
+    (8, 4096, 4096, 64),
+    (128, 4096, 4096, 64),
+]
+
+
+def main(verbose: bool = True):
+    rows = []
+    for m, k, n, g in CASES:
+        key = jax.random.PRNGKey(0)
+        w = jax.random.normal(key, (k, n), jnp.float32) * 0.05
+        x = jax.random.normal(key, (m, k), jnp.bfloat16)
+        planes, scales = ops.pack_weight(w, group_size=g, use_pallas=False)
+        wq = ref.qsq_dequant_ref(planes, scales, g).astype(jnp.bfloat16)
+
+        dense_us = timeit_us(jax.jit(lambda x, w: x @ w), x, wq)
+        fused_us = timeit_us(
+            jax.jit(lambda x, p, s: ref.qsq_matmul_ref(x, p, s, g)), x, planes, scales
+        )
+
+        wbytes_dense = k * n * 2  # bf16
+        wbytes_packed = planes.size * 4 + scales.size * 4
+        ratio = wbytes_dense / wbytes_packed
+        # decode-shape memory-roofline term for weight streaming (per layer)
+        t_dense = wbytes_dense / TPU_HBM_BW * 1e6
+        t_packed = wbytes_packed / TPU_HBM_BW * 1e6
+
+        name = f"kernels/qsq_matmul_{m}x{k}x{n}"
+        rows.append((name, fused_us,
+                     f"dense_us={dense_us:.0f}|hbm_ratio={ratio:.2f}x"
+                     f"|tpu_wstream_us={t_packed:.1f}_vs_{t_dense:.1f}"))
+        if verbose:
+            print(f"  {name}: xla_fused={fused_us:.0f}us dense={dense_us:.0f}us "
+                  f"| weight bytes {wbytes_packed / 1e6:.2f}MB vs "
+                  f"{wbytes_dense / 1e6:.2f}MB ({ratio:.2f}x) "
+                  f"| TPU weight-stream {t_packed:.1f}us vs {t_dense:.1f}us")
+
+    # encode throughput (grad compression / checkpoint writer path)
+    k, n, g = 4096, 4096, 64
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.05
+    enc_us = timeit_us(
+        jax.jit(lambda w: ref.qsq_quantize_ref(w, g, 4)), w
+    )
+    rows.append(("kernels/qsq_quantize_4096x4096", enc_us,
+                 f"GBps={(k * n * 4) / (enc_us / 1e6) / 1e9:.2f}"))
+    if verbose:
+        print(f"  encode 4096x4096: {enc_us:.0f}us")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

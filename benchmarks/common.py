@@ -1,0 +1,83 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import image_batches, synthetic_image_dataset
+from repro.models.base import init_params
+from repro.models.cnn import (
+    CNNConfig, cnn_accuracy, cnn_descs, cnn_forward, cnn_loss,
+)
+from repro.optim import AdamWConfig, adamw_init_descs, adamw_update
+
+
+_TRAIN_CACHE: dict = {}
+
+
+def train_cnn(cfg: CNNConfig, steps: int = 150, lr: float = 2e-3,
+              n: int = 768, seed: int = 0, batch: int = 64,
+              noise: float = 0.30):
+    """Train a CNN on the synthetic class-template dataset (cached per
+    config so the fig7/fig8/fig10 benches reuse one trained model).  Returns
+    (params, train_images, train_labels, eval_images, eval_labels)."""
+    key = (cfg.name, steps, lr, n, seed, batch, noise)
+    if key in _TRAIN_CACHE:
+        return _TRAIN_CACHE[key]
+    imgs, labels = synthetic_image_dataset(
+        n, cfg.input_hw, cfg.input_c, cfg.n_classes, seed=seed, noise=noise
+    )
+    n_eval = max(n // 4, 64)
+    tr_i, tr_l = imgs[:-n_eval], labels[:-n_eval]
+    ev_i, ev_l = imgs[-n_eval:], labels[-n_eval:]
+
+    params = init_params(jax.random.PRNGKey(seed), cnn_descs(cfg))
+    opt = init_params(jax.random.PRNGKey(seed), adamw_init_descs(cnn_descs(cfg)))
+    ocfg = AdamWConfig(lr=lr, weight_decay=0.0)
+
+    @jax.jit
+    def step(params, opt, b):
+        loss, grads = jax.value_and_grad(lambda p: cnn_loss(p, cfg, b))(params)
+        params, opt, _ = adamw_update(ocfg, params, grads, opt)
+        return params, opt, loss
+
+    it = image_batches(tr_i, tr_l, batch, seed=seed + 1)
+    for _ in range(steps):
+        _, b = next(it)
+        params, opt, _ = step(params, opt, b)
+    out = (params, tr_i, tr_l, ev_i, ev_l)
+    _TRAIN_CACHE[key] = out
+    return out
+
+
+def finetune_fc(params, cfg: CNNConfig, imgs, labels, steps: int = 60,
+                lr: float = 1e-3, seed: int = 3):
+    """FC-only fine-tune (convs frozen) — Table III rows 3/4."""
+    ocfg = AdamWConfig(lr=lr, weight_decay=0.0)
+    opt = init_params(jax.random.PRNGKey(seed), adamw_init_descs(cnn_descs(cfg)))
+
+    @jax.jit
+    def step(params, opt, b):
+        loss, grads = jax.value_and_grad(lambda p: cnn_loss(p, cfg, b))(params)
+        grads = {"convs": jax.tree_util.tree_map(jnp.zeros_like, grads["convs"]),
+                 "fcs": grads["fcs"]}
+        params, opt, _ = adamw_update(ocfg, params, grads, opt)
+        return params, opt, loss
+
+    it = image_batches(imgs, labels, 64, seed=seed)
+    for _ in range(steps):
+        _, b = next(it)
+        params, opt, _ = step(params, opt, b)
+    return params
+
+
+def timeit_us(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6

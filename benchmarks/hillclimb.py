@@ -1,0 +1,62 @@
+"""§Perf hillclimb driver: re-runs selected cells with a named change and
+prints before/after roofline terms.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --cell qwen3_moe_30b_a3b:train_4k --change moe_local
+  PYTHONPATH=src python -m benchmarks.hillclimb --cell deepseek_7b:decode_32k --change packed
+
+Changes:
+  moe_local   — shard-local MoE capacity routing (models/layers.py::moe);
+                the baseline JSONs were recorded with global routing, so a
+                plain re-run measures the change.
+  packed      — QSQ bit-plane weights for decode/prefill (quant/packed.py).
+  cache_batch — decode KV cache sharded on batch+kv_heads instead of seq
+                (avoids the involuntary full remat on cache update).
+  no_fsdp     — replicate params over the data axis (kills the per-layer
+                weight all-gather at the cost of memory).
+  seq_model   — (default baseline cache sharding) no-op re-run.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+CHANGES = {
+    "moe_local": dict(),
+    "packed": dict(packed=True),
+    "cache_batch": dict(rules_override={"seq_kv": ()}),
+    "packed_cache_batch": dict(packed=True, rules_override={"seq_kv": ()}),
+    "no_fsdp": dict(fsdp=False),
+    "context_parallel": dict(rules_override={
+        "seq_act": ("model",), "heads": (), "kv_heads": (), "mlp": (),
+        "vocab": (), "embed": (),
+    }),
+    "baseline_rerun": dict(),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--change", required=True, choices=list(CHANGES))
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+
+    r = run_cell(arch, shape, tag=args.change, **CHANGES[args.change])
+    rt = r["roofline"]
+    print(json.dumps({
+        "cell": args.cell, "change": args.change,
+        "compute_s": rt["compute_s"], "memory_s": rt["memory_s"],
+        "collective_s": rt["collective_s"], "dominant": rt["dominant"],
+        "roofline_fraction": rt["roofline_fraction"],
+        "useful": r["useful_flops_ratio"],
+        "peak_GB": (r["per_device"].get("peak_bytes") or 0) / 1e9,
+        "arg_GB": (r["per_device"].get("argument_bytes") or 0) / 1e9,
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

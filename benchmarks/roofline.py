@@ -1,0 +1,65 @@
+"""Aggregate experiments/dryrun/*.json into the §Roofline table.
+
+Usage:  PYTHONPATH=src python -m benchmarks.roofline [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_cells(mesh: str = "16x16", tag: str | None = None):
+    cells = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        d = json.loads(p.read_text())
+        name_tag = "__" in p.stem[len(f"{d['arch']}__{d['shape']}__{d['mesh']}"):]
+        if d.get("mesh") != mesh:
+            continue
+        parts = p.stem.split("__")
+        cell_tag = parts[3] if len(parts) > 3 else None
+        if cell_tag != tag:
+            continue
+        cells.append(d)
+    return cells
+
+
+def table(cells, markdown: bool = True) -> str:
+    hdr = ("arch", "shape", "compute_s", "memory_s", "collective_s",
+           "dominant", "frac", "useful", "peak_GB")
+    lines = []
+    if markdown:
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "---|" * len(hdr))
+    for d in cells:
+        if not d.get("supported", False):
+            row = (d["arch"], d["shape"], "-", "-", "-",
+                   f"SKIP: {d.get('skip_reason', '')[:40]}", "-", "-", "-")
+        else:
+            rt = d["roofline"]
+            peak = (d["per_device"].get("peak_bytes") or 0) / 1e9
+            row = (d["arch"], d["shape"], f"{rt['compute_s']:.3e}",
+                   f"{rt['memory_s']:.3e}", f"{rt['collective_s']:.3e}",
+                   rt["dominant"], f"{rt['roofline_fraction']:.3f}",
+                   f"{d['useful_flops_ratio']:.2f}", f"{peak:.1f}")
+        lines.append(("| " + " | ".join(row) + " |") if markdown
+                     else ",".join(row))
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--tag", default=None)
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    cells = load_cells(args.mesh, args.tag)
+    print(table(cells, markdown=not args.csv))
+    print(f"\n{len(cells)} cells on mesh {args.mesh}"
+          + (f" tag={args.tag}" if args.tag else ""))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark orchestrator: runs every paper-table/figure reproduction and
+prints one CSV row per measurement (name,us_per_call,derived).
+
+  PYTHONPATH=src python -m benchmarks.run [--only table3,fig9,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (
+    bench_compression, bench_fig7, bench_fig8, bench_fig9, bench_fig10,
+    bench_fig11, bench_kernels, bench_table3,
+)
+
+BENCHES = {
+    "table3": bench_table3.main,
+    "fig7": bench_fig7.main,
+    "fig8": bench_fig8.main,
+    "fig9": bench_fig9.main,
+    "fig10": bench_fig10.main,
+    "fig11": bench_fig11.main,
+    "kernels": bench_kernels.main,
+    "compression": bench_compression.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma-separated bench names")
+    args = ap.parse_args()
+    names = [n for n in args.only.split(",") if n] or list(BENCHES)
+
+    rows = []
+    failed = []
+    for name in names:
+        print(f"=== {name} ===", flush=True)
+        try:
+            rows.extend(BENCHES[name](verbose=True))
+        except Exception:  # noqa: BLE001 — report all benches even if one dies
+            failed.append(name)
+            traceback.print_exc()
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

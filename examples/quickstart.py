@@ -1,0 +1,70 @@
+"""Quickstart: the paper's whole methodology in one script.
+
+Trains LeNet on the synthetic image task, applies Quality Scalable
+Quantization at phi = 1/2/4, reports accuracy vs quality level (Fig. 7),
+model-size savings (Eq. 11/12 / Fig. 9) and the +zeros effect, then shows
+the CSD quality-scalable-multiplier rounding (Fig. 11).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import numpy as np
+
+from benchmarks.common import train_cnn
+from repro.core.csd import csd_round, partial_product_savings
+from repro.core.policy import QuantPolicy
+from repro.core.qsq import QSQConfig, zeros_fraction
+from repro.models.cnn import LENET, cnn_accuracy
+from repro.quant import (
+    dequantize_pytree, pytree_bits_report, quantize_pytree,
+)
+
+
+def main():
+    print("1) training LeNet (synthetic MNIST-shaped task)...")
+    params, tr_i, tr_l, ev_i, ev_l = train_cnn(LENET, steps=150)
+    acc = cnn_accuracy(params, LENET, ev_i, ev_l)
+    print(f"   float accuracy: {acc:.4f}")
+
+    print("2) Quality Scalable Quantization at three quality levels:")
+    for phi in (1, 2, 4):
+        policy = QuantPolicy(base=QSQConfig(phi=phi, group_size=16), min_numel=256)
+        qp = quantize_pytree(params, policy)
+        deq = dequantize_pytree(qp, like=params)
+        acc_q = cnn_accuracy(deq, LENET, ev_i, ev_l)
+        rep = pytree_bits_report(params, qp)
+        print(f"   phi={phi}: accuracy={acc_q:.4f} "
+              f"(drop {acc - acc_q:+.4f})  model-size savings="
+              f"{rep['memory_savings'] * 100:.2f}%")
+
+    print("3) zeros introduced by quantization (paper: +6%):")
+    policy = QuantPolicy(base=QSQConfig(phi=4, group_size=16), min_numel=256)
+    qp = quantize_pytree(params, policy)
+    w = jax.tree_util.tree_leaves(params)[0]
+    from repro.core.qsq import QSQTensor
+
+    qleaves = [l for l in jax.tree_util.tree_leaves(
+        qp.tree, is_leaf=lambda x: isinstance(x, QSQTensor))
+        if isinstance(l, QSQTensor)]
+    z_fp = np.mean([float(zeros_fraction(l)) for l in jax.tree_util.tree_leaves(params) if l.ndim >= 2])
+    z_q = np.mean([float(zeros_fraction(l.levels)) for l in qleaves])
+    print(f"   zeros: {z_fp * 100:.2f}% -> {z_q * 100:.2f}%")
+
+    print("4) CSD quality-scalable multiplier (weight-rounding view):")
+    w = jax.tree_util.tree_leaves(params)[0]
+    for k in (1, 2, 3):
+        err = float(np.mean((np.asarray(w) - np.asarray(csd_round(w, k))) ** 2))
+        s = float(partial_product_savings(w, k))
+        print(f"   k={k} digits: mse={err:.2e}, partial products skipped={s * 100:.1f}%")
+
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.checkpoint.manager import (
+    CheckpointConfig, CheckpointManager, save_pytree, load_pytree,
+)
+
+__all__ = ["CheckpointConfig", "CheckpointManager", "save_pytree", "load_pytree"]

@@ -1,0 +1,8 @@
+"""Per-architecture configs (--arch <id>) + the paper's own CNNs."""
+from repro.configs.base import (
+    ARCH_IDS, SHAPES, ArchConfig, MoEConfig, HybridConfig, ShapeConfig,
+    get_arch, canonical, cell_is_supported,
+)
+
+__all__ = ["ARCH_IDS", "SHAPES", "ArchConfig", "MoEConfig", "HybridConfig",
+           "ShapeConfig", "get_arch", "canonical", "cell_is_supported"]

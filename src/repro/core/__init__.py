@@ -1,0 +1,24 @@
+"""QSQ core: quantizer (Eq. 5-10), codec (Table II), CSD multipliers, energy model."""
+from repro.core.qsq import (
+    QSQConfig,
+    QSQTensor,
+    quantize,
+    dequantize,
+    quantization_error,
+    zeros_fraction,
+    levels_for_phi,
+    theta_levels,
+    levels_to_codes,
+    codes_to_levels,
+    exhaustive_threshold_search,
+    LEVEL_TABLE,
+)
+from repro.core import codec, csd, energy
+from repro.core.policy import QuantPolicy, sensitivity_rank, budgeted_policy
+
+__all__ = [
+    "QSQConfig", "QSQTensor", "quantize", "dequantize", "quantization_error",
+    "zeros_fraction", "levels_for_phi", "theta_levels", "levels_to_codes",
+    "codes_to_levels", "exhaustive_threshold_search", "LEVEL_TABLE",
+    "codec", "csd", "energy", "QuantPolicy", "sensitivity_rank", "budgeted_policy",
+]

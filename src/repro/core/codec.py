@@ -1,0 +1,105 @@
+"""Bit-level packing of QSQ codes.
+
+Two physical layouts:
+
+* **Dense pack** (`pack_dense` / `unpack_dense`): 10 3-bit codes per int32
+  word (or 16 2-bit codes for ternary).  This is the *wire/checkpoint* format
+  — what the paper sends over the communication channel to the edge device.
+
+* **Bit-plane pack** (`pack_bitplane` / `unpack_bitplane`): the 3 bits of 32
+  consecutive codes are split into 3 int32 words (one per bit position).
+  This is the *kernel* format: power-of-two aligned along the contraction
+  dim, so a Pallas tile can unpack codes with three shifts + masks per 32
+  weights, mirroring the paper's shift-and-invert decoder (Table II) in
+  VREG arithmetic.
+
+All functions are jit-compatible with static shapes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DENSE_CODES_PER_WORD = {3: 10, 2: 16}
+PLANE_GROUP = 32  # codes per bit-plane word
+
+
+# --------------------------------------------------------------------------
+# Dense (wire) format
+# --------------------------------------------------------------------------
+def dense_words(n_codes: int, bits: int = 3) -> int:
+    per = DENSE_CODES_PER_WORD[bits]
+    return (n_codes + per - 1) // per
+
+
+def pack_dense(codes: jax.Array, bits: int = 3) -> jax.Array:
+    """Pack a flat uint8 code array into int32 words (wire format)."""
+    per = DENSE_CODES_PER_WORD[bits]
+    n = codes.shape[0]
+    nw = dense_words(n, bits)
+    padded = jnp.zeros(nw * per, dtype=jnp.uint32).at[:n].set(
+        codes.astype(jnp.uint32)
+    )
+    lanes = padded.reshape(nw, per)
+    shifts = jnp.arange(per, dtype=jnp.uint32) * bits
+    word = jnp.sum(lanes << shifts[None, :], axis=1, dtype=jnp.uint32)
+    return word.astype(jnp.int32)
+
+
+def unpack_dense(words: jax.Array, n_codes: int, bits: int = 3) -> jax.Array:
+    """Inverse of :func:`pack_dense`."""
+    per = DENSE_CODES_PER_WORD[bits]
+    shifts = jnp.arange(per, dtype=jnp.uint32) * bits
+    mask = jnp.uint32((1 << bits) - 1)
+    lanes = (words.astype(jnp.uint32)[:, None] >> shifts[None, :]) & mask
+    return lanes.reshape(-1)[:n_codes].astype(jnp.uint8)
+
+
+# --------------------------------------------------------------------------
+# Bit-plane (kernel) format
+# --------------------------------------------------------------------------
+def pack_bitplane(codes: jax.Array, bits: int = 3) -> jax.Array:
+    """Pack codes (K, ...) -> (K // 32, bits, ...) int32 bit-planes.
+
+    K must be a multiple of 32.  Bit p of word [g, p, ...] holds bit p of
+    code ``codes[g*32 + j, ...]`` at bit position j.
+    """
+    k = codes.shape[0]
+    if k % PLANE_GROUP != 0:
+        raise ValueError(f"K={k} must be a multiple of {PLANE_GROUP}")
+    c = codes.astype(jnp.uint32).reshape(k // PLANE_GROUP, PLANE_GROUP, *codes.shape[1:])
+    j = jnp.arange(PLANE_GROUP, dtype=jnp.uint32).reshape(
+        (1, PLANE_GROUP) + (1,) * (codes.ndim - 1)
+    )
+    planes = []
+    for p in range(bits):
+        bit = (c >> np.uint32(p)) & jnp.uint32(1)
+        planes.append(jnp.sum(bit << j, axis=1, dtype=jnp.uint32))
+    out = jnp.stack(planes, axis=1)  # (K//32, bits, ...)
+    return out.astype(jnp.int32)
+
+
+def unpack_bitplane(planes: jax.Array, bits: int = 3) -> jax.Array:
+    """Inverse of :func:`pack_bitplane`: (K//32, bits, ...) -> (K, ...) uint8."""
+    p32 = planes.astype(jnp.uint32)
+    j = jnp.arange(PLANE_GROUP, dtype=jnp.uint32).reshape(
+        (1, PLANE_GROUP) + (1,) * (planes.ndim - 2)
+    )
+    code = jnp.zeros(
+        (planes.shape[0], PLANE_GROUP) + planes.shape[2:], dtype=jnp.uint32
+    )
+    for p in range(bits):
+        bit = (p32[:, p][:, None] >> j) & jnp.uint32(1)
+        code = code | (bit << np.uint32(p))
+    return code.reshape((planes.shape[0] * PLANE_GROUP,) + planes.shape[2:]).astype(
+        jnp.uint8
+    )
+
+
+# --------------------------------------------------------------------------
+# Wire-format byte accounting (drives the Eq. 11/12 energy model)
+# --------------------------------------------------------------------------
+def wire_bytes(n_codes: int, n_scales: int, bits: int = 3, scalar_bits: int = 32) -> int:
+    """Bytes on the channel for a packed tensor: codes + full-precision scalars."""
+    return 4 * dense_words(n_codes, bits) + (scalar_bits // 8) * n_scales

@@ -1,0 +1,115 @@
+"""Canonic Signed Digit (CSD) arithmetic — the paper's Quality Scalable
+Multiplier, adapted to TPU.
+
+The paper's second component replaces exact multipliers with approximate ones
+that (a) recode the multiplicand into CSD form (digits in {-1, 0, +1}, no two
+adjacent non-zeros — the representation with the provably minimum number of
+non-zero digits), and (b) truncate least-significant non-zero digits to cut
+partial products, saving energy via gate clocking.
+
+**TPU adaptation (see DESIGN.md §2):** the MXU is a fixed dense systolic
+array — partial products cannot be skipped.  What *does* transfer is the
+numerics: multiplying by a k-digit-truncated CSD weight is exactly
+multiplying by ``csd_round(w, k)``.  So we implement CSD as a *weight
+rounding mode*: any weight tensor can be replaced by its nearest value
+representable with <= k non-zero CSD digits, and the induced error/accuracy
+trade-off is the paper's quality-scalability knob.  We also reproduce the
+Fig. 11 statistic (distribution of non-zero CSD digits in trained weights).
+
+The greedy nearest-signed-power-of-two residual expansion used below is the
+classic CSD recoding: at each step the remaining residual is reduced by its
+nearest signed power of two, which reproduces the most-significant-first CSD
+digits; stopping after k steps == truncating the k+1-th and later partial
+products.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@partial(jax.jit, static_argnames=("max_digits", "min_exp", "max_exp"))
+def csd_round(
+    w: jax.Array,
+    max_digits: int = 3,
+    min_exp: int = -16,
+    max_exp: int = 15,
+) -> jax.Array:
+    """Round to the nearest value with <= max_digits non-zero CSD digits.
+
+    Exponents are clamped to [min_exp, max_exp] (a 32-bit fixed-point-like
+    range by default, matching the paper's MATLAB ``fi`` analysis).
+    """
+    w = w.astype(jnp.float32)
+    residual = w
+    approx = jnp.zeros_like(w)
+    for _ in range(max_digits):
+        a = jnp.abs(residual)
+        # nearest power of two: exponent = floor(log2(|r| * 4/3)); the 4/3
+        # factor puts the rounding boundary at the geometric midpoint
+        # sqrt(2^e * 2^(e+1)) ~ 1.5 * 2^e -> boundary |r| = 1.5*2^e.
+        safe = jnp.where(a > 0, a, 1.0)
+        e = jnp.floor(jnp.log2(safe * (4.0 / 3.0)))
+        e = jnp.clip(e, min_exp, max_exp)
+        term = jnp.sign(residual) * jnp.exp2(e)
+        term = jnp.where(a > jnp.exp2(min_exp - 1), term, 0.0)
+        approx = approx + term
+        residual = residual - term
+    return approx
+
+
+def csd_digit_count(
+    w: jax.Array, frac_bits: int = 16, total_bits: int = 30
+) -> jax.Array:
+    """Number of non-zero CSD digits of each weight at fixed-point precision.
+
+    Reproduces the Fig. 11 statistic: quantize w to ``total_bits`` fixed point
+    with ``frac_bits`` fractional bits, then count non-zero digits of the
+    canonical signed-digit recoding (NAF) of the integer.
+
+    total_bits <= 30 so that the NAF helper ``u + (u >> 1)`` cannot overflow
+    uint32 (the default JAX config has no 64-bit ints).
+    """
+    scale = float(2**frac_bits)
+    x = jnp.round(w.astype(jnp.float32) * scale).astype(jnp.int32)
+    lim = 2 ** (total_bits - 1) - 1
+    x = jnp.clip(x, -lim, lim)
+    u = jnp.abs(x).astype(jnp.uint32)
+    # Non-zero CSD digit count of u == popcount of the NAF support:
+    #   h = u + (u >> 1);  nonzeros = popcount(h ^ (u >> 1)).
+    h = u + (u >> np.uint32(1))
+    naf_nonzeros = _popcount32(h ^ (u >> np.uint32(1)))
+    return naf_nonzeros.astype(jnp.int32)
+
+
+def _popcount32(x: jax.Array) -> jax.Array:
+    x = x.astype(jnp.uint32)
+    m1 = np.uint32(0x55555555)
+    m2 = np.uint32(0x33333333)
+    m4 = np.uint32(0x0F0F0F0F)
+    h01 = np.uint32(0x01010101)
+    x = x - ((x >> np.uint32(1)) & m1)
+    x = (x & m2) + ((x >> np.uint32(2)) & m2)
+    x = (x + (x >> np.uint32(4))) & m4
+    return ((x * h01) >> np.uint32(24)).astype(jnp.int32)
+
+
+def csd_nonzero_histogram(w: jax.Array, frac_bits: int = 16, max_count: int = 33):
+    """Histogram of non-zero CSD digit counts (Fig. 11 reproduction)."""
+    counts = csd_digit_count(w.reshape(-1), frac_bits=frac_bits)
+    return jnp.bincount(counts, length=max_count)
+
+
+def partial_product_savings(w: jax.Array, max_digits: int, frac_bits: int = 16):
+    """Fraction of partial products an approximate CSD multiplier would skip.
+
+    Exact multiplier cost model: one partial product per non-zero CSD digit.
+    The quality-scalable multiplier caps digits at ``max_digits``.
+    """
+    counts = csd_digit_count(w.reshape(-1), frac_bits=frac_bits).astype(jnp.float32)
+    exact = jnp.sum(counts)
+    kept = jnp.sum(jnp.minimum(counts, float(max_digits)))
+    return jnp.where(exact > 0, 1.0 - kept / exact, 0.0)

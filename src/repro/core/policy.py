@@ -1,0 +1,140 @@
+"""Per-layer quantization policy — which params get QSQ, at which quality.
+
+The paper quantizes conv-filter weights layer by layer and notes (Fig. 8)
+that layers differ in sensitivity.  At framework scale that becomes a policy
+object: a pytree-path -> QSQConfig mapping with sensible defaults
+(2-D+ weight matrices are quantized; norms/scales/biases and other small
+1-D params stay full precision) plus a sensitivity-driven search that
+assigns the quality knob phi per layer under a bit budget (DESIGN.md §7.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Mapping
+
+import jax
+import numpy as np
+
+from repro.core.qsq import QSQConfig
+
+# Param-path regexes that should never be quantized (tiny and sensitive).
+# Matched case-SENSITIVELY against the '/'-joined pytree path.
+DEFAULT_EXCLUDE = (
+    "norm", "scale", "bias", "ln_", "_ln", "ln[0-9]",
+    "a_log", "dt_bias", r"(^|/)D($|/)",  # Mamba decay / skip params
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Decides, per parameter, whether/how to quantize.
+
+    Attributes:
+      base: the QSQConfig applied to quantized params.
+      min_numel: params smaller than this stay full precision.
+      min_ndim: params with fewer dims stay full precision (biases, norms).
+      exclude_res: regexes over the '/'-joined pytree path; matches are kept
+        full precision.
+      overrides: path-regex -> QSQConfig for layer-specific quality (the
+        paper's per-layer exhaustive search output plugs in here).
+      quantize_embeddings: embedding tables are huge (phi4: 200k vocab) and
+        benefit most from compression but can be sensitive; default on.
+    """
+
+    base: QSQConfig = QSQConfig()
+    min_numel: int = 1024
+    min_ndim: int = 2
+    exclude_res: tuple = DEFAULT_EXCLUDE
+    overrides: Mapping[str, QSQConfig] = dataclasses.field(default_factory=dict)
+    quantize_embeddings: bool = True
+
+    def config_for(self, path: str, shape: tuple) -> QSQConfig | None:
+        """QSQConfig for this param, or None to keep it full precision."""
+        numel = int(np.prod(shape)) if shape else 1
+        if len(shape) < self.min_ndim or numel < self.min_numel:
+            return None
+        for pat in self.exclude_res:
+            if re.search(pat, path):
+                return None
+        if not self.quantize_embeddings and "embed" in path.lower():
+            return None
+        for pat, cfg in self.overrides.items():
+            if re.search(pat, path):
+                return cfg
+        # Group size must divide the leading dim; shrink if needed.
+        g = self.base.group_size
+        while shape[0] % g != 0:
+            g //= 2
+            if g == 0:
+                return None
+        if g != self.base.group_size:
+            return dataclasses.replace(self.base, group_size=g)
+        return self.base
+
+
+def path_str(path) -> str:
+    """jax.tree_util key path -> 'a/b/0/c' string."""
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def sensitivity_rank(
+    params,
+    loss_fn: Callable,
+    policy: QuantPolicy,
+    batch,
+) -> list[tuple[str, float]]:
+    """Rank quantizable layers by quantization-induced loss increase.
+
+    Systematizes the paper's exhaustive per-layer search (Fig. 8): quantize
+    ONE layer at a time with ``policy.base``, measure the loss delta on a
+    calibration batch, sort descending (most sensitive first).
+    """
+    from repro.core import qsq as _qsq
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    base_loss = float(loss_fn(params, batch))
+    results = []
+    for i, (path, leaf) in enumerate(flat):
+        p = path_str(path)
+        cfg = policy.config_for(p, leaf.shape)
+        if cfg is None:
+            continue
+        q = _qsq.quantize(leaf, cfg)
+        leaves = [l for (_, l) in flat]
+        leaves[i] = q.dequantize(leaf.dtype)
+        mutated = jax.tree_util.tree_unflatten(treedef, leaves)
+        results.append((p, float(loss_fn(mutated, batch)) - base_loss))
+    return sorted(results, key=lambda t: -t[1])
+
+
+def budgeted_policy(
+    sens: list[tuple[str, float]],
+    policy: QuantPolicy,
+    phi_by_rank=(4, 4, 2, 1),
+) -> QuantPolicy:
+    """Assign higher phi (more levels) to more sensitive layers.
+
+    ``phi_by_rank`` gives phi for sensitivity quartiles, most->least
+    sensitive.  Returns a policy with per-layer overrides.
+    """
+    if not sens:
+        return policy
+    n = len(sens)
+    overrides = dict(policy.overrides)
+    for rank, (path, _) in enumerate(sens):
+        quartile = min(len(phi_by_rank) - 1, (rank * len(phi_by_rank)) // n)
+        overrides[re.escape(path)] = dataclasses.replace(
+            policy.base, phi=phi_by_rank[quartile]
+        )
+    return dataclasses.replace(policy, overrides=overrides)

@@ -1,0 +1,315 @@
+"""Quality Scalable Quantization (QSQ) — the paper's core contribution.
+
+Implements Eq. 5-10 of "Quality Scalable Quantization Methodology for Deep
+Learning on Edge" (Khaliq & Hafiz):
+
+  * weights are split into vectors ("groups") of length N,
+  * each group gets one full-precision scalar  alpha = sum(|w|) / (phi * N)   (Eq. 9)
+  * each element gets a level from the power-of-two alphabet
+        beta in {0, +-1, +-2, +-4}                                            (Eq. 6)
+    capped by the quality knob phi in {1, 2, 4} (number of magnitude levels,
+    Eq. 8),
+  * the level assignment uses positive/negative deviations sigma_P/sigma_N
+    with thresholds (delta, gamma)                                            (Eq. 10),
+  * dequantization is  w_hat = alpha * beta  — on hardware: shift + invert
+    of the scalar (Table II).
+
+Everything here is pure jnp and jit-compatible.  The 3-bit packing lives in
+``repro.core.codec``; the Pallas fused dequant-matmul lives in
+``repro.kernels``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Table II of the paper: 3-bit code -> quantization level.
+#   000 -> 0 (skipped)        100 -> -1 (invert)
+#   001 -> +1 (no shift)      101 -> -2 (invert + shift)
+#   010 -> +2 (shift left 1)  110 -> -4 (invert + shift twice)
+#   011 -> +4 (shift left 2)  111 -> unused
+LEVEL_TABLE = np.array([0, 1, 2, 4, -1, -2, -4, 0], dtype=np.int8)
+
+# level value -> 3-bit code (inverse of LEVEL_TABLE for valid codes)
+_LEVEL_TO_CODE = {0: 0, 1: 1, 2: 2, 4: 3, -1: 4, -2: 5, -4: 6}
+
+AssignMode = Literal["sigma", "nearest"]
+
+
+def theta_levels(phi: int) -> int:
+    """Eq. 8: number of non-negative magnitude levels for quality knob phi."""
+    if phi not in (1, 2, 4):
+        raise ValueError(f"phi must be one of 1, 2, 4; got {phi}")
+    return int(np.ceil(np.log2(2 * (1 + np.log2(phi))))) + 1
+
+
+def levels_for_phi(phi: int) -> np.ndarray:
+    """Signed level alphabet for a given phi.
+
+    phi=1 -> {0, +-1};  phi=2 -> {0, +-1, +-2};  phi=4 -> {0, +-1, +-2, +-4}.
+    """
+    mags = [0, 1, 2, 4][: theta_levels(phi)]
+    pos = [m for m in mags if m > 0]
+    return np.array([0] + pos + [-m for m in pos], dtype=np.int8)
+
+
+@dataclasses.dataclass(frozen=True)
+class QSQConfig:
+    """Hyper-parameters of the quantizer.
+
+    Attributes:
+      phi: quality knob (1, 2 or 4).  Higher phi = more levels = higher quality.
+      group_size: vector length N over which one scalar alpha is shared.
+      assign: "sigma" is the paper's Eq. 10 threshold rule; "nearest" picks
+        argmin_beta |w - alpha*beta| (the direct minimizer of Eq. 5 given
+        alpha — the paper finds thresholds by exhaustive search, and the
+        nearest rule is the fixed point of that search).
+      delta: Eq. 10 outer threshold multiplier (levels 2 vs 4 boundary).
+      gamma_frac: zero-threshold as a fraction of alpha (the paper's gamma is
+        an absolute per-vector number; we parameterize it relative to alpha so
+        one setting works for every layer scale).
+      refit_alpha: BEYOND-PAPER improvement (off by default = paper-faithful).
+        After level assignment, refit alpha per group by least squares
+        (alpha* = <w, beta> / <beta, beta>) and re-assign once (one Lloyd
+        iteration).  The wire format is unchanged — still 3-bit codes + one
+        scalar — but reconstruction error drops several-fold because the
+        paper's Eq. 9 scalar clips everything above mean|w|.
+    """
+
+    phi: int = 4
+    group_size: int = 16
+    assign: AssignMode = "nearest"
+    delta: float = 2.0
+    gamma_frac: float = 0.5
+    refit_alpha: bool = False
+
+    def __post_init__(self):
+        theta_levels(self.phi)  # validate
+        if self.group_size < 1:
+            raise ValueError("group_size must be >= 1")
+
+    @property
+    def max_level(self) -> int:
+        return int(2 ** (theta_levels(self.phi) - 2)) if self.phi > 1 else 1
+
+    @property
+    def bits_per_code(self) -> int:
+        """3-bit encoding for phi in {2,4}; ternary (phi=1) fits in 2 bits."""
+        return 2 if self.phi == 1 else 3
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QSQTensor:
+    """A quantized tensor: signed level values + per-group scalars.
+
+    ``levels`` holds the *signed level values* in {0,+-1,+-2,+-4} as int8 —
+    the human-readable form.  The wire/HBM form (packed 3-bit codes) is
+    produced by ``repro.core.codec.pack`` from ``codes()``.
+
+    Grouping runs along axis 0 (the contraction dim for matmuls): for a
+    weight of shape (K, ...), group g covers rows [g*G, (g+1)*G).
+    """
+
+    levels: jax.Array  # int8, same shape as the QUANTIZATION VIEW
+    scales: jax.Array  # f32, shape (K // G, *view.shape[1:])
+    group_size: int
+    phi: int
+    # For 4-D conv weights the view is channel-major (paper Fig. 5: vectors
+    # run across input channels): (kh,kw,cin,cout) -> (cin, kh*kw*cout).
+    # conv_shape stores the original shape for the inverse transpose.
+    conv_shape: tuple | None = None
+
+    # -- pytree plumbing -------------------------------------------------
+    def tree_flatten(self):
+        return (self.levels, self.scales), (self.group_size, self.phi, self.conv_shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        levels, scales = children
+        return cls(levels=levels, scales=scales, group_size=aux[0], phi=aux[1],
+                   conv_shape=aux[2] if len(aux) > 2 else None)
+
+    # -- views -----------------------------------------------------------
+    @property
+    def shape(self):
+        return self.levels.shape
+
+    def codes(self) -> jax.Array:
+        """Signed levels -> 3-bit codes per Table II (uint8 in [0, 7))."""
+        return levels_to_codes(self.levels)
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        return dequantize(self, dtype=dtype)
+
+    def nbits(self, scalar_bits: int = 32) -> int:
+        """Total stored bits (Eq. 12 generalized to arbitrary tensors)."""
+        bits_per_code = 2 if self.phi == 1 else 3
+        return int(
+            bits_per_code * np.prod(self.shape)
+            + scalar_bits * np.prod(self.scales.shape)
+        )
+
+
+def levels_to_codes(levels: jax.Array) -> jax.Array:
+    """Map signed level values {0,+-1,+-2,+-4} -> Table II 3-bit codes."""
+    mag = jnp.abs(levels).astype(jnp.int32)
+    # |level| -> magnitude index: 0->0, 1->1, 2->2, 4->3
+    mag_idx = jnp.where(mag == 4, 3, mag)
+    neg = (levels < 0).astype(jnp.int32)
+    # positive codes are 0..3; negative codes are 4..6 (= 3 + mag_idx)
+    return jnp.where(neg == 1, mag_idx + 3, mag_idx).astype(jnp.uint8)
+
+
+def codes_to_levels(codes: jax.Array) -> jax.Array:
+    """Inverse of :func:`levels_to_codes` via Table II."""
+    return jnp.asarray(LEVEL_TABLE)[codes.astype(jnp.int32)]
+
+
+def _grouped(w: jax.Array, group_size: int) -> jax.Array:
+    """Reshape (K, ...) -> (K//G, G, ...) with validation."""
+    k = w.shape[0]
+    if k % group_size != 0:
+        raise ValueError(
+            f"leading dim {k} not divisible by group_size {group_size}"
+        )
+    return w.reshape(k // group_size, group_size, *w.shape[1:])
+
+
+def _nearest_levels(wg, alpha_b, max_level):
+    """argmin_beta |w - alpha*beta| over the signed power-of-two alphabet."""
+    r = wg / alpha_b
+    a = jnp.abs(r)
+    mag = jnp.where(
+        a < 0.5, 0, jnp.where(a < 1.5, 1, jnp.where(a < 3.0, 2, 4))
+    ).astype(jnp.int8)
+    mag = jnp.minimum(mag, max_level).astype(jnp.int8)
+    return jnp.where(r < 0, -mag, mag).astype(jnp.int8)
+
+
+@partial(jax.jit, static_argnames=("phi", "group_size", "assign", "delta",
+                                   "gamma_frac", "refit_alpha"))
+def _quantize_impl(
+    w: jax.Array,
+    *,
+    phi: int,
+    group_size: int,
+    assign: str,
+    delta: float,
+    gamma_frac: float,
+    refit_alpha: bool = False,
+):
+    wg = _grouped(w.astype(jnp.float32), group_size)  # (NG, G, ...)
+
+    # Eq. 9:  alpha = sum |w| / (phi * N)    (per group)
+    alpha = jnp.sum(jnp.abs(wg), axis=1) / (phi * group_size)  # (NG, ...)
+    safe_alpha = jnp.where(alpha == 0, 1.0, alpha)
+    alpha_b = safe_alpha[:, None]  # broadcast over the group axis
+
+    max_level = 2 ** (theta_levels(phi) - 2) if phi > 1 else 1
+
+    if assign == "nearest":
+        levels = _nearest_levels(wg, alpha_b, max_level)
+    elif assign == "sigma":
+        # Eq. 10: thresholds from sigma_P / sigma_N (RMS of the positive /
+        # negative halves of the group; RMS-about-zero is the robust reading
+        # of the paper's "standard deviation of the vector containing
+        # positive/negative filter values").
+        pos_mask = wg > 0
+        neg_mask = wg < 0
+        eps = 1e-12
+        sig_p = jnp.sqrt(
+            jnp.sum(jnp.where(pos_mask, wg * wg, 0.0), axis=1)
+            / (jnp.sum(pos_mask, axis=1) + eps)
+        )[:, None]
+        sig_n = jnp.sqrt(
+            jnp.sum(jnp.where(neg_mask, wg * wg, 0.0), axis=1)
+            / (jnp.sum(neg_mask, axis=1) + eps)
+        )[:, None]
+        gamma = gamma_frac * alpha_b
+        a = jnp.abs(wg)
+        sig = jnp.where(wg >= 0, sig_p, sig_n)
+        sig = jnp.where(sig == 0, alpha_b, sig)  # degenerate group fallback
+        mag = jnp.where(
+            a < gamma,
+            0,
+            jnp.where(a < sig, 1, jnp.where(a < delta * sig, 2, 4)),
+        ).astype(jnp.int8)
+        mag = jnp.minimum(mag, max_level).astype(jnp.int8)
+        levels = jnp.where(wg < 0, -mag, mag).astype(jnp.int8)
+    else:  # pragma: no cover - guarded by QSQConfig
+        raise ValueError(f"unknown assign mode {assign!r}")
+
+    alpha_out = alpha
+    if refit_alpha:
+        # one Lloyd iteration: least-squares alpha for the current levels,
+        # then re-assign against the refitted alpha (beyond-paper, same wire
+        # format).  Guard degenerate groups (all-zero levels).
+        for _ in range(2):
+            lev_f = levels.astype(jnp.float32)
+            num = jnp.sum(wg * lev_f, axis=1)
+            den = jnp.sum(lev_f * lev_f, axis=1)
+            alpha_out = jnp.where(den > 0, num / jnp.maximum(den, 1e-12), safe_alpha)
+            alpha_out = jnp.abs(alpha_out)
+            safe2 = jnp.where(alpha_out == 0, 1.0, alpha_out)[:, None]
+            levels = _nearest_levels(wg, safe2, max_level)
+
+    levels = levels.reshape(w.shape)
+    return levels, alpha_out.astype(jnp.float32)
+
+
+def quantize(w: jax.Array, cfg: QSQConfig) -> QSQTensor:
+    """Quantize a tensor along its leading axis in groups of ``cfg.group_size``."""
+    levels, scales = _quantize_impl(
+        w,
+        phi=cfg.phi,
+        group_size=cfg.group_size,
+        assign=cfg.assign,
+        delta=cfg.delta,
+        gamma_frac=cfg.gamma_frac,
+        refit_alpha=cfg.refit_alpha,
+    )
+    return QSQTensor(levels=levels, scales=scales, group_size=cfg.group_size, phi=cfg.phi)
+
+
+def dequantize(q: QSQTensor, dtype=jnp.float32) -> jax.Array:
+    """w_hat = alpha * beta  (Table II shift-and-scale decode, as arithmetic)."""
+    lev = _grouped(q.levels.astype(jnp.float32), q.group_size)
+    out = lev * q.scales[:, None]
+    return out.reshape(q.levels.shape).astype(dtype)
+
+
+def quantization_error(w: jax.Array, q: QSQTensor) -> jax.Array:
+    """Eq. 5 objective value ||w - alpha*beta||^2 (total, f32)."""
+    return jnp.sum((w.astype(jnp.float32) - q.dequantize()) ** 2)
+
+
+def zeros_fraction(x: jax.Array) -> jax.Array:
+    """Fraction of exactly-zero entries (paper reports +6% zeros after QSQ)."""
+    return jnp.mean((x == 0).astype(jnp.float32))
+
+
+def exhaustive_threshold_search(
+    w: jax.Array,
+    cfg: QSQConfig,
+    deltas=(1.5, 2.0, 2.5, 3.0),
+    gamma_fracs=(0.25, 0.5, 0.75),
+) -> QSQConfig:
+    """The paper's 'thresholds determined by exhaustive search' (sec III.A).
+
+    Minimizes the Eq. 5 reconstruction error over a small (delta, gamma) grid
+    for the sigma assignment mode.  Returns the best config.
+    """
+    best, best_err = cfg, float("inf")
+    for d in deltas:
+        for g in gamma_fracs:
+            cand = dataclasses.replace(cfg, assign="sigma", delta=d, gamma_frac=g)
+            err = float(quantization_error(w, quantize(w, cand)))
+            if err < best_err:
+                best, best_err = cand, err
+    return best

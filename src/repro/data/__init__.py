@@ -1,0 +1,6 @@
+from repro.data.pipeline import (
+    LMDataConfig, lm_batch_iterator, synthetic_image_dataset, DataIteratorState,
+)
+
+__all__ = ["LMDataConfig", "lm_batch_iterator", "synthetic_image_dataset",
+           "DataIteratorState"]

@@ -1,0 +1,109 @@
+"""Deterministic synthetic data pipelines with checkpointable iterator state.
+
+No datasets ship in this container (DESIGN.md §8), so:
+
+* **LM stream**: a deterministic PRNG token stream with learnable structure —
+  a fixed random bigram transition table (peaked distribution), so a real LM
+  reduces loss well below uniform entropy and e2e training is meaningful.
+* **Image classification**: class-conditional Gaussian-blob images with a
+  fixed random class template + noise; LeNet/ConvNet reach >95% on it,
+  letting the paper's Table III / Fig. 7-8 methodology (accuracy before /
+  after QSQ, per-layer sensitivity) run faithfully.
+
+Iterator state is a (step,) counter — restoring it resumes the exact stream
+(fault-tolerance requirement: data order is reproducible across restarts).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class DataIteratorState(NamedTuple):
+    step: int
+    seed: int
+
+
+@dataclasses.dataclass(frozen=True)
+class LMDataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    branching: int = 8  # out-degree of the bigram graph (peakedness)
+
+
+def _bigram_table(vocab: int, branching: int, seed: int) -> np.ndarray:
+    """Each token has `branching` likely successors (deterministic)."""
+    rng = np.random.RandomState(seed)
+    return rng.randint(0, vocab, size=(vocab, branching)).astype(np.int32)
+
+
+def lm_batch(cfg: LMDataConfig, step: int) -> dict:
+    """Batch for a given step — pure function of (cfg, step)."""
+    table = _bigram_table(cfg.vocab, cfg.branching, cfg.seed)
+    key = jax.random.PRNGKey(cfg.seed * 1_000_003 + step)
+    k1, k2 = jax.random.split(key)
+    b, s = cfg.global_batch, cfg.seq_len
+    starts = jax.random.randint(k1, (b,), 0, cfg.vocab)
+    choices = jax.random.randint(k2, (b, s), 0, cfg.branching)
+
+    tbl = jnp.asarray(table)
+
+    def walk(tok, choice):
+        return tbl[tok, choice], tok
+
+    def row(start, ch):
+        _, toks = jax.lax.scan(walk, start, ch)
+        return toks
+
+    seq = jax.vmap(row)(starts, choices)  # (b, s)
+    labels = jnp.concatenate([seq[:, 1:], seq[:, :1]], axis=1)
+    return {"tokens": seq, "labels": labels}
+
+
+def lm_batch_iterator(
+    cfg: LMDataConfig, state: DataIteratorState | None = None
+) -> Iterator[tuple[DataIteratorState, dict]]:
+    """Yields (state_after, batch); resuming from a saved state replays the
+    identical stream."""
+    step = state.step if state else 0
+    while True:
+        batch = lm_batch(cfg, step)
+        step += 1
+        yield DataIteratorState(step=step, seed=cfg.seed), batch
+
+
+def synthetic_image_dataset(
+    n: int, hw: tuple, channels: int, n_classes: int, seed: int = 0,
+    noise: float = 0.35,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Class-template images + noise: (images (N,H,W,C) f32 in [0,1], labels)."""
+    rng = np.random.RandomState(seed)
+    h, w = hw
+    templates = rng.rand(n_classes, h, w, channels).astype(np.float32)
+    # smooth the templates a little so convs have local structure to find
+    for _ in range(2):
+        templates = 0.25 * (
+            np.roll(templates, 1, 1) + np.roll(templates, -1, 1)
+            + np.roll(templates, 1, 2) + np.roll(templates, -1, 2)
+        )
+    labels = rng.randint(0, n_classes, size=n).astype(np.int32)
+    images = templates[labels] + noise * rng.randn(n, h, w, channels).astype(np.float32)
+    return np.clip(images, 0.0, 1.0), labels
+
+
+def image_batches(images, labels, batch: int, seed: int = 0, start_step: int = 0):
+    """Infinite shuffled batch iterator with reproducible order."""
+    n = images.shape[0]
+    step = start_step
+    while True:
+        rng = np.random.RandomState(seed + step)
+        idx = rng.randint(0, n, size=batch)
+        yield step, {"images": jnp.asarray(images[idx]),
+                     "labels": jnp.asarray(labels[idx])}
+        step += 1

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the QSQ hot spots.
+
+qsq_matmul   — fused 3-bit dequant + matmul (the Table-II decoder on-chip)
+qsq_quantize — Eq. 9 + nearest-level encode (checkpoint/grad compression)
+
+Each has a pure-jnp oracle in ref.py; tests sweep shapes/dtypes with
+interpret=True and assert_allclose against the oracle.
+"""
+from repro.kernels.ops import qsq_matmul, qsq_quantize, pack_weight, auto_interpret
+from repro.kernels import ref
+
+__all__ = ["qsq_matmul", "qsq_quantize", "pack_weight", "auto_interpret", "ref"]

@@ -1,0 +1,67 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+On CPU (this container) the kernels run in interpret mode; on TPU they
+compile to Mosaic.  ``auto_interpret()`` picks per-backend so the same code
+path works in tests, benchmarks and the real launcher.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codec
+from repro.kernels import ref
+from repro.kernels.qsq_matmul import qsq_matmul as _qsq_matmul_pallas
+from repro.kernels.qsq_quantize import qsq_quantize as _qsq_quantize_pallas
+
+
+def auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def qsq_matmul(
+    x: jax.Array,
+    planes: jax.Array,
+    scales: jax.Array,
+    *,
+    group_size: int,
+    bm: int = 256,
+    bk: int = 512,
+    bn: int = 256,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """x @ dequant(planes, scales).  Falls back to the XLA ref when asked."""
+    if not use_pallas:
+        return ref.qsq_matmul_ref(x, planes, scales, group_size)
+    if interpret is None:
+        interpret = auto_interpret()
+    return _qsq_matmul_pallas(
+        x, planes, scales, group_size=group_size, bm=bm, bk=bk, bn=bn,
+        interpret=interpret,
+    )
+
+
+def qsq_quantize(
+    w: jax.Array,
+    *,
+    group_size: int,
+    phi: int = 4,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Encode a (K, N) tensor -> (codes uint8 (K,N), scales (K//G, N))."""
+    if not use_pallas:
+        return ref.qsq_quantize_ref(w, group_size, phi)
+    if interpret is None:
+        interpret = auto_interpret()
+    codes_i32, scales = _qsq_quantize_pallas(
+        w, group_size=group_size, phi=phi, interpret=interpret
+    )
+    return codes_i32.astype(jnp.uint8), scales
+
+
+def pack_weight(w: jax.Array, *, group_size: int, phi: int = 4, **kw):
+    """One-call helper: dense weight -> (bit-planes, scales) for qsq_matmul."""
+    codes, scales = qsq_quantize(w, group_size=group_size, phi=phi, **kw)
+    return codec.pack_bitplane(codes), scales

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: fused QSQ dequant + matmul.
+
+This is the paper's on-chip shift-and-scale decoder (Table II) realized for
+TPU: weights live in HBM as 3-bit codes (bit-plane packed, 3 int32 words per
+32 weights) plus one f32 scalar per group of G weights.  The kernel streams
+code tiles into VMEM, unpacks them with shifts/masks in VREGs (the "decoder
+hardware"), applies sign * 2^k * alpha (Table II rows as arithmetic), and
+feeds the MXU — so dense f32/bf16 weights never touch HBM.
+
+HBM traffic for weights drops from 16 bits/weight (bf16) to
+3 + 32/G bits/weight (= 5 bits at G=16, 3.5 bits at G=64): a 3.2-4.6x cut in
+the weight-streaming memory-roofline term, which dominates decode-shape
+inference (see EXPERIMENTS.md §Perf).
+
+Layout:
+  x       (M, K)            bf16/f32   activations
+  planes  (K//32, 3, N)     int32      bit-plane packed 3-bit codes
+  scales  (K//G, N)         f32        per-group scalars (group along K)
+  out     (M, N)            f32
+
+Grid: (M/bm, N/bn, K/bk), K innermost (accumulation, "arbitrary" semantics).
+Default tile (bm=256, bk=512, bn=256) VMEM footprint:
+  x 256x512xbf16 = 256 KiB, planes 16x3x256xi32 = 48 KiB,
+  w-unpacked 512x256xf32 = 512 KiB, acc 256x256xf32 = 256 KiB
+  => ~1.1 MiB/step, double-buffered ~2.2 MiB << 16 MiB VMEM.  All matmul
+  dims are multiples of 128 (MXU-aligned).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+PLANE = 32  # codes per bit-plane word (matches codec.PLANE_GROUP)
+
+
+def _decode_codes(codes: jax.Array) -> jax.Array:
+    """Table II: 3-bit code -> level value, as branch-free integer math.
+
+    0->0, 1->+1, 2->+2, 3->+4, 4->-1, 5->-2, 6->-4, 7->0 (unused).
+    """
+    c = codes.astype(jnp.int32)
+    pos = (c >= 1) & (c <= 3)
+    neg = (c >= 4) & (c <= 6)
+    # exponent: positive codes 1..3 -> 0..2; negative codes 4..6 -> 0..2
+    exp = jnp.where(pos, c - 1, jnp.where(neg, c - 4, 0))
+    mag = jnp.int32(1) << exp
+    return jnp.where(pos, mag, jnp.where(neg, -mag, 0))
+
+
+def _unpack_planes(planes_blk: jax.Array, bk: int, bn: int) -> jax.Array:
+    """(bk//32, 3, bn) int32 bit-planes -> (bk, bn) int32 codes."""
+    g = bk // PLANE
+    # bit position j within each 32-code word, as an iota over a new axis
+    j = jax.lax.broadcasted_iota(jnp.int32, (g, PLANE, bn), dimension=1)
+    code = jnp.zeros((g, PLANE, bn), dtype=jnp.int32)
+    for p in range(3):
+        word = planes_blk[:, p, :]  # (g, bn)
+        bit = (jax.lax.shift_right_logical(word[:, None, :], j)) & 1
+        code = code | (bit << p)
+    return code.reshape(bk, bn)
+
+
+def _qsq_matmul_kernel(x_ref, planes_ref, scales_ref, o_ref, *, bk: int, group_size: int):
+    bm, _ = x_ref.shape
+    bn = o_ref.shape[1]
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    codes = _unpack_planes(planes_ref[...], bk, bn)          # (bk, bn) int32
+    levels = _decode_codes(codes).astype(jnp.float32)        # (bk, bn)
+    # broadcast per-group scales down each K-group of rows
+    ng = bk // group_size
+    lev_g = levels.reshape(ng, group_size, bn)
+    w = (lev_g * scales_ref[...][:, None, :]).reshape(bk, bn)
+    w = w.astype(x_ref.dtype)
+    o_ref[...] += jnp.dot(
+        x_ref[...], w, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("group_size", "bm", "bk", "bn", "interpret"),
+)
+def qsq_matmul(
+    x: jax.Array,
+    planes: jax.Array,
+    scales: jax.Array,
+    *,
+    group_size: int,
+    bm: int = 256,
+    bk: int = 512,
+    bn: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused 3-bit dequant + matmul: x (M,K) @ decode(planes, scales) -> (M,N) f32."""
+    m, kdim = x.shape
+    n = planes.shape[-1]
+    if planes.shape != (kdim // PLANE, 3, n):
+        raise ValueError(f"planes shape {planes.shape} != {(kdim // PLANE, 3, n)}")
+    if scales.shape != (kdim // group_size, n):
+        raise ValueError(f"scales shape {scales.shape} != {(kdim // group_size, n)}")
+    bm, bk, bn = min(bm, m), min(bk, kdim), min(bn, n)
+    if m % bm or kdim % bk or n % bn:
+        raise ValueError(f"shape ({m},{kdim},{n}) not divisible by tile ({bm},{bk},{bn})")
+    if bk % PLANE or bk % group_size:
+        raise ValueError(f"bk={bk} must be a multiple of 32 and group_size={group_size}")
+
+    grid = (m // bm, n // bn, kdim // bk)
+    kernel = functools.partial(_qsq_matmul_kernel, bk=bk, group_size=group_size)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk // PLANE, 3, bn), lambda i, j, k: (k, 0, j)),
+            pl.BlockSpec((bk // group_size, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, planes, scales)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the kernels are validated against (interpret=True
+on CPU, real compile on TPU).  They are deliberately written with the
+simplest possible jnp — no tiling, no cleverness.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codec
+from repro.core.qsq import codes_to_levels, levels_to_codes
+
+
+def qsq_dequant_ref(planes: jax.Array, scales: jax.Array, group_size: int) -> jax.Array:
+    """Bit-plane packed codes + per-group scales -> dense f32 weights.
+
+    planes: (K//32, 3, N) int32, scales: (K//G, N) f32 -> (K, N) f32.
+    """
+    codes = codec.unpack_bitplane(planes)  # (K, N) uint8
+    levels = codes_to_levels(codes).astype(jnp.float32)  # (K, N)
+    k = levels.shape[0]
+    lev_g = levels.reshape(k // group_size, group_size, *levels.shape[1:])
+    w = lev_g * scales[:, None]
+    return w.reshape(levels.shape)
+
+
+def qsq_matmul_ref(
+    x: jax.Array, planes: jax.Array, scales: jax.Array, group_size: int
+) -> jax.Array:
+    """x (M,K) @ dequant(planes, scales) (K,N) -> (M,N) f32."""
+    w = qsq_dequant_ref(planes, scales, group_size).astype(x.dtype)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def qsq_quantize_ref(
+    w: jax.Array, group_size: int, phi: int
+) -> tuple[jax.Array, jax.Array]:
+    """Nearest-level QSQ encode -> (codes (K,N) uint8, scales (K//G,N) f32).
+
+    Matches repro.core.qsq.quantize(assign="nearest") exactly.
+    """
+    from repro.core.qsq import QSQConfig, quantize
+
+    q = quantize(w, QSQConfig(phi=phi, group_size=group_size, assign="nearest"))
+    return levels_to_codes(q.levels), q.scales

@@ -1,0 +1,379 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Run as:  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek_7b --shape train_4k
+         PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Produces experiments/dryrun/<arch>__<shape>__<mesh>.json with
+memory_analysis, cost_analysis, per-collective byte counts and the three
+roofline terms (EXPERIMENTS.md §Dry-run / §Roofline read these files).
+"""
+# The VERY FIRST lines, before ANY other import: jax locks the device count
+# on first init, and the dry-run needs 512 host placeholder devices.
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, cell_is_supported, get_arch  # noqa: E402
+from repro.core.energy import roofline_terms  # noqa: E402
+from repro.launch.mesh import (  # noqa: E402
+    make_production_mesh, mesh_axis_sizes, sharding_rules,
+)
+from repro.models.api import Model  # noqa: E402
+from repro.models.base import abstract_params, count_params, partition_specs  # noqa: E402
+from repro.train.state import train_state_descs  # noqa: E402
+from repro.train.step import make_prefill_step, make_serve_step, make_train_step  # noqa: E402
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(m: re.Match) -> int:
+    dt, dims = m.group(1), m.group(2)
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Per-collective-kind result bytes summed over the (per-device) module."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        lhs, rhs = s.split("=", 1)
+        rhs = rhs.strip()
+        kind = None
+        for k in _COLLECTIVES:
+            # match the op name at the start of the rhs (after the shape),
+            # e.g.  bf16[2048,512]{1,0} all-gather(...)
+            if re.search(rf"\b{k}(-start|-done)?\(", rhs):
+                kind = k
+                break
+        if kind is None or f"{kind}-done(" in rhs:
+            continue  # -done carries no new bytes; counted at -start
+        bytes_ = sum(_shape_bytes(m) for m in _SHAPE_RE.finditer(rhs.split(kind)[0]))
+        out[kind] += bytes_
+        counts[kind] += 1
+    out_counts = {f"n_{k}": v for k, v in counts.items()}
+    return {**out, **out_counts, "total": sum(out[k] for k in _COLLECTIVES)}
+
+
+def model_flops_estimate(model: Model, shape) -> float:
+    """6 * N_active * D (train) / 2 * N_active * tokens (decode/prefill)."""
+    cfg = model.cfg
+    descs = model.param_descs()
+    n_total = 0
+    n_active = 0.0
+    for path, d in jax.tree_util.tree_leaves_with_path(
+        descs, is_leaf=lambda x: hasattr(x, "axes")
+    ):
+        numel = int(np.prod(d.shape))
+        n_total += numel
+        if "experts" in d.axes and cfg.moe is not None:
+            n_active += numel * cfg.moe.top_k / cfg.moe.n_experts
+        else:
+            n_active += numel
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens, n_total, n_active
+
+
+def _named(mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree (jit needs Shardings when the
+    mesh context is not yet entered)."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )
+
+
+def probe_granularity(cfg) -> int:
+    """Smallest layer count that preserves the arch's block structure."""
+    if cfg.family == "hybrid":
+        return cfg.hybrid.period
+    if cfg.family == "vlm":
+        return cfg.cross_every
+    return 1
+
+
+def probe_config(cfg, mult: int):
+    """Reduced-depth copy of cfg (same widths) for unrolled cost probes."""
+    import dataclasses as _dc
+
+    g = probe_granularity(cfg)
+    changes = {"n_layers": g * mult}
+    if cfg.family == "encdec":
+        changes["enc_layers"] = mult
+    return _dc.replace(cfg, **changes)
+
+
+def build_cell(arch_id: str, shape_name: str, mesh, fsdp: bool = True,
+               rules_override=None, cfg_override=None, packed: bool = False):
+    """Returns (jitted_fn, example_args_abstract) for a cell.
+
+    packed=True serves decode/prefill shapes with QSQ bit-plane weights
+    (quant/packed.py) — the paper's decode-on-use, measured in §Perf."""
+    cfg = cfg_override if cfg_override is not None else get_arch(arch_id)
+    model = Model(cfg)
+    shape = SHAPES[shape_name]
+    rules = dict(sharding_rules(mesh, fsdp=fsdp))
+    if rules_override:
+        rules.update(rules_override)
+    sizes = mesh_axis_sizes(mesh)
+
+    batch_descs = model.input_descs(shape)
+    batch_abs = abstract_params(batch_descs)
+    batch_spec = _named(mesh, partition_specs(batch_descs, rules, sizes))
+
+    if shape.kind == "train":
+        sd = train_state_descs(model)
+        state_abs = abstract_params(sd)
+        state_spec = _named(mesh, partition_specs(sd, rules, sizes))
+        step = make_train_step(model)
+        jitted = jax.jit(
+            step,
+            in_shardings=(state_spec, batch_spec),
+            out_shardings=(state_spec, None),
+            donate_argnums=(0,),
+        )
+        args = (state_abs, batch_abs)
+    elif shape.kind == "prefill":
+        pd = model.param_descs()
+        if packed:
+            from repro.quant.packed import packed_param_descs
+
+            pd = packed_param_descs(pd)
+        params_abs = abstract_params(pd)
+        params_spec = _named(mesh, partition_specs(pd, rules, sizes))
+        step = make_prefill_step(model)
+        jitted = jax.jit(step, in_shardings=(params_spec, batch_spec))
+        args = (params_abs, batch_abs)
+    else:  # decode
+        pd = model.param_descs()
+        if packed:
+            from repro.quant.packed import packed_param_descs
+
+            pd = packed_param_descs(pd)
+        params_abs = abstract_params(pd)
+        params_spec = _named(mesh, partition_specs(pd, rules, sizes))
+        cd = model.cache_descs(shape.global_batch, shape.seq_len)
+        cache_abs = abstract_params(cd)
+        cache_spec = _named(mesh, partition_specs(cd, rules, sizes))
+        step = make_serve_step(model)
+        jitted = jax.jit(
+            step,
+            in_shardings=(params_spec, cache_spec, batch_spec),
+            out_shardings=(None, cache_spec),
+            donate_argnums=(1,),
+        )
+        args = (params_abs, cache_abs, batch_abs)
+    return jitted, args, model, shape
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+             fsdp: bool = True, save: bool = True, tag: str = "",
+             rules_override=None, packed: bool = False,
+             probes_enabled: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(mesh.devices.shape))
+    cfg = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_is_supported(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    result = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+        "chips": n_chips, "supported": ok,
+    }
+    if not ok:
+        result["skip_reason"] = reason
+        if save:
+            _save(result, tag)
+        return result
+
+    from repro.launch.mesh import sharding_rules as _sr
+    from repro.models.base import set_activation_rules
+
+    act_rules = dict(_sr(mesh, fsdp=fsdp))
+    if rules_override:
+        act_rules.update(rules_override)
+
+    t0 = time.time()
+    jitted, args, model, shape = build_cell(
+        arch_id, shape_name, mesh, fsdp=fsdp, rules_override=rules_override,
+        packed=packed,
+    )
+    set_activation_rules(act_rules, mesh)
+    try:
+        with mesh:
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+    finally:
+        set_activation_rules(None)
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes_from_hlo(compiled.as_text())
+
+    # ---- scan-trip-count correction (see models/base.py xscan) --------
+    # HloCostAnalysis counts while-loop bodies once, so the rolled-scan
+    # module under-reports per-layer work.  Compile two reduced-depth
+    # probes with every scan fully unrolled and extrapolate linearly:
+    #   X(L) = X(g) + (L/g - 1) * (X(2g) - X(g))
+    from repro.models.base import set_scan_unroll
+
+    cfg_full = get_arch(arch_id)
+    g = probe_granularity(cfg_full)
+    ratio = cfg_full.n_layers // g
+    probes = []
+    set_scan_unroll(True)
+    set_activation_rules(act_rules, mesh)
+    try:
+        for mult in (1, 2) if probes_enabled else ():
+            pj, pargs, _, _ = build_cell(
+                arch_id, shape_name, mesh, fsdp=fsdp,
+                rules_override=rules_override,
+                cfg_override=probe_config(cfg_full, mult),
+                packed=packed,
+            )
+            with mesh:
+                pc = pj.lower(*pargs).compile()
+            pcost = pc.cost_analysis()
+            pcoll = collective_bytes_from_hlo(pc.as_text())
+            probes.append({
+                "flops": float(pcost.get("flops", 0.0)),
+                "bytes": float(pcost.get("bytes accessed", 0.0)),
+                "coll": pcoll["total"],
+            })
+    finally:
+        set_scan_unroll(False)
+        set_activation_rules(None)
+    t_probe = time.time() - t0 - t_lower - t_compile
+
+    def extrap(key):
+        if not probes:  # probes disabled: report the (scan-undercounted)
+            return {"flops": float(cost.get("flops", 0.0)),
+                    "bytes": float(cost.get("bytes accessed", 0.0)),
+                    "coll": coll["total"]}[key]
+        x1, x2 = probes[0][key], probes[1][key]
+        return x1 + (ratio - 1) * (x2 - x1)
+
+    flops_dev = extrap("flops")
+    bytes_dev = extrap("bytes")
+    coll_dev = extrap("coll")
+    mflops, n_total, n_active = model_flops_estimate(model, shape)
+
+    rt = roofline_terms(
+        hlo_flops=flops_dev * n_chips,
+        hlo_bytes=bytes_dev * n_chips,
+        collective_bytes=coll_dev * n_chips,
+        n_chips=n_chips,
+    )
+
+    result.update({
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "probe_s": round(t_probe, 2),
+        "probes_raw": probes,
+        "layer_extrapolation_ratio": ratio,
+        "per_device": {
+            "flops": flops_dev,
+            "bytes_accessed": bytes_dev,
+            "collective_bytes_extrapolated": coll_dev,
+            "collective_bytes_scan_module": coll,
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0) or 0)
+                          + (getattr(mem, "temp_size_in_bytes", 0) or 0),
+        },
+        "model_flops": mflops,
+        "n_params": n_total,
+        "n_params_active": n_active,
+        "useful_flops_ratio": mflops / max(flops_dev * n_chips, 1.0),
+        "roofline": rt,
+    })
+    if save:
+        _save(result, tag)
+    return result
+
+
+def _save(result: dict, tag: str = ""):
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    name = f"{result['arch']}__{result['shape']}__{result['mesh']}{suffix}.json"
+    (RESULTS_DIR / name).write_text(json.dumps(result, indent=2, default=str))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="all 40 cells on this mesh")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--packed", action="store_true",
+                    help="QSQ bit-plane weights for decode/prefill shapes")
+    ap.add_argument("--no-probes", action="store_true",
+                    help="skip the unrolled cost probes (pass/fail sweeps)")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    cells = (
+        [(a, s) for a in ARCH_IDS for s in SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    for arch, shp in cells:
+        try:
+            r = run_cell(arch, shp, multi_pod=args.multi_pod,
+                         fsdp=not args.no_fsdp, tag=args.tag,
+                         packed=args.packed,
+                         probes_enabled=not args.no_probes)
+        except Exception as e:  # noqa: BLE001 — report and continue the sweep
+            print(f"FAIL {arch} {shp}: {type(e).__name__}: {e}")
+            continue
+        if not r["supported"]:
+            print(f"SKIP {arch} {shp}: {r['skip_reason']}")
+        else:
+            rt = r["roofline"]
+            print(
+                f"OK {arch} {shp} mesh={r['mesh']} "
+                f"compile={r['compile_s']}s "
+                f"compute={rt['compute_s']:.3e}s memory={rt['memory_s']:.3e}s "
+                f"coll={rt['collective_s']:.3e}s dom={rt['dominant']} "
+                f"frac={rt['roofline_fraction']:.2f} "
+                f"useful={r['useful_flops_ratio']:.2f}"
+            )
+
+
+if __name__ == "__main__":
+    main()

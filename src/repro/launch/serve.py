@@ -1,0 +1,63 @@
+"""Serving launcher: --arch <id> [--wire PATH] [--prompts ...].
+
+Loads exact params (fresh init on this CPU container) or a QSQ wire
+artifact and serves batched greedy decoding through the ServeEngine.
+On a real pod the same entry point builds the production mesh and shards
+params/caches with launch/mesh.py rules (see launch/dryrun.py for the
+lowering path that proves those shardings compile).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.core.policy import QuantPolicy
+from repro.core.qsq import QSQConfig
+from repro.models.api import Model
+from repro.models.base import init_params
+from repro.quant import pack_pytree_wire, quantize_pytree
+from repro.serve import ServeConfig, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="smollm_135m")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--wire", action="store_true",
+                    help="round-trip the model through the QSQ wire format")
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch, smoke=args.smoke)
+    model = Model(cfg)
+    params = init_params(jax.random.PRNGKey(0), model.param_descs())
+
+    if args.wire:
+        wire = pack_pytree_wire(quantize_pytree(
+            params, QuantPolicy(base=QSQConfig(group_size=16, refit_alpha=True),
+                                min_numel=512)))
+        engine = ServeEngine.from_wire(model, wire, ServeConfig(batch_slots=args.slots))
+        print("loaded from QSQ wire artifact (3-bit + scalars, shift/scale decode)")
+    else:
+        engine = ServeEngine(model, params, ServeConfig(batch_slots=args.slots))
+
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab, size=rng.randint(2, 6)).tolist()
+               for _ in range(min(args.slots, 3))]
+    t0 = time.time()
+    outs = engine.generate(prompts, max_new=args.max_new)
+    dt = time.time() - t0
+    for p, o in zip(prompts, outs):
+        print(f"  {p} -> {o}")
+    n = len(prompts) * args.max_new
+    print(f"{n} tokens in {dt:.2f}s ({n / dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Training launcher: --arch <id> [--smoke] [--steps N] [--ckpt DIR].
+
+On this CPU container it trains the smoke config of any arch (or smollm-135m
+reduced) on the synthetic LM stream; on a real pod the same entry point runs
+under the production mesh with the full config.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.checkpoint import CheckpointConfig
+from repro.configs import ARCH_IDS, get_arch
+from repro.data.pipeline import LMDataConfig, lm_batch
+from repro.models.api import Model
+from repro.optim import AdamWConfig, GradCompressionConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="smollm_135m")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--grad-compression", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch, smoke=args.smoke)
+    model = Model(cfg)
+    data_cfg = LMDataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                            global_batch=args.batch)
+
+    tcfg = TrainerConfig(
+        total_steps=args.steps,
+        log_every=max(args.steps // 10, 1),
+        opt=AdamWConfig(lr=1e-3),
+        compression=GradCompressionConfig(enabled=args.grad_compression),
+        checkpoint=CheckpointConfig(directory=args.ckpt) if args.ckpt else None,
+    )
+    trainer = Trainer(model, tcfg, lambda step: lm_batch(data_cfg, step))
+    state, last = trainer.run()
+    for m in trainer.metrics_log:
+        print(f"step {m['step']:5d}  loss {m['loss']:.4f}  {m['sec_per_step']*1e3:.0f} ms")
+    print(f"done at step {last}; devices={jax.device_count()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Uniform model API over all families.
+
+``Model(cfg)`` exposes:
+  param_descs()                  -> descriptor tree
+  loss(params, batch)            -> scalar          (train shapes)
+  forward(params, batch)         -> logits          (prefill shapes)
+  cache_descs(batch, cache_len)  -> cache descriptor tree
+  decode(params, cache, batch)   -> (logits, cache) (decode shapes)
+  input_descs(shape)             -> batch descriptor tree (ParamDesc leaves,
+                                    so the dry-run derives ShapeDtypeStructs
+                                    AND PartitionSpecs from one source)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec, hybrid, mamba_lm, transformer
+from repro.models.base import ParamDesc
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # -- params ----------------------------------------------------------
+    def param_descs(self):
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return transformer.lm_descs(self.cfg)
+        if f == "ssm":
+            return mamba_lm.mamba_descs(self.cfg)
+        if f == "hybrid":
+            return hybrid.hybrid_descs(self.cfg)
+        if f == "encdec":
+            return encdec.encdec_descs(self.cfg)
+        raise ValueError(f"unknown family {f}")
+
+    # -- train -----------------------------------------------------------
+    def loss(self, params, batch):
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return transformer.lm_loss(params, self.cfg, batch)
+        if f == "ssm":
+            return mamba_lm.mamba_loss(params, self.cfg, batch)
+        if f == "hybrid":
+            return hybrid.hybrid_loss(params, self.cfg, batch)
+        if f == "encdec":
+            return encdec.encdec_loss(params, self.cfg, batch)
+        raise ValueError(f)
+
+    # -- prefill ---------------------------------------------------------
+    def forward(self, params, batch):
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return transformer.lm_forward(
+                params, self.cfg, batch["tokens"], batch.get("vision_embeds")
+            )[0]
+        if f == "ssm":
+            return mamba_lm.mamba_forward(params, self.cfg, batch["tokens"])[0]
+        if f == "hybrid":
+            return hybrid.hybrid_forward(params, self.cfg, batch["tokens"])[0]
+        if f == "encdec":
+            return encdec.encdec_forward(
+                params, self.cfg, batch["frames"], batch["tokens"]
+            )[0]
+        raise ValueError(f)
+
+    # -- decode ----------------------------------------------------------
+    def cache_descs(self, batch: int, cache_len: int):
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return transformer.lm_cache_descs(self.cfg, batch, cache_len)
+        if f == "ssm":
+            return mamba_lm.mamba_cache_descs(self.cfg, batch, cache_len)
+        if f == "hybrid":
+            return hybrid.hybrid_cache_descs(self.cfg, batch, cache_len)
+        if f == "encdec":
+            return encdec.encdec_cache_descs(self.cfg, batch, cache_len)
+        raise ValueError(f)
+
+    def decode(self, params, cache, batch):
+        f = self.cfg.family
+        tokens = batch["tokens"]
+        if f in ("dense", "moe", "vlm"):
+            return transformer.lm_decode(params, self.cfg, cache, tokens)
+        if f == "ssm":
+            return mamba_lm.mamba_decode(params, self.cfg, cache, tokens)
+        if f == "hybrid":
+            return hybrid.hybrid_decode(params, self.cfg, cache, tokens)
+        if f == "encdec":
+            return encdec.encdec_decode(params, self.cfg, cache, tokens)
+        raise ValueError(f)
+
+    # -- inputs ----------------------------------------------------------
+    def input_descs(self, shape: ShapeConfig):
+        cfg = self.cfg
+        b = shape.global_batch
+        tok = lambda s: ParamDesc((b, s), ("batch", None), dtype=jnp.int32, init="zeros")
+        if shape.kind == "train":
+            batch = {"tokens": tok(shape.seq_len), "labels": tok(shape.seq_len)}
+        elif shape.kind == "prefill":
+            batch = {"tokens": tok(shape.seq_len)}
+        else:  # decode: one new token; the context length lives in the cache
+            batch = {"tokens": tok(1)}
+        if cfg.family == "vlm" and shape.kind in ("train", "prefill"):
+            batch["vision_embeds"] = ParamDesc(
+                (b, cfg.vision_tokens, cfg.d_model), ("batch", None, None),
+                dtype=cfg.dtype, init="normal",
+            )
+        if cfg.family == "encdec" and shape.kind in ("train", "prefill"):
+            batch["frames"] = ParamDesc(
+                (b, cfg.enc_seq, cfg.d_model), ("batch", None, None),
+                dtype=cfg.dtype, init="normal",
+            )
+        return batch

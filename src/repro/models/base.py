@@ -1,0 +1,206 @@
+"""Parameter-descriptor machinery shared by every model family.
+
+Models describe their parameters as a pytree of :class:`ParamDesc` (shape +
+logical axis names + init).  From one description we derive:
+
+  * real initialized arrays            (``init_params``)  — smoke tests, examples
+  * ShapeDtypeStruct stand-ins         (``abstract_params``) — the multi-pod dry-run
+  * jax.sharding.PartitionSpec trees   (``partition_specs``) — pjit in/out shardings
+
+Logical axis names decouple the model definition from the mesh: a rules dict
+maps e.g. "mlp" -> ("model",), "embed" -> ("data",) (FSDP), and any dim whose
+size is not divisible by its mesh axes falls back to replicated — which is how
+e.g. smollm's 9 attention heads or whisper's 51865-token vocab stay correct on
+a 16-wide model axis without per-arch special cases.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# --------------------------------------------------------------------------
+# Scan with a global unroll switch.
+#
+# XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+# count, so cost_analysis() on a scanned-layers module under-reports
+# FLOPs/bytes by ~n_layers.  The dry-run therefore compiles small "probe"
+# modules with every scan fully unrolled (set_scan_unroll(True)) and
+# extrapolates; the production step keeps rolled scans for fast compiles.
+# --------------------------------------------------------------------------
+_SCAN_UNROLL = False
+
+
+def set_scan_unroll(value: bool) -> None:
+    global _SCAN_UNROLL
+    _SCAN_UNROLL = bool(value)
+
+
+def xscan(body, carry, xs, length=None):
+    """jax.lax.scan honoring the global unroll switch (see above)."""
+    return jax.lax.scan(body, carry, xs, length=length,
+                        unroll=True if _SCAN_UNROLL else 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDesc:
+    """One parameter: shape, per-dim logical axes, dtype, initializer."""
+
+    shape: tuple
+    axes: tuple  # same length as shape; entries are logical names or None
+    dtype: Any = jnp.float32
+    init: str = "fan_in"  # fan_in | normal | zeros | ones | small
+    scale: float = 1.0
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+
+def _is_desc(x) -> bool:
+    return isinstance(x, ParamDesc)
+
+
+def _init_one(key, d: ParamDesc) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "fan_in":
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else max(d.shape[0], 1)
+        std = d.scale / np.sqrt(fan_in)
+    elif d.init == "normal":
+        std = d.scale * 0.02
+    elif d.init == "small":
+        std = d.scale * 0.006
+    else:
+        raise ValueError(f"unknown init {d.init!r}")
+    return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(d.dtype)
+
+
+def init_params(key: jax.Array, descs) -> Any:
+    """Materialize real arrays from a descriptor tree."""
+    leaves, treedef = jax.tree_util.tree_flatten(descs, is_leaf=_is_desc)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [_init_one(k, d) for k, d in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, arrs)
+
+
+def abstract_params(descs) -> Any:
+    """ShapeDtypeStruct stand-ins (no allocation) for the dry-run."""
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), descs, is_leaf=_is_desc
+    )
+
+
+def spec_for_shape(
+    shape, axes, rules: Mapping[str, Sequence[str]],
+    mesh_axis_sizes: Mapping[str, int],
+) -> P:
+    """One tensor's PartitionSpec from logical axes under divisibility
+    fallback: a dim is sharded over its mapped mesh axes only if the dim size
+    is divisible by their product; otherwise replicated.  A mesh axis may
+    shard at most one dim (first dim wins)."""
+    used: set = set()
+    entries = []
+    for size, name in zip(shape, axes):
+        mesh_axes = tuple(rules.get(name, ())) if name else ()
+        mesh_axes = tuple(a for a in mesh_axes if a not in used)
+        prod = int(np.prod([mesh_axis_sizes[a] for a in mesh_axes])) if mesh_axes else 1
+        if mesh_axes and size % prod == 0:
+            used.update(mesh_axes)
+            entries.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def partition_specs(
+    descs, rules: Mapping[str, Sequence[str]], mesh_axis_sizes: Mapping[str, int]
+) -> Any:
+    """Logical axes -> PartitionSpec tree (see spec_for_shape)."""
+    return jax.tree_util.tree_map(
+        lambda d: spec_for_shape(d.shape, d.axes, rules, mesh_axis_sizes),
+        descs, is_leaf=_is_desc,
+    )
+
+
+# --------------------------------------------------------------------------
+# Activation sharding constraints.
+#
+# XLA SPMD propagation through the 5-D GQA einsums / MoE scatters is not
+# stable at 512 devices (it can silently replicate the batch dim, inflating
+# per-device compute 16-32x).  Models therefore pin their key activations
+# with `constrain(x, ("batch", None, "heads", None))` using the SAME logical
+# axis names as params.  The rules are installed per-launch (dryrun/trainer);
+# with no rules installed (CPU unit tests) constrain() is a no-op.
+# --------------------------------------------------------------------------
+_ACT_RULES: dict = {}
+_ACT_MESH = None
+
+
+def set_activation_rules(rules: Mapping[str, Sequence[str]] | None, mesh=None) -> None:
+    global _ACT_RULES, _ACT_MESH
+    _ACT_RULES = dict(rules) if rules else {}
+    _ACT_MESH = mesh
+
+
+def constrain(x: jax.Array, axes: tuple) -> jax.Array:
+    if not _ACT_RULES or _ACT_MESH is None:
+        return x
+    sizes = dict(zip(_ACT_MESH.axis_names, _ACT_MESH.devices.shape))
+    spec = spec_for_shape(x.shape, axes, _ACT_RULES, sizes)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(_ACT_MESH, spec)
+    )
+
+
+def data_shard_count() -> int:
+    """Product of the mesh axes carrying the batch under the installed
+    activation rules (1 when no mesh is installed — CPU unit tests).
+
+    Used by the MoE layer for shard-local capacity routing: the dispatch
+    cumsum/scatter then never crosses a data-parallel boundary."""
+    if not _ACT_RULES or _ACT_MESH is None:
+        return 1
+    sizes = dict(zip(_ACT_MESH.axis_names, _ACT_MESH.devices.shape))
+    return int(np.prod([sizes[a] for a in _ACT_RULES.get("batch", ()) if a in sizes]))
+
+
+def count_params(descs) -> int:
+    return sum(
+        int(np.prod(d.shape))
+        for d in jax.tree_util.tree_leaves(descs, is_leaf=_is_desc)
+    )
+
+
+def param_bytes(descs) -> int:
+    return sum(
+        int(np.prod(d.shape)) * jnp.dtype(d.dtype).itemsize
+        for d in jax.tree_util.tree_leaves(descs, is_leaf=_is_desc)
+    )
+
+
+# Convenience constructors -------------------------------------------------
+def dense(d_in: int, d_out: int, in_ax: str | None, out_ax: str | None,
+          dtype=jnp.float32, **kw) -> ParamDesc:
+    return ParamDesc((d_in, d_out), (in_ax, out_ax), dtype=dtype, **kw)
+
+
+def stacked(n: int, desc: ParamDesc, axis_name: str | None = "layers") -> ParamDesc:
+    """Prepend a scan-stacked layer axis."""
+    return ParamDesc(
+        (n, *desc.shape), (axis_name, *desc.axes), dtype=desc.dtype,
+        init=desc.init, scale=desc.scale,
+    )
+
+
+def map_stacked(n: int, tree, axis_name: str | None = "layers"):
+    """stacked() over a whole descriptor tree."""
+    return jax.tree_util.tree_map(
+        lambda d: stacked(n, d, axis_name), tree, is_leaf=_is_desc
+    )

@@ -1,0 +1,132 @@
+"""The paper's own evaluation models: LeNet (MNIST) and the 4-layer ConvNet
+(CIFAR-10), in pure JAX.  These are what Tables III and Figs. 7-10 are run on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.base import ParamDesc
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    kh: int
+    kw: int
+    cin: int
+    cout: int
+    pool: bool  # 2x2 max pool after
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    input_hw: tuple
+    input_c: int
+    convs: tuple
+    fc: tuple  # hidden fc widths
+    n_classes: int
+
+    @property
+    def conv_layers(self):
+        return self.convs
+
+
+LENET = CNNConfig(
+    name="lenet",
+    input_hw=(28, 28),
+    input_c=1,
+    convs=(ConvSpec(5, 5, 1, 6, True), ConvSpec(5, 5, 6, 16, True)),
+    fc=(120, 84),
+    n_classes=10,
+)
+
+CONVNET4 = CNNConfig(
+    name="convnet4",
+    input_hw=(32, 32),
+    input_c=3,
+    convs=(
+        ConvSpec(3, 3, 3, 32, False),
+        ConvSpec(3, 3, 32, 32, True),
+        ConvSpec(3, 3, 32, 64, False),
+        ConvSpec(3, 3, 64, 64, True),
+    ),
+    fc=(512,),
+    n_classes=10,
+)
+
+
+def _flat_dim(cfg: CNNConfig) -> int:
+    h, w = cfg.input_hw
+    c = cfg.input_c
+    for cs in cfg.convs:
+        # 'SAME' conv keeps H,W; pooling halves
+        c = cs.cout
+        if cs.pool:
+            h, w = h // 2, w // 2
+    return h * w * c
+
+
+def cnn_descs(cfg: CNNConfig) -> dict:
+    descs = {"convs": [], "fcs": []}
+    for cs in cfg.convs:
+        descs["convs"].append({
+            "w": ParamDesc((cs.kh, cs.kw, cs.cin, cs.cout), (None, None, None, None)),
+            "b": ParamDesc((cs.cout,), (None,), init="zeros"),
+        })
+    dims = [_flat_dim(cfg), *cfg.fc, cfg.n_classes]
+    for i in range(len(dims) - 1):
+        descs["fcs"].append({
+            "w": ParamDesc((dims[i], dims[i + 1]), (None, None)),
+            "b": ParamDesc((dims[i + 1],), (None,), init="zeros"),
+        })
+    return descs
+
+
+def cnn_forward(params: dict, cfg: CNNConfig, images: jax.Array) -> jax.Array:
+    """images: (B, H, W, C) f32 -> logits (B, n_classes)."""
+    x = images.astype(jnp.float32)
+    for cs, p in zip(cfg.convs, params["convs"]):
+        x = jax.lax.conv_general_dilated(
+            x, p["w"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ) + p["b"]
+        x = jax.nn.relu(x)
+        if cs.pool:
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+            )
+    x = x.reshape(x.shape[0], -1)
+    for i, p in enumerate(params["fcs"]):
+        x = x @ p["w"] + p["b"]
+        if i < len(params["fcs"]) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def cnn_loss(params: dict, cfg: CNNConfig, batch: dict) -> jax.Array:
+    logits = cnn_forward(params, cfg, batch["images"])
+    return -jnp.mean(
+        jnp.take_along_axis(
+            jax.nn.log_softmax(logits, -1), batch["labels"][:, None], axis=1
+        )
+    )
+
+
+def cnn_accuracy(params: dict, cfg: CNNConfig, images, labels) -> float:
+    logits = cnn_forward(params, cfg, images)
+    return float(jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32)))
+
+
+def conv_layer_shapes(cfg: CNNConfig):
+    """(name, H, W, C, Num) per conv layer for the Eq. 11/12 model."""
+    from repro.core.energy import LayerShape
+
+    return [
+        LayerShape(f"conv{i}", cs.kh, cs.kw, cs.cin, cs.cout)
+        for i, cs in enumerate(cfg.convs)
+    ]

@@ -1,0 +1,156 @@
+"""Whisper-style encoder-decoder transformer (arXiv:2212.04356).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, enc_seq, d_model) directly.  RMSNorm is used
+in place of LayerNorm (TPU-idiomatic; noted in DESIGN.md §8); the MLP is the
+paper's 2-layer GELU.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.layers import W as L_W
+from repro.models.base import ParamDesc, dense, map_stacked, xscan
+
+
+def _gelu_mlp_descs(d: int, ff: int, dtype) -> dict:
+    return {"wi": dense(d, ff, "embed", "mlp", dtype=dtype),
+            "wo": dense(ff, d, "mlp", "embed", dtype=dtype)}
+
+
+def _gelu_mlp(p: dict, x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x @ L_W(p["wi"]).astype(x.dtype)) @ L_W(p["wo"]).astype(x.dtype)
+
+
+def _enc_block_descs(cfg: ArchConfig) -> dict:
+    return {
+        "ln1": L.rmsnorm_desc(cfg.d_model),
+        "attn": L.attn_descs(cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd, dtype=cfg.dtype),
+        "ln2": L.rmsnorm_desc(cfg.d_model),
+        "mlp": _gelu_mlp_descs(cfg.d_model, cfg.d_ff, cfg.dtype),
+    }
+
+
+def _dec_block_descs(cfg: ArchConfig) -> dict:
+    return {
+        "ln1": L.rmsnorm_desc(cfg.d_model),
+        "self_attn": L.attn_descs(cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd, dtype=cfg.dtype),
+        "ln_x": L.rmsnorm_desc(cfg.d_model),
+        "cross_attn": L.attn_descs(cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd, dtype=cfg.dtype),
+        "ln2": L.rmsnorm_desc(cfg.d_model),
+        "mlp": _gelu_mlp_descs(cfg.d_model, cfg.d_ff, cfg.dtype),
+    }
+
+
+def encdec_descs(cfg: ArchConfig) -> dict:
+    return {
+        "embed": L.embed_descs(cfg.vocab, cfg.d_model, dtype=cfg.dtype),
+        "enc_blocks": map_stacked(cfg.enc_layers, _enc_block_descs(cfg)),
+        "dec_blocks": map_stacked(cfg.n_layers, _dec_block_descs(cfg)),
+        "enc_norm": L.rmsnorm_desc(cfg.d_model),
+        "final_norm": L.rmsnorm_desc(cfg.d_model),
+    }
+
+
+def encode(params: dict, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, enc_seq, d_model) precomputed embeddings (stub frontend)."""
+    b, t, d = frames.shape
+    pos = jnp.asarray(L.sinusoidal_pos_emb(t, d), dtype=cfg.dtype)
+    x = frames.astype(cfg.dtype) + pos[None]
+
+    def body(x, bp):
+        h = L.attention(bp["attn"], L.rmsnorm(x, bp["ln1"]),
+                        positions=None, causal=False)
+        x = x + h
+        return x + _gelu_mlp(bp["mlp"], L.rmsnorm(x, bp["ln2"])), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = xscan(body_fn, x, params["enc_blocks"])
+    return L.rmsnorm(x, params["enc_norm"])
+
+
+def encdec_forward(params: dict, cfg: ArchConfig, frames: jax.Array, tokens: jax.Array):
+    """Teacher-forced training forward -> (logits, aux=0)."""
+    enc = encode(params, cfg, frames)
+    b, s = tokens.shape
+    pos = jnp.asarray(L.sinusoidal_pos_emb(s, cfg.d_model), dtype=cfg.dtype)
+    x = L.embed(params["embed"], tokens, cfg.dtype) + pos[None]
+
+    def body(x, bp):
+        h = L.attention(bp["self_attn"], L.rmsnorm(x, bp["ln1"]),
+                        positions=None, causal=True)
+        x = x + h
+        ckv = L.cross_kv(bp["cross_attn"], enc)
+        x = x + L.cross_attention(bp["cross_attn"], L.rmsnorm(x, bp["ln_x"]), ckv)
+        return x + _gelu_mlp(bp["mlp"], L.rmsnorm(x, bp["ln2"])), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = xscan(body_fn, x, params["dec_blocks"])
+    x = L.rmsnorm(x, params["final_norm"])
+    return L.lm_head(params["embed"], x), jnp.float32(0.0)
+
+
+def encdec_loss(params: dict, cfg: ArchConfig, batch: dict) -> jax.Array:
+    logits, _ = encdec_forward(params, cfg, batch["frames"], batch["tokens"])
+    return L.next_token_loss(logits, batch["labels"])
+
+
+class EncDecCache(NamedTuple):
+    kv: Any  # self-attn KVCache stacked (L_dec, ...)
+    cross_k: Any  # (L_dec, B, enc_seq, kv, hd)
+    cross_v: Any
+
+
+def encdec_cache_descs(cfg: ArchConfig, batch: int, cache_len: int) -> EncDecCache:
+    ck = ParamDesc((cfg.n_layers, batch, cfg.enc_seq, cfg.n_kv, cfg.hd),
+                   (None, "batch", None, "kv_heads", None), dtype=cfg.dtype, init="zeros")
+    return EncDecCache(
+        kv=map_stacked(cfg.n_layers, L.kv_cache_descs(batch, cache_len, cfg.n_kv, cfg.hd, cfg.dtype)),
+        cross_k=ck,
+        cross_v=ck,
+    )
+
+
+def encdec_prefill_cross(params: dict, cfg: ArchConfig, frames: jax.Array):
+    """Encoder pass + per-decoder-layer cross K/V (run once per request)."""
+    enc = encode(params, cfg, frames)
+    ks, vs = jax.vmap(lambda bp: L.cross_kv(bp["cross_attn"], enc))(params["dec_blocks"])
+    return ks, vs
+
+
+def _sin_pos_at(pos, d: int, dtype):
+    """Sinusoidal position embedding row at a traced position index."""
+    i = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2.0 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)]).astype(dtype)
+
+
+def encdec_decode(params: dict, cfg: ArchConfig, cache: EncDecCache, tokens: jax.Array):
+    b = tokens.shape[0]
+    # current position = layer-0 self-attn cache counter
+    pos0 = jax.tree_util.tree_leaves(cache.kv.pos if hasattr(cache.kv, "pos") else cache.kv)[-1]
+    pos0 = cache.kv.pos[0] if hasattr(cache.kv, "pos") else pos0
+    pos = _sin_pos_at(pos0, cfg.d_model, cfg.dtype)
+    x = L.embed(params["embed"], tokens, cfg.dtype) + pos[None, None, :]
+
+    def body(x, inp):
+        bp, kvc, ck, cv = inp
+        # whisper uses absolute sinusoidal positions, no RoPE (matches encode)
+        h, kv2 = L.decode_attention(bp["self_attn"], L.rmsnorm(x, bp["ln1"]), kvc,
+                                    use_rope=False)
+        x = x + h
+        x = x + L.cross_attention(bp["cross_attn"], L.rmsnorm(x, bp["ln_x"]), (ck, cv))
+        return x + _gelu_mlp(bp["mlp"], L.rmsnorm(x, bp["ln2"])), kv2
+
+    x, new_kv = xscan(
+        body, x, (params["dec_blocks"], cache.kv, cache.cross_k, cache.cross_v)
+    )
+    x = L.rmsnorm(x, params["final_norm"])
+    return L.lm_head(params["embed"], x), EncDecCache(
+        kv=new_kv, cross_k=cache.cross_k, cross_v=cache.cross_v
+    )

@@ -1,0 +1,151 @@
+"""Jamba-style hybrid: blocks of `period` layers = 1 attention + (period-1)
+Mamba2 mixers, FFN after every mixer alternating dense / MoE (arXiv:2403.19887).
+
+Scan runs over the (n_layers // period) blocks; the 8 sublayers inside a
+block are unrolled (small constant).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.base import map_stacked, xscan
+
+
+def _ssm_cfg(cfg: ArchConfig) -> S.SSMConfig:
+    d_inner = 2 * cfg.d_model
+    return S.SSMConfig(
+        d_model=cfg.d_model,
+        d_inner=d_inner,
+        n_heads=d_inner // cfg.ssm_head_dim,
+        head_dim=cfg.ssm_head_dim,
+        state=cfg.ssm_state,
+        n_groups=cfg.ssm_groups,
+        chunk=cfg.ssm_chunk,
+    )
+
+
+def _ffn_counts(cfg: ArchConfig) -> tuple[int, int]:
+    period = cfg.hybrid.period
+    n_moe = sum(1 for i in range(period) if i % cfg.hybrid.moe_every == 1)
+    return period - n_moe, n_moe  # (dense, moe)
+
+
+def hybrid_descs(cfg: ArchConfig) -> dict:
+    period = cfg.hybrid.period
+    n_blocks = cfg.n_layers // period
+    sc = _ssm_cfg(cfg)
+    n_dense, n_moe = _ffn_counts(cfg)
+    block = {
+        "attn_ln": L.rmsnorm_desc(cfg.d_model),
+        "attn": L.attn_descs(cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd, dtype=cfg.dtype),
+        "mamba_ln": map_stacked(period - 1, L.rmsnorm_desc(cfg.d_model), None),
+        "mamba": map_stacked(period - 1, S.ssm_descs(sc, dtype=cfg.dtype), None),
+        "ffn_ln": map_stacked(period, L.rmsnorm_desc(cfg.d_model), None),
+        "dense_ffn": map_stacked(n_dense, L.mlp_descs(cfg.d_model, cfg.d_ff, dtype=cfg.dtype), None),
+        "moe_ffn": map_stacked(n_moe, L.moe_descs(cfg.d_model, cfg.d_ff, cfg.moe.n_experts, dtype=cfg.dtype), None),
+    }
+    return {
+        "embed": L.embed_descs(cfg.vocab, cfg.d_model, dtype=cfg.dtype),
+        "final_norm": L.rmsnorm_desc(cfg.d_model),
+        "blocks": map_stacked(n_blocks, block),
+    }
+
+
+def _slice(tree, i: int):
+    return jax.tree_util.tree_map(lambda a: a[i], tree)
+
+
+def _ffn(cfg: ArchConfig, bp: dict, x: jax.Array, layer_in_block: int):
+    """FFN for sublayer i: MoE if i % moe_every == 1 else dense."""
+    y = L.rmsnorm(x, bp["ffn_ln"][layer_in_block])
+    if layer_in_block % cfg.hybrid.moe_every == 1:
+        f, aux = L.moe(
+            _slice(bp["moe_ffn"], layer_in_block // cfg.hybrid.moe_every),
+            y, top_k=cfg.moe.top_k, capacity_factor=cfg.moe.capacity_factor,
+        )
+    else:
+        dense_idx = (layer_in_block + 1) // cfg.hybrid.moe_every
+        f, aux = L.mlp(_slice(bp["dense_ffn"], dense_idx), y), jnp.float32(0.0)
+    return x + f, aux
+
+
+def hybrid_forward(params: dict, cfg: ArchConfig, tokens: jax.Array):
+    b, s = tokens.shape
+    sc = _ssm_cfg(cfg)
+    x = L.embed(params["embed"], tokens, cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    period = cfg.hybrid.period
+
+    def block_fwd(carry, bp):
+        x, aux = carry
+        h = L.attention(bp["attn"], L.rmsnorm(x, bp["attn_ln"]),
+                        positions=positions, theta=cfg.rope_theta)
+        x, a = _ffn(cfg, bp, x + h, 0)
+        aux = aux + a
+        for i in range(1, period):
+            h = S.ssm_forward(_slice(bp["mamba"], i - 1),
+                              L.rmsnorm(x, bp["mamba_ln"][i - 1]), sc)
+            x, a = _ffn(cfg, bp, x + h, i)
+            aux = aux + a
+        return (x, aux), None
+
+    body = jax.checkpoint(block_fwd) if cfg.remat else block_fwd
+    (x, aux), _ = xscan(body, (x, jnp.float32(0.0)), params["blocks"])
+    x = L.rmsnorm(x, params["final_norm"])
+    return L.lm_head(params["embed"], x), aux / cfg.n_layers
+
+
+def hybrid_loss(params: dict, cfg: ArchConfig, batch: dict) -> jax.Array:
+    logits, aux = hybrid_forward(params, cfg, batch["tokens"])
+    return L.next_token_loss(logits, batch["labels"]) + 0.01 * aux
+
+
+class HybridCache(NamedTuple):
+    kv: Any  # KVCache stacked (n_blocks, ...)
+    ssm: Any  # SSMState stacked (n_blocks, period-1, ...)
+
+
+def hybrid_cache_descs(cfg: ArchConfig, batch: int, cache_len: int) -> HybridCache:
+    period = cfg.hybrid.period
+    n_blocks = cfg.n_layers // period
+    sc = _ssm_cfg(cfg)
+    t = min(cache_len, cfg.window) if cfg.window else cache_len
+    return HybridCache(
+        kv=map_stacked(n_blocks, L.kv_cache_descs(batch, t, cfg.n_kv, cfg.hd, cfg.dtype)),
+        ssm=map_stacked(n_blocks, map_stacked(period - 1, S.ssm_state_descs(sc, batch, cfg.dtype), None)),
+    )
+
+
+def hybrid_decode(params: dict, cfg: ArchConfig, cache: HybridCache, tokens: jax.Array):
+    sc = _ssm_cfg(cfg)
+    period = cfg.hybrid.period
+    x = L.embed(params["embed"], tokens, cfg.dtype)
+
+    def block_fwd(x, inp):
+        bp, kvc, ssmc = inp
+        h, kv2 = L.decode_attention(bp["attn"], L.rmsnorm(x, bp["attn_ln"]), kvc,
+                                    theta=cfg.rope_theta, window=cfg.window)
+        x, _ = _ffn(cfg, bp, x + h, 0)
+        new_states = []
+        for i in range(1, period):
+            st = _slice(ssmc, i - 1)
+            h, st2 = S.ssm_decode(_slice(bp["mamba"], i - 1),
+                                  L.rmsnorm(x, bp["mamba_ln"][i - 1]), st, sc)
+            new_states.append(st2)
+            x, _ = _ffn(cfg, bp, x + h, i)
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs, axis=0), *new_states
+        )
+        return x, (kv2, stacked)
+
+    x, (new_kv, new_ssm) = xscan(
+        block_fwd, x, (params["blocks"], cache.kv, cache.ssm)
+    )
+    x = L.rmsnorm(x, params["final_norm"])
+    return L.lm_head(params["embed"], x), HybridCache(kv=new_kv, ssm=new_ssm)

@@ -1,0 +1,443 @@
+"""Shared neural-net layers: RMSNorm, RoPE, GQA attention (full / windowed /
+chunked / decode), SwiGLU MLP, MoE with capacity routing, embeddings.
+
+Pure functions over explicit param dicts; no framework objects.  Attention
+keeps heads as a separate tensor dim so the "heads" logical axis shards
+cleanly over the mesh "model" axis.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.base import ParamDesc, constrain, dense, xscan
+
+# --------------------------------------------------------------------------
+# Packed-weight view.
+#
+# Serving can ship weights as QSQ bit-planes + scales ({"planes", "scales"}
+# dicts) instead of dense arrays — the paper's decode-on-use.  W() is the
+# shift-and-scale decoder (Table II) applied where the weight is consumed;
+# because params flow through the layer scan as xs, only ONE layer's dense
+# weights ever materialize at a time, while the step *arguments* (= HBM
+# residency) stay at ~3.2-5 bits/weight.  On TPU the Pallas qsq_matmul
+# kernel fuses this decode into the matmul tile loop (kernels/qsq_matmul.py).
+# --------------------------------------------------------------------------
+def is_packed(p) -> bool:
+    return isinstance(p, dict) and "planes" in p
+
+
+def W(p):
+    """Weight view: dequantize a packed weight dict, pass dense through."""
+    if not is_packed(p):
+        return p
+    from repro.core import codec
+    from repro.core.qsq import codes_to_levels
+
+    codes = codec.unpack_bitplane(p["planes"])  # (K, ...)
+    lev = codes_to_levels(codes).astype(jnp.float32)
+    k = lev.shape[0]
+    ng = p["scales"].shape[0]
+    g = k // ng
+    w = (lev.reshape(ng, g, *lev.shape[1:]) * p["scales"][:, None]).reshape(lev.shape)
+    return w
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+def rmsnorm_desc(d: int) -> ParamDesc:
+    return ParamDesc((d,), (None,), init="ones")
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, hd), positions: (..., S) -> same shape, rotated pairs."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) * 2.0 / hd))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos_emb(seq: int, d: int) -> np.ndarray:
+    pos = np.arange(seq, dtype=np.float32)[:, None]
+    i = np.arange(d // 2, dtype=np.float32)[None, :]
+    ang = pos / np.power(10000.0, 2.0 * i / d)
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Attention (GQA)
+# --------------------------------------------------------------------------
+def attn_descs(d: int, n_heads: int, n_kv: int, head_dim: int,
+               qk_norm: bool = False, dtype=jnp.float32) -> dict:
+    descs = {
+        "wq": ParamDesc((d, n_heads, head_dim), ("embed", "heads", None), dtype=dtype),
+        "wk": ParamDesc((d, n_kv, head_dim), ("embed", "kv_heads", None), dtype=dtype),
+        "wv": ParamDesc((d, n_kv, head_dim), ("embed", "kv_heads", None), dtype=dtype),
+        "wo": ParamDesc((n_heads, head_dim, d), ("heads", None, "embed"), dtype=dtype),
+    }
+    if qk_norm:
+        descs["q_norm"] = rmsnorm_desc(head_dim)
+        descs["k_norm"] = rmsnorm_desc(head_dim)
+    return descs
+
+
+def _project_qkv(p: dict, x: jax.Array, positions, theta: float):
+    q = jnp.einsum("bsd,dhk->bshk", x, W(p["wq"]).astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, W(p["wk"]).astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, W(p["wv"]).astype(x.dtype))
+    if "q_norm" in p:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if positions is not None:
+        q = rope(q, positions, theta)
+        k = rope(k, positions, theta)
+    q = constrain(q, ("batch", "seq_act", "heads", None))
+    k = constrain(k, ("batch", None, "kv_heads", None))
+    v = constrain(v, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+def _gqa_scores_apply(q, k, v, mask):
+    """q (B,S,H,hd), k/v (B,T,Kv,hd), mask (B,1,1,S,T) or broadcastable."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k) / np.sqrt(hd)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    probs = constrain(probs, ("batch", "kv_heads", None, None, None))
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(b, s, h, hd)
+
+
+def causal_mask(s: int, t: int, offset: int = 0, window: int | None = None):
+    """(s, t) boolean mask; query i (global pos offset+i) sees key j iff
+    j <= offset+i and (no window or offset+i - j < window)."""
+    qi = offset + jnp.arange(s)[:, None]
+    kj = jnp.arange(t)[None, :]
+    m = kj <= qi
+    if window is not None:
+        m = m & (qi - kj < window)
+    return m
+
+
+def attention(
+    p: dict,
+    x: jax.Array,
+    *,
+    positions: jax.Array | None = None,
+    theta: float = 10000.0,
+    window: int | None = None,
+    q_chunk: int = 2048,
+    causal: bool = True,
+) -> jax.Array:
+    """Full-sequence (training / prefill) GQA attention.
+
+    Long sequences are processed in q-chunks (scan) so the score matrix never
+    exceeds (chunk x T) — with a sliding window the kv view per chunk is also
+    sliced to (window + chunk), making SWA genuinely sub-quadratic.
+    """
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, x, positions, theta)
+
+    if s <= q_chunk:
+        mask = causal_mask(s, s, window=window) if causal else jnp.ones((s, s), bool)
+        out = _gqa_scores_apply(q, k, v, mask[None, None, None])
+    elif window is not None and window + q_chunk < s:
+        # Sliding-window: pad k/v by `window` on the left, slice a
+        # (window + chunk) kv view per q-chunk.
+        pad = ((0, 0), (window, 0), (0, 0), (0, 0))
+        kp, vp = jnp.pad(k, pad), jnp.pad(v, pad)
+        n_chunks = s // q_chunk
+        qc = q.reshape(b, n_chunks, q_chunk, *q.shape[2:])
+
+        def body(_, i):
+            qi = qc[:, i]
+            start = i * q_chunk  # global index of first query in the chunk
+            kv_len = window + q_chunk
+            ks = jax.lax.dynamic_slice_in_dim(kp, start, kv_len, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(vp, start, kv_len, axis=1)
+            # key j in the slice has global position start - window + j
+            qpos = start + jnp.arange(q_chunk)[:, None]
+            kpos = start - window + jnp.arange(kv_len)[None, :]
+            m = (kpos <= qpos) & (qpos - kpos < window) & (kpos >= 0)
+            return None, _gqa_scores_apply(qi, ks, vs, m[None, None, None])
+
+        _, outs = xscan(body, None, jnp.arange(n_chunks))
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, s, *q.shape[2:])
+    else:
+        n_chunks = s // q_chunk
+        qc = q.reshape(b, n_chunks, q_chunk, *q.shape[2:])
+
+        def body(_, i):
+            qi = qc[:, i]
+            m = causal_mask(q_chunk, s, offset=i * q_chunk, window=window)
+            return None, _gqa_scores_apply(qi, k, v, m[None, None, None])
+
+        _, outs = xscan(body, None, jnp.arange(n_chunks))
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, s, *q.shape[2:])
+
+    return jnp.einsum("bshk,hkd->bsd", out, W(p["wo"]).astype(x.dtype))
+
+
+class KVCache(NamedTuple):
+    """Decode-time cache.  For SWA the buffers are ring buffers of length
+    window; otherwise they are full-length."""
+
+    k: jax.Array  # (B, T, Kv, hd)
+    v: jax.Array
+    pos: jax.Array  # () int32 — number of tokens already in the cache
+
+
+def kv_cache_descs(b: int, t: int, n_kv: int, head_dim: int, dtype) -> KVCache:
+    return KVCache(
+        k=ParamDesc((b, t, n_kv, head_dim), ("batch", "seq_kv", "kv_heads", None), dtype=dtype, init="zeros"),
+        v=ParamDesc((b, t, n_kv, head_dim), ("batch", "seq_kv", "kv_heads", None), dtype=dtype, init="zeros"),
+        pos=ParamDesc((), (), dtype=jnp.int32, init="zeros"),
+    )
+
+
+def decode_attention(
+    p: dict,
+    x: jax.Array,
+    cache: KVCache,
+    *,
+    theta: float = 10000.0,
+    window: int | None = None,
+    use_rope: bool = True,
+) -> tuple[jax.Array, KVCache]:
+    """One-token decode: x (B, 1, d); cache holds T past positions."""
+    b = x.shape[0]
+    t = cache.k.shape[1]
+    positions = (
+        jnp.full((b, 1), cache.pos, dtype=jnp.int32) if use_rope else None
+    )
+    q, k_new, v_new = _project_qkv(p, x, positions, theta)
+
+    slot = cache.pos % t if window is not None else cache.pos
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), slot, axis=1)
+
+    idx = jnp.arange(t)
+    if window is not None:
+        # ring buffer: valid entries are the last min(pos+1, window) writes
+        age = (slot - idx) % t
+        valid = age < jnp.minimum(cache.pos + 1, t)
+    else:
+        valid = idx <= cache.pos
+    mask = valid[None, None, None, None, :]  # (1,1,1,1,T)
+
+    out = _gqa_scores_apply(q, k.astype(q.dtype), v.astype(q.dtype), mask)
+    y = jnp.einsum("bshk,hkd->bsd", out, W(p["wo"]).astype(x.dtype))
+    return y, KVCache(k=k, v=v, pos=cache.pos + 1)
+
+
+def cross_attention(p: dict, x: jax.Array, kv: tuple[jax.Array, jax.Array]) -> jax.Array:
+    """Cross-attn with precomputed encoder/vision K, V: kv = (k, v) (B,T,Kv,hd)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, W(p["wq"]).astype(x.dtype))
+    if "q_norm" in p:
+        q = rmsnorm(q, p["q_norm"])
+    k, v = kv
+    t = k.shape[1]
+    mask = jnp.ones((1, 1, 1, 1, t), bool)
+    out = _gqa_scores_apply(q, k.astype(q.dtype), v.astype(q.dtype), mask)
+    return jnp.einsum("bshk,hkd->bsd", out, W(p["wo"]).astype(x.dtype))
+
+
+def cross_kv(p: dict, enc: jax.Array) -> tuple[jax.Array, jax.Array]:
+    k = jnp.einsum("btd,dhk->bthk", enc, W(p["wk"]).astype(enc.dtype))
+    v = jnp.einsum("btd,dhk->bthk", enc, W(p["wv"]).astype(enc.dtype))
+    if "k_norm" in p:
+        k = rmsnorm(k, p["k_norm"])
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# MLP (SwiGLU)
+# --------------------------------------------------------------------------
+def mlp_descs(d: int, ff: int, dtype=jnp.float32) -> dict:
+    return {
+        "wg": dense(d, ff, "embed", "mlp", dtype=dtype),
+        "wu": dense(d, ff, "embed", "mlp", dtype=dtype),
+        "wd": dense(ff, d, "mlp", "embed", dtype=dtype),
+    }
+
+
+def mlp(p: dict, x: jax.Array) -> jax.Array:
+    g = jax.nn.silu(x @ W(p["wg"]).astype(x.dtype))
+    u = x @ W(p["wu"]).astype(x.dtype)
+    g = constrain(g, ("batch", "seq_act", "mlp"))
+    return constrain((g * u) @ W(p["wd"]).astype(x.dtype), ("batch", "seq_act", None))
+
+
+# --------------------------------------------------------------------------
+# MoE with capacity routing (scatter/gather — compute-faithful FLOPs)
+# --------------------------------------------------------------------------
+def moe_descs(d: int, ff: int, n_experts: int, dtype=jnp.float32) -> dict:
+    return {
+        "router": dense(d, n_experts, "embed", None, dtype=jnp.float32, init="small"),
+        "wg": ParamDesc((n_experts, d, ff), ("experts", "embed", "mlp"), dtype=dtype),
+        "wu": ParamDesc((n_experts, d, ff), ("experts", "embed", "mlp"), dtype=dtype),
+        "wd": ParamDesc((n_experts, ff, d), ("experts", "mlp", "embed"), dtype=dtype),
+    }
+
+
+def moe(
+    p: dict,
+    x: jax.Array,
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k token-choice MoE with SHARD-LOCAL capacity routing.
+
+    Returns (y, aux_loss).  Tokens are grouped by data-parallel shard
+    (leading axis sharded over the dp mesh axes); the position-in-expert
+    cumsum and the capacity-buffer scatter/gather then never cross a dp
+    boundary — only the expert FFN einsum communicates (over the expert/
+    model axis), which is the real MoE all-to-all.  With no mesh installed
+    (CPU tests) shards == 1 and this is plain global capacity routing.
+
+    Dispatch is scatter/gather (not one-hot einsum) so HLO FLOPs match the
+    true expert compute: per shard, E buffers of C = ceil(T_local * k * cf
+    / E) tokens, batched-matmul'd through their expert FFN.  Overflowing
+    tokens are dropped (capacity routing); dropped slots contribute zero.
+    """
+    from repro.models.base import data_shard_count
+
+    b, s, d = x.shape
+    e = p["router"].shape[-1]
+    t = b * s
+    shards = data_shard_count()
+    if shards <= 1 or t % shards or (t // shards) < max(top_k, 4):
+        shards = 1
+    tl = t // shards
+    xt = constrain(x.reshape(shards, tl, d), ("batch", None, None))
+
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (S, TL, E)
+    topw, topi = jax.lax.top_k(probs, top_k)  # (S, TL, k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+
+    # load-balancing aux loss (Switch-style), over all tokens; top-1 counts
+    # via per-shard bincount — no (tokens, E) one-hot materializes
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(
+        jax.vmap(lambda t: jnp.bincount(t, length=e))(topi[..., 0]).astype(jnp.float32)
+        / tl,
+        axis=0,
+    )
+    aux = e * jnp.sum(me * ce)
+
+    cap = int(np.ceil(tl * top_k * capacity_factor / e))
+
+    flat_e = topi.reshape(shards, tl * top_k)  # expert id per assignment
+    flat_w = topw.reshape(shards, tl * top_k)
+    tok_of = jnp.repeat(jnp.arange(tl), top_k)  # (TL*k,) same for each shard
+
+    # position of each assignment within its (shard-local) expert buffer,
+    # via a per-shard stable sort instead of a (tokens, E) cumsum: the sort
+    # runs along the UNSHARDED axis (per dp shard), so no collective, and
+    # the peak intermediate is (S, TL*k) int32 instead of (S, TL*k, E).
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    rank = jnp.argsort(order, axis=1)  # rank of each assignment in expert-major order
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    starts = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(e), side="left")
+    )(sorted_e)  # (S, E) — first sorted index of each expert
+    pos = rank - jnp.take_along_axis(starts, flat_e, axis=1)
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, cap)  # dropped -> trash slot
+
+    xg = xt[:, tok_of, :]  # (S, TL*k, d)
+    # Two-stage dispatch: a vmapped (per-shard, batched) scatter into a
+    # buffer whose expert dim is NOT yet sharded — fully shard-local, zero
+    # collectives — then reshard the filled buffer onto the expert/model
+    # axis.  XLA lowers the resharding as the intrinsic MoE all-to-all.
+    # (Constraining the expert dim before the scatter makes SPMD fall back
+    # to partial-scatter + full-buffer all-reduce; an unbatched 3-index
+    # scatter makes it all-gather the 68 GB update tensor — both measured
+    # on qwen3-moe, see EXPERIMENTS.md §Perf.)
+    buf = jnp.zeros((shards, e, cap + 1, d), xt.dtype)
+    buf = constrain(buf, ("batch", None, None, None))
+    buf = jax.vmap(lambda b0, ei, pi, xi: b0.at[ei, pi].add(xi))(
+        buf, flat_e, pos_c, xg
+    )
+    buf = constrain(buf[:, :, :cap], ("batch", "experts", None, None))
+
+    # expert FFN (batched over shards x experts)
+    g = jax.nn.silu(jnp.einsum("secd,edf->secf", buf, W(p["wg"]).astype(buf.dtype)))
+    u = jnp.einsum("secd,edf->secf", buf, W(p["wu"]).astype(buf.dtype))
+    g = constrain(g, ("batch", "experts", None, "mlp"))
+    yb = jnp.einsum("secf,efd->secd", g * u, W(p["wd"]).astype(buf.dtype))
+    yb = constrain(yb, ("batch", "experts", None, None))
+
+    # gather back: reshard the expert outputs off the model axis first so
+    # the (vmapped, per-shard) index-gather is shard-local.
+    yb = constrain(yb, ("batch", None, None, None))
+    ya = jax.vmap(lambda yi, ei, pi: yi[ei, pi])(
+        yb, flat_e, jnp.minimum(pos_c, cap - 1)
+    )  # (S, TL*k, d)
+    ya = ya * (flat_w * keep.astype(flat_w.dtype))[..., None].astype(ya.dtype)
+    y = jnp.zeros((shards, tl, d), xt.dtype)
+    y = jax.vmap(lambda y0, yi: y0.at[tok_of].add(yi))(y, ya)
+    y = constrain(y, ("batch", None, None))
+    return y.reshape(b, s, d), aux
+
+
+# --------------------------------------------------------------------------
+# Embeddings / head
+# --------------------------------------------------------------------------
+def embed_descs(vocab: int, d: int, dtype=jnp.float32) -> dict:
+    return {
+        "tok": ParamDesc((vocab, d), ("vocab", "embed"), dtype=dtype, init="normal"),
+        "head": dense(d, vocab, "embed", "vocab", dtype=dtype, init="normal", scale=0.5),
+    }
+
+
+def embed(p: dict, tokens: jax.Array, dtype) -> jax.Array:
+    x = jnp.take(p["tok"], tokens, axis=0).astype(dtype)
+    return constrain(x, ("batch", "seq_act", None))
+
+
+def lm_head(p: dict, x: jax.Array) -> jax.Array:
+    logits = (x @ W(p["head"]).astype(x.dtype)).astype(jnp.float32)
+    return constrain(logits, ("batch", "seq_act", "vocab"))
+
+
+def next_token_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Masked CE that keeps the vocab dim sharded.
+
+    logsumexp reduces over the (model-sharded) vocab axis with an implicit
+    all-reduce; the label pick is a one-hot einsum (SPMD-friendly — no
+    all-gather of the logits, unlike take_along_axis which XLA materializes
+    replicated).  labels < 0 are masked out.
+    """
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)  # (B, S)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    picked = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    ll = picked - lse
+    mask = (labels >= 0).astype(jnp.float32)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,76 @@
+"""Pure Mamba2 LM (attention-free): embed -> N x (norm + SSD mixer) -> head."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.base import map_stacked, xscan
+
+
+def _ssm_cfg(cfg: ArchConfig) -> S.SSMConfig:
+    d_inner = 2 * cfg.d_model
+    return S.SSMConfig(
+        d_model=cfg.d_model,
+        d_inner=d_inner,
+        n_heads=d_inner // cfg.ssm_head_dim,
+        head_dim=cfg.ssm_head_dim,
+        state=cfg.ssm_state,
+        n_groups=cfg.ssm_groups,
+        chunk=cfg.ssm_chunk,
+    )
+
+
+def mamba_descs(cfg: ArchConfig) -> dict:
+    sc = _ssm_cfg(cfg)
+    block = {"ln": L.rmsnorm_desc(cfg.d_model), "mixer": S.ssm_descs(sc, dtype=cfg.dtype)}
+    return {
+        "embed": L.embed_descs(cfg.vocab, cfg.d_model, dtype=cfg.dtype),
+        "final_norm": L.rmsnorm_desc(cfg.d_model),
+        "blocks": map_stacked(cfg.n_layers, block),
+    }
+
+
+def mamba_forward(params: dict, cfg: ArchConfig, tokens: jax.Array):
+    sc = _ssm_cfg(cfg)
+    x = L.embed(params["embed"], tokens, cfg.dtype)
+
+    def body(x, bp):
+        return x + S.ssm_forward(bp["mixer"], L.rmsnorm(x, bp["ln"]), sc), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = xscan(body_fn, x, params["blocks"])
+    x = L.rmsnorm(x, params["final_norm"])
+    return L.lm_head(params["embed"], x), jnp.float32(0.0)
+
+
+def mamba_loss(params: dict, cfg: ArchConfig, batch: dict) -> jax.Array:
+    logits, _ = mamba_forward(params, cfg, batch["tokens"])
+    return L.next_token_loss(logits, batch["labels"])
+
+
+class MambaCache(NamedTuple):
+    ssm: Any  # SSMState stacked (L, ...)
+
+
+def mamba_cache_descs(cfg: ArchConfig, batch: int, cache_len: int) -> MambaCache:
+    sc = _ssm_cfg(cfg)
+    return MambaCache(ssm=map_stacked(cfg.n_layers, S.ssm_state_descs(sc, batch, cfg.dtype)))
+
+
+def mamba_decode(params: dict, cfg: ArchConfig, cache: MambaCache, tokens: jax.Array):
+    sc = _ssm_cfg(cfg)
+    x = L.embed(params["embed"], tokens, cfg.dtype)
+
+    def body(x, inp):
+        bp, st = inp
+        h, st2 = S.ssm_decode(bp["mixer"], L.rmsnorm(x, bp["ln"]), st, sc)
+        return x + h, st2
+
+    x, new_ssm = xscan(body, x, (params["blocks"], cache.ssm))
+    x = L.rmsnorm(x, params["final_norm"])
+    return L.lm_head(params["embed"], x), MambaCache(ssm=new_ssm)

@@ -1,0 +1,245 @@
+"""Mamba2 (SSD — state-space duality) mixer, arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm (quadratic within chunks of
+length L, linear across chunks via a state-passing scan) — the real
+algorithm, so HLO FLOPs are faithful.  Decode keeps a constant-size state
+(B, H, N, P) + a causal-conv ring buffer, which is what makes the
+``long_500k`` shape tractable for SSM/hybrid archs.
+
+Head layout: d_inner = n_heads * head_dim (P); one shared B/C per group
+(n_groups=1 for mamba2-1.3b; jamba uses 8).  Heads shard over the mesh
+"model" axis; B/C/state stay replicated (they are shared across heads).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.base import ParamDesc, constrain, dense, xscan
+from repro.models.layers import W as L_W, rmsnorm, rmsnorm_desc
+
+
+class SSMConfig(NamedTuple):
+    d_model: int
+    d_inner: int
+    n_heads: int
+    head_dim: int
+    state: int  # N
+    n_groups: int = 1
+    conv_width: int = 4
+    chunk: int = 256
+
+
+def ssm_descs(c: SSMConfig, dtype=jnp.float32) -> dict:
+    gn = c.n_groups * c.state
+    return {
+        "wz": dense(c.d_model, c.d_inner, "embed", "heads_inner", dtype=dtype),
+        "wx": dense(c.d_model, c.d_inner, "embed", "heads_inner", dtype=dtype),
+        "wB": dense(c.d_model, gn, "embed", None, dtype=dtype),
+        "wC": dense(c.d_model, gn, "embed", None, dtype=dtype),
+        "wdt": dense(c.d_model, c.n_heads, "embed", None, dtype=dtype),
+        "conv_x": ParamDesc((c.conv_width, c.d_inner), (None, "heads_inner"), dtype=dtype, init="normal"),
+        "conv_B": ParamDesc((c.conv_width, gn), (None, None), dtype=dtype, init="normal"),
+        "conv_C": ParamDesc((c.conv_width, gn), (None, None), dtype=dtype, init="normal"),
+        "a_log": ParamDesc((c.n_heads,), (None,), init="zeros"),
+        "D": ParamDesc((c.n_heads,), (None,), init="ones"),
+        "dt_bias": ParamDesc((c.n_heads,), (None,), init="zeros"),
+        "norm": rmsnorm_desc(c.d_inner),
+        "wo": dense(c.d_inner, c.d_model, "heads_inner", "embed", dtype=dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv: x (B,S,D), w (W,D) -> (B,S,D)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    return jax.nn.silu(out)
+
+
+def _segsum(dlog: jax.Array) -> jax.Array:
+    """dlog (..., L, H) -> (..., H, L, L) with [i, j] = sum_{k=j+1..i} dlog_k
+    for i >= j, -inf otherwise (log of the intra-chunk decay matrix)."""
+    length = dlog.shape[-2]
+    x = jnp.moveaxis(dlog, -1, -2)  # (..., H, L)
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # [i, j] = cs_i - cs_j
+    i = jnp.arange(length)[:, None]
+    j = jnp.arange(length)[None, :]
+    return jnp.where(i >= j, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) — post-softplus
+    a: jax.Array,  # (H,) — negative decay rate (-exp(a_log))
+    bmat: jax.Array,  # (B, S, G, N)
+    cmat: jax.Array,  # (B, S, G, N)
+    chunk: int,
+    h0: jax.Array | None = None,  # (B, H, N, P)
+):
+    """Chunked SSD scan.  Returns (y (B,S,H,P), h_final (B,H,N,P))."""
+    b, s_orig, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    hpg = h // g  # heads per group
+    if s_orig % chunk:
+        # pad to a whole number of chunks; padded steps have x=0 and dt=0
+        # (decay exp(0)=1), so they neither emit nor perturb the state
+        pad = chunk - s_orig % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s = x.shape[1]
+    nc = s // chunk
+    f32 = jnp.float32
+
+    xc = x.reshape(b, nc, chunk, h, p).astype(f32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(f32)
+    bc = bmat.reshape(b, nc, chunk, g, n).astype(f32)
+    cc = cmat.reshape(b, nc, chunk, g, n).astype(f32)
+
+    dlog = dtc * a.astype(f32)  # (b, nc, L, H), negative
+    seg = _segsum(dlog)  # (b, nc, H, L, L)
+    lmat = jnp.exp(seg)
+
+    # intra-chunk (quadratic, "attention-like" dual form)
+    # scores[b,c,g,i,j] = C_i . B_j  -> broadcast over heads in group
+    cb = jnp.einsum("bclgn,bcmgn->bcglm", cc, bc)  # (b,nc,g,L,L)
+    cb = cb.reshape(b, nc, g, 1, chunk, chunk)
+    lm = lmat.reshape(b, nc, g, hpg, chunk, chunk)
+    dtj = jnp.moveaxis(dtc.reshape(b, nc, chunk, g, hpg), 2, 4)  # (b,nc,g,hpg,L)
+    att = cb * lm * dtj[:, :, :, :, None, :]
+    y_intra = jnp.einsum(
+        "bcghlm,bcmghp->bclghp",
+        att,
+        xc.reshape(b, nc, chunk, g, hpg, p),
+    )  # (b, nc, L, g, hpg, p)
+
+    # end-of-chunk states: S_c = sum_j exp(cs_L - cs_j) dt_j B_j (x) x_j
+    csum = jnp.cumsum(dlog, axis=2)  # (b, nc, L, H)
+    decay_to_end = jnp.exp(csum[:, :, -1:, :] - csum)  # (b, nc, L, H)
+    wdt = decay_to_end * dtc  # (b, nc, L, H)
+    s_c = jnp.einsum(
+        "bclgn,bclgh,bclghp->bcghnp",
+        bc,
+        wdt.reshape(b, nc, chunk, g, hpg),
+        xc.reshape(b, nc, chunk, g, hpg, p),
+    )  # (b, nc, g, hpg, n, p)
+
+    # inter-chunk recurrence over nc (linear scan)
+    total_decay = jnp.exp(csum[:, :, -1, :]).reshape(b, nc, g, hpg)  # per chunk
+
+    hinit = (
+        jnp.zeros((b, g, hpg, n, p), f32)
+        if h0 is None
+        else h0.reshape(b, g, hpg, n, p).astype(f32)
+    )
+
+    def step(hprev, inp):
+        sc, td = inp  # (b,g,hpg,n,p), (b,g,hpg)
+        hnew = td[..., None, None] * hprev + sc
+        return hnew, hprev
+
+    scs = jnp.moveaxis(s_c, 1, 0)  # (nc, b, g, hpg, n, p)
+    tds = jnp.moveaxis(total_decay, 1, 0)
+    h_last, h_prevs = xscan(step, hinit, (scs, tds))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (b, nc, g, hpg, n, p)
+
+    # inter-chunk contribution: y_i += C_i . (decay_to_i * h_prev)
+    decay_in = jnp.exp(csum)  # (b, nc, L, H) — decay from chunk start to i
+    y_inter = jnp.einsum(
+        "bclgn,bcghnp,bclgh->bclghp",
+        cc,
+        h_prevs,
+        decay_in.reshape(b, nc, chunk, g, hpg),
+    )
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)[:, :s_orig]
+    return y, h_last.reshape(b, h, n, p)
+
+
+class SSMState(NamedTuple):
+    h: jax.Array  # (B, H, N, P) f32
+    conv_x: jax.Array  # (B, W-1, d_inner)
+    conv_B: jax.Array  # (B, W-1, G*N)
+    conv_C: jax.Array  # (B, W-1, G*N)
+
+
+def ssm_state_descs(c: SSMConfig, batch: int, dtype=jnp.float32) -> SSMState:
+    gn = c.n_groups * c.state
+    w = c.conv_width - 1
+    return SSMState(
+        h=ParamDesc((batch, c.n_heads, c.state, c.head_dim), ("batch", "heads_inner", None, None), dtype=jnp.float32, init="zeros"),
+        conv_x=ParamDesc((batch, w, c.d_inner), ("batch", None, "heads_inner"), dtype=dtype, init="zeros"),
+        conv_B=ParamDesc((batch, w, gn), ("batch", None, None), dtype=dtype, init="zeros"),
+        conv_C=ParamDesc((batch, w, gn), ("batch", None, None), dtype=dtype, init="zeros"),
+    )
+
+
+def ssm_forward(p: dict, x: jax.Array, c: SSMConfig) -> jax.Array:
+    """Full-sequence mixer forward: x (B, S, d_model) -> (B, S, d_model)."""
+    b, s, _ = x.shape
+    z = constrain(x @ L_W(p["wz"]).astype(x.dtype), ("batch", None, "heads_inner"))
+    xs = _causal_conv(x @ L_W(p["wx"]).astype(x.dtype), L_W(p["conv_x"]).astype(x.dtype))
+    xs = constrain(xs, ("batch", None, "heads_inner"))
+    bs = _causal_conv(x @ L_W(p["wB"]).astype(x.dtype), L_W(p["conv_B"]).astype(x.dtype))
+    cs = _causal_conv(x @ L_W(p["wC"]).astype(x.dtype), L_W(p["conv_C"]).astype(x.dtype))
+    dt = jax.nn.softplus(
+        (x @ L_W(p["wdt"]).astype(x.dtype)).astype(jnp.float32) + p["dt_bias"]
+    )
+    a = -jnp.exp(p["a_log"])
+
+    xh = xs.reshape(b, s, c.n_heads, c.head_dim)
+    bm = bs.reshape(b, s, c.n_groups, c.state)
+    cm = cs.reshape(b, s, c.n_groups, c.state)
+    y, _ = ssd_chunked(xh, dt, a, bm, cm, c.chunk)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, c.d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    return constrain(y @ L_W(p["wo"]).astype(x.dtype), ("batch", None, None))
+
+
+def ssm_decode(
+    p: dict, x: jax.Array, state: SSMState, c: SSMConfig
+) -> tuple[jax.Array, SSMState]:
+    """Single-token decode: x (B, 1, d_model)."""
+    b = x.shape[0]
+    xt = x[:, 0]  # (B, d)
+    z = xt @ L_W(p["wz"]).astype(x.dtype)
+
+    def conv_step(buf, xin, w):
+        # buf (B, W-1, D) holds the previous W-1 inputs
+        full = jnp.concatenate([buf, xin[:, None]], axis=1)  # (B, W, D)
+        out = jnp.einsum("bwd,wd->bd", full.astype(jnp.float32), w.astype(jnp.float32))
+        return jax.nn.silu(out).astype(x.dtype), full[:, 1:]
+
+    xs, nconv_x = conv_step(state.conv_x, xt @ L_W(p["wx"]).astype(x.dtype), p["conv_x"])
+    bs, nconv_B = conv_step(state.conv_B, xt @ L_W(p["wB"]).astype(x.dtype), p["conv_B"])
+    cs, nconv_C = conv_step(state.conv_C, xt @ L_W(p["wC"]).astype(x.dtype), p["conv_C"])
+
+    dt = jax.nn.softplus(
+        (xt @ L_W(p["wdt"]).astype(x.dtype)).astype(jnp.float32) + p["dt_bias"]
+    )  # (B, H)
+    a = -jnp.exp(p["a_log"])  # (H,)
+    decay = jnp.exp(dt * a)  # (B, H)
+
+    xh = xs.reshape(b, c.n_heads, c.head_dim).astype(jnp.float32)
+    bm = bs.reshape(b, c.n_groups, c.state).astype(jnp.float32)
+    cm = cs.reshape(b, c.n_groups, c.state).astype(jnp.float32)
+    hpg = c.n_heads // c.n_groups
+
+    bmh = jnp.repeat(bm, hpg, axis=1)  # (B, H, N)
+    cmh = jnp.repeat(cm, hpg, axis=1)
+    hnew = decay[..., None, None] * state.h + (dt[..., None] * bmh)[..., None] * xh[:, :, None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", cmh, hnew) + p["D"][None, :, None] * xh
+
+    y = y.reshape(b, c.d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = (y @ L_W(p["wo"]).astype(x.dtype))[:, None, :]
+    return out, SSMState(h=hnew, conv_x=nconv_x, conv_B=nconv_B, conv_C=nconv_C)

@@ -1,0 +1,218 @@
+"""Decoder-only LM family: dense (deepseek/smollm/phi4/qwen3), MoE
+(mixtral/qwen3-moe) and VLM (llama-3.2-vision, gated cross-attn blocks).
+
+Layers are scan-stacked (params carry a leading L axis) so the HLO stays
+small at 40-72 layers, and each block body is optionally rematerialized.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.base import ParamDesc, constrain, map_stacked, xscan
+
+
+# --------------------------------------------------------------------------
+# Descriptors
+# --------------------------------------------------------------------------
+def _block_descs(cfg: ArchConfig) -> dict:
+    d = {
+        "ln1": L.rmsnorm_desc(cfg.d_model),
+        "attn": L.attn_descs(cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd,
+                             qk_norm=cfg.qk_norm, dtype=cfg.dtype),
+        "ln2": L.rmsnorm_desc(cfg.d_model),
+    }
+    if cfg.moe is not None:
+        d["moe"] = L.moe_descs(cfg.d_model, cfg.d_ff, cfg.moe.n_experts, dtype=cfg.dtype)
+    else:
+        d["mlp"] = L.mlp_descs(cfg.d_model, cfg.d_ff, dtype=cfg.dtype)
+    return d
+
+
+def _cross_block_descs(cfg: ArchConfig) -> dict:
+    return {
+        "ln": L.rmsnorm_desc(cfg.d_model),
+        "attn": L.attn_descs(cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd,
+                             qk_norm=cfg.qk_norm, dtype=cfg.dtype),
+        "gate": ParamDesc((1,), (None,), init="zeros"),
+        "ln_mlp": L.rmsnorm_desc(cfg.d_model),
+        "mlp": L.mlp_descs(cfg.d_model, cfg.d_ff, dtype=cfg.dtype),
+        "gate_mlp": ParamDesc((1,), (None,), init="zeros"),
+    }
+
+
+def lm_descs(cfg: ArchConfig) -> dict:
+    descs = {
+        "embed": L.embed_descs(cfg.vocab, cfg.d_model, dtype=cfg.dtype),
+        "final_norm": L.rmsnorm_desc(cfg.d_model),
+        "blocks": map_stacked(cfg.n_layers, _block_descs(cfg)),
+    }
+    if cfg.cross_every:
+        n_cross = cfg.n_layers // cfg.cross_every
+        descs["cross_blocks"] = map_stacked(n_cross, _cross_block_descs(cfg))
+    return descs
+
+
+# --------------------------------------------------------------------------
+# Forward (train / prefill)
+# --------------------------------------------------------------------------
+def _block_fwd(cfg: ArchConfig, p: dict, x: jax.Array, positions: jax.Array):
+    h = L.attention(
+        p["attn"], L.rmsnorm(x, p["ln1"]),
+        positions=positions, theta=cfg.rope_theta, window=cfg.window,
+    )
+    x = constrain(x + h, ("batch", "seq_act", None))
+    y = L.rmsnorm(x, p["ln2"])
+    if cfg.moe is not None:
+        f, aux = L.moe(p["moe"], y, top_k=cfg.moe.top_k,
+                       capacity_factor=cfg.moe.capacity_factor)
+    else:
+        f, aux = L.mlp(p["mlp"], y), jnp.float32(0.0)
+    return x + f, aux
+
+
+def _cross_block_fwd(p: dict, x: jax.Array, kv):
+    h = L.cross_attention(p["attn"], L.rmsnorm(x, p["ln"]), kv)
+    x = x + jnp.tanh(p["gate"]).astype(x.dtype) * h
+    f = L.mlp(p["mlp"], L.rmsnorm(x, p["ln_mlp"]))
+    return x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * f
+
+
+def lm_forward(
+    params: dict,
+    cfg: ArchConfig,
+    tokens: jax.Array,  # (B, S) int32
+    vision_embeds: jax.Array | None = None,  # (B, T_img, d) for vlm
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (logits (B,S,vocab) f32, moe aux loss)."""
+    b, s = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(carry, bp):
+        x, aux = carry
+        x, a = _block_fwd(cfg, bp, x, positions)
+        return (x, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+
+    if not cfg.cross_every:
+        (x, aux), _ = xscan(body_fn, (x, jnp.float32(0.0)), params["blocks"])
+    else:
+        n_cross = cfg.n_layers // cfg.cross_every
+        grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape(n_cross, cfg.cross_every, *a.shape[1:]),
+            params["blocks"],
+        )
+        # precompute cross K/V once per cross block (they share the encoder)
+        cross_kvs = jax.vmap(lambda cp: L.cross_kv(cp["attn"], vision_embeds))(
+            params["cross_blocks"]
+        )
+
+        def group(carry, inp):
+            x, aux = carry
+            gblocks, cp, ckv = inp
+            (x, aux), _ = xscan(body_fn, (x, aux), gblocks)
+            x = _cross_block_fwd(cp, x, ckv)
+            return (x, aux), None
+
+        (x, aux), _ = xscan(
+            group, (x, jnp.float32(0.0)),
+            (grouped, params["cross_blocks"], cross_kvs),
+        )
+
+    x = L.rmsnorm(x, params["final_norm"])
+    return L.lm_head(params["embed"], x), aux / cfg.n_layers
+
+
+def lm_loss(params: dict, cfg: ArchConfig, batch: dict) -> jax.Array:
+    """Next-token cross-entropy; batch = {tokens, labels[, vision_embeds]}."""
+    logits, aux = lm_forward(
+        params, cfg, batch["tokens"], batch.get("vision_embeds")
+    )
+    return L.next_token_loss(logits, batch["labels"]) + 0.01 * aux
+
+
+# --------------------------------------------------------------------------
+# Decode (one token, KV caches)
+# --------------------------------------------------------------------------
+class LMCache(NamedTuple):
+    kv: Any  # KVCache with leading (L,) stacked axis
+    cross_kv: Any | None = None  # ((G,B,T,kv,hd) k, v) for vlm
+
+
+def lm_cache_descs(cfg: ArchConfig, batch: int, cache_len: int) -> LMCache:
+    t = min(cache_len, cfg.window) if cfg.window else cache_len
+    kv = map_stacked(cfg.n_layers, L.kv_cache_descs(batch, t, cfg.n_kv, cfg.hd, cfg.dtype))
+    cross = None
+    if cfg.cross_every:
+        n_cross = cfg.n_layers // cfg.cross_every
+        ck = ParamDesc((n_cross, batch, cfg.vision_tokens, cfg.n_kv, cfg.hd),
+                       (None, "batch", None, "kv_heads", None), dtype=cfg.dtype, init="zeros")
+        cross = (ck, ck)
+    return LMCache(kv=kv, cross_kv=cross)
+
+
+def lm_decode(
+    params: dict,
+    cfg: ArchConfig,
+    cache: LMCache,
+    tokens: jax.Array,  # (B, 1)
+) -> tuple[jax.Array, LMCache]:
+    x = L.embed(params["embed"], tokens, cfg.dtype)
+
+    def body(x, inp):
+        bp, c = inp
+        h, c2 = L.decode_attention(
+            bp["attn"], L.rmsnorm(x, bp["ln1"]), c,
+            theta=cfg.rope_theta, window=cfg.window,
+        )
+        x = x + h
+        y = L.rmsnorm(x, bp["ln2"])
+        if cfg.moe is not None:
+            f, _ = L.moe(bp["moe"], y, top_k=cfg.moe.top_k,
+                         capacity_factor=cfg.moe.capacity_factor)
+        else:
+            f = L.mlp(bp["mlp"], y)
+        return x + f, c2
+
+    if not cfg.cross_every:
+        x, new_kv = xscan(body, x, (params["blocks"], cache.kv))
+        new_cache = LMCache(kv=new_kv)
+    else:
+        n_cross = cfg.n_layers // cfg.cross_every
+        grouped_b = jax.tree_util.tree_map(
+            lambda a: a.reshape(n_cross, cfg.cross_every, *a.shape[1:]),
+            params["blocks"],
+        )
+        grouped_c = jax.tree_util.tree_map(
+            lambda a: a.reshape(n_cross, cfg.cross_every, *a.shape[1:]), cache.kv
+        )
+
+        def group(x, inp):
+            gb, gc, cp, ckv = inp
+            x, c2 = xscan(body, x, (gb, gc))
+            x = _cross_block_fwd(cp, x, ckv)
+            return x, c2
+
+        x, new_kv_g = xscan(
+            group, x, (grouped_b, grouped_c, params["cross_blocks"], cache.cross_kv)
+        )
+        new_kv = jax.tree_util.tree_map(
+            lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), new_kv_g
+        )
+        new_cache = LMCache(kv=new_kv, cross_kv=cache.cross_kv)
+
+    x = L.rmsnorm(x, params["final_norm"])
+    return L.lm_head(params["embed"], x), new_cache
+
+
+def vision_prefill_cross_kv(params: dict, cfg: ArchConfig, vision_embeds: jax.Array):
+    """Precompute the (G, B, T_img, kv, hd) cross K/V for decode."""
+    return jax.vmap(lambda cp: L.cross_kv(cp["attn"], vision_embeds))(
+        params["cross_blocks"]
+    )

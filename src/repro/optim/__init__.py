@@ -1,0 +1,11 @@
+from repro.optim.adamw import AdamWConfig, OptState, adamw_init_descs, adamw_update
+from repro.optim.schedule import cosine_schedule
+from repro.optim.compression import (
+    GradCompressionConfig, compression_state_descs, compress_grads,
+)
+
+__all__ = [
+    "AdamWConfig", "OptState", "adamw_init_descs", "adamw_update",
+    "cosine_schedule", "GradCompressionConfig", "compression_state_descs",
+    "compress_grads",
+]

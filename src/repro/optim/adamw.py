@@ -1,0 +1,79 @@
+"""AdamW in pure JAX, descriptor-aware so the optimizer state inherits the
+params' sharding (m/v are f32 regardless of param dtype)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ParamDesc, _is_desc
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    step: jax.Array  # () int32
+
+
+def adamw_init_descs(param_descs) -> OptState:
+    """Descriptor tree for the optimizer state (f32 moments, zeros)."""
+
+    def f32_zeros(d: ParamDesc) -> ParamDesc:
+        return ParamDesc(d.shape, d.axes, dtype=jnp.float32, init="zeros")
+
+    m = jax.tree_util.tree_map(f32_zeros, param_descs, is_leaf=_is_desc)
+    v = jax.tree_util.tree_map(f32_zeros, param_descs, is_leaf=_is_desc)
+    return OptState(m=m, v=v, step=ParamDesc((), (), dtype=jnp.int32, init="zeros"))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves)
+    )
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    params,
+    grads,
+    opt: OptState,
+    lr_scale: jax.Array | float = 1.0,
+):
+    """One AdamW step.  Returns (new_params, new_opt, grad_norm)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = opt.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * clip
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g32
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+        mhat = m2 / b1c
+        vhat = v2 / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p2, m2, v2
+
+    out = jax.tree_util.tree_map(upd, params, grads, opt.m, opt.v)
+    outer = jax.tree_util.tree_structure(params)
+    inner = jax.tree_util.tree_structure((0, 0, 0))
+    new_params, new_m, new_v = jax.tree_util.tree_transpose(outer, inner, out)
+    return new_params, OptState(m=new_m, v=new_v, step=step), gnorm

@@ -1,0 +1,87 @@
+"""QSQ gradient compression with error feedback (DESIGN.md §7.1).
+
+The paper encodes the *model* in 3-bit form before it crosses the
+communication channel.  At training scale the analogous channel is the
+cross-pod gradient all-reduce (DCN is ~25x slower than ICI), so we apply the
+same codec to gradients: each 2-D+ grad leaf is QSQ-encoded
+(3 bits + one f32 scalar per group) and decoded on the other side; the
+quantization residual is kept in an error-feedback accumulator and added to
+the next step's gradient, which keeps SGD/Adam convergence (Karimireddy et
+al. 2019 — error feedback fixes sign-style compression).
+
+Under pjit the all-reduce is implicit, so "compress -> transmit ->
+decompress" is expressed as quantize -> dequantize around the optimizer.
+The wire-format byte count (what would actually cross DCN) is returned as a
+metric; on a real multi-pod deployment the encode runs through the
+``qsq_quantize`` Pallas kernel before the hierarchical reduce.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.qsq import QSQConfig, dequantize, quantize
+from repro.models.base import ParamDesc, _is_desc
+
+
+@dataclasses.dataclass(frozen=True)
+class GradCompressionConfig:
+    enabled: bool = False
+    phi: int = 4
+    group_size: int = 64
+    min_numel: int = 4096  # small leaves cross uncompressed
+
+
+def _compressible(shape) -> bool:
+    return len(shape) >= 2
+
+
+def compression_state_descs(param_descs, cc: GradCompressionConfig):
+    """Error-feedback residual buffers (f32) for compressible leaves; a ()
+    placeholder for the rest (keeps the pytree structure aligned)."""
+
+    def leaf(d: ParamDesc) -> ParamDesc:
+        if cc.enabled and _compressible(d.shape) and int(np.prod(d.shape)) >= cc.min_numel:
+            return ParamDesc(d.shape, d.axes, dtype=jnp.float32, init="zeros")
+        return ParamDesc((), (), dtype=jnp.float32, init="zeros")
+
+    return jax.tree_util.tree_map(leaf, param_descs, is_leaf=_is_desc)
+
+
+def _leaf_group(shape, group_size: int) -> int:
+    g = group_size
+    while shape[0] % g != 0 and g > 1:
+        g //= 2
+    return max(g, 1)
+
+
+def compress_grads(grads, err_state, cc: GradCompressionConfig):
+    """(grads, err) -> (decoded grads as transmitted, new err, wire_bytes)."""
+    if not cc.enabled:
+        return grads, err_state, jnp.float32(0.0)
+
+    wire_bits = [jnp.float32(0.0)]
+
+    def leaf(g, e):
+        if e.ndim == 0:  # not compressed
+            return g, e
+        g32 = g.astype(jnp.float32) + e
+        # flatten trailing dims so grouping runs along the leading axis
+        flat = g32.reshape(g32.shape[0], -1)
+        gs = _leaf_group(flat.shape, cc.group_size)
+        q = quantize(flat, QSQConfig(phi=cc.phi, group_size=gs, assign="nearest"))
+        dec = dequantize(q).reshape(g32.shape)
+        wire_bits[0] = wire_bits[0] + (
+            3.0 * flat.size + 32.0 * q.scales.size
+        )
+        return dec.astype(g.dtype), g32 - dec
+
+    out = jax.tree_util.tree_map(leaf, grads, err_state)
+    outer = jax.tree_util.tree_structure(grads)
+    inner = jax.tree_util.tree_structure((0, 0))
+    dec_grads, new_err = jax.tree_util.tree_transpose(outer, inner, out)
+    return dec_grads, new_err, wire_bits[0] / 8.0  # bytes

@@ -1,0 +1,14 @@
+"""LR schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, warmup: int = 100, total: int = 10000, floor: float = 0.1):
+    """Linear warmup then cosine decay to ``floor`` of peak.  Returns a scale
+    in [0, 1] to multiply the configured peak LR."""
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(warmup, 1)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup, warm, cos)

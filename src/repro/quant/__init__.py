@@ -1,0 +1,18 @@
+"""Applying QSQ to whole model pytrees (quantize / dequantize / packed store)."""
+from repro.quant.pytree import (
+    QuantizedParams,
+    quantize_pytree,
+    dequantize_pytree,
+    pytree_bits_report,
+    pack_pytree_wire,
+    unpack_pytree_wire,
+)
+
+__all__ = [
+    "QuantizedParams",
+    "quantize_pytree",
+    "dequantize_pytree",
+    "pytree_bits_report",
+    "pack_pytree_wire",
+    "unpack_pytree_wire",
+]

@@ -1,0 +1,2 @@
+from repro.train.state import TrainState, train_state_descs
+from repro.train.step import make_train_step, make_prefill_step, make_serve_step

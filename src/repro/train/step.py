@@ -1,0 +1,64 @@
+"""train_step / serve_step builders — the functions pjit lowers at scale."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.optim import (
+    AdamWConfig, GradCompressionConfig, adamw_update, compress_grads,
+    cosine_schedule,
+)
+from repro.train.state import TrainState
+
+
+def make_train_step(
+    model: Model,
+    opt_cfg: AdamWConfig | None = None,
+    cc: GradCompressionConfig | None = None,
+    total_steps: int = 100000,
+) -> Callable:
+    """(TrainState, batch) -> (TrainState, metrics)."""
+    opt_cfg = opt_cfg or AdamWConfig()
+    cc = cc or GradCompressionConfig()
+
+    def train_step(state: TrainState, batch: dict):
+        loss, grads = jax.value_and_grad(model.loss)(state.params, batch)
+        grads, new_err, wire_bytes = compress_grads(grads, state.err, cc)
+        lr_scale = cosine_schedule(
+            state.opt.step, warmup=max(total_steps // 20, 1), total=total_steps
+        )
+        new_params, new_opt, gnorm = adamw_update(
+            opt_cfg, state.params, grads, state.opt, lr_scale
+        )
+        metrics = {
+            "loss": loss,
+            "grad_norm": gnorm,
+            "lr_scale": lr_scale,
+            "grad_wire_bytes": wire_bytes,
+        }
+        return TrainState(params=new_params, opt=new_opt, err=new_err), metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model) -> Callable:
+    """(params, batch) -> logits — inference prefill."""
+
+    def prefill_step(params, batch):
+        return model.forward(params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(model: Model) -> Callable:
+    """(params, cache, batch) -> (next_tokens, cache) — one decode step."""
+
+    def serve_step(params, cache, batch):
+        logits, cache = model.decode(params, cache, batch)
+        next_tokens = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tokens[:, None], cache
+
+    return serve_step

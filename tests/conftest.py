@@ -1,0 +1,13 @@
+"""Shared test fixtures.
+
+NOTE: do NOT set XLA_FLAGS / device-count overrides here — smoke tests and
+benches must see the real single CPU device.  Only launch/dryrun.py (its own
+process) forces 512 placeholder devices.
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

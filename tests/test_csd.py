@@ -1,0 +1,61 @@
+"""CSD rounding / digit-count tests (the Quality Scalable Multiplier numerics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import csd
+
+
+def test_known_digit_counts():
+    # 0.75 = 1 - 0.25 (2 digits); 0.5 = 1 digit; 1.25 = 1 + 0.25 (2);
+    # -0.375 = -0.5 + 0.125 (2); 100 = 128 - 32 + 4 (3)
+    x = jnp.array([0.75, 0.5, 1.25, -0.375, 100.0])
+    np.testing.assert_array_equal(np.asarray(csd.csd_digit_count(x)), [2, 1, 2, 2, 3])
+
+
+def test_powers_of_two_exact():
+    x = jnp.array([0.25, 0.5, 1.0, 2.0, 8.0, -4.0])
+    out = csd.csd_round(x, max_digits=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(csd.csd_digit_count(x)), [1] * 6)
+
+
+@settings(deadline=None, max_examples=30)
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 6))
+def test_property_error_decreases_with_digits(seed, k):
+    """Truncating fewer partial products can only reduce the error."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (128,)) * 0.5
+    e_k = float(jnp.sum((w - csd.csd_round(w, k)) ** 2))
+    e_k1 = float(jnp.sum((w - csd.csd_round(w, k + 1)) ** 2))
+    assert e_k1 <= e_k + 1e-9
+
+
+@settings(deadline=None, max_examples=30)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_relative_error_bound(seed):
+    """1-digit CSD rounding is within 33% relative error (nearest PoT)."""
+    w = jax.random.uniform(jax.random.PRNGKey(seed), (128,), minval=1e-3, maxval=100.0)
+    out = np.asarray(csd.csd_round(w, 1))
+    rel = np.abs(out - np.asarray(w)) / np.asarray(w)
+    assert (rel <= 1.0 / 3.0 + 1e-6).all()
+
+
+def test_partial_product_savings_range():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 64)) * 0.1
+    for k in (1, 2, 4, 8):
+        s = float(csd.partial_product_savings(w, k))
+        assert 0.0 <= s <= 1.0
+    # k=1 saves more than k=8
+    assert float(csd.partial_product_savings(w, 1)) >= float(
+        csd.partial_product_savings(w, 8)
+    )
+
+
+def test_histogram_fig11():
+    """Most trained-scale weights need few CSD digits (paper Fig. 11)."""
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 256)) * 0.05
+    hist = np.asarray(csd.csd_nonzero_histogram(w))
+    assert hist.sum() == 256 * 256
+    # bulk of mass within <= 8 nonzero digits at 16 frac bits
+    assert hist[:9].sum() > 0.9 * hist.sum()

@@ -1,0 +1,79 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import codec
+from repro.kernels import ops, ref
+
+SHAPES = [
+    # (M, K, N, G, bm, bk, bn)
+    (32, 64, 32, 16, 32, 32, 32),
+    (64, 128, 64, 16, 32, 64, 32),
+    (128, 256, 128, 32, 64, 128, 64),
+    (64, 512, 256, 64, 64, 256, 128),
+    (8, 1024, 32, 128, 8, 512, 32),
+]
+
+
+@pytest.mark.parametrize("m,k,n,g,bm,bk,bn", SHAPES)
+@pytest.mark.parametrize("xdtype", [jnp.float32, jnp.bfloat16])
+def test_qsq_matmul_vs_ref(m, k, n, g, bm, bk, bn, xdtype):
+    key = jax.random.PRNGKey(m * 7 + k)
+    w = jax.random.normal(key, (k, n)) * 0.05
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, k)).astype(xdtype)
+    codes, scales = ref.qsq_quantize_ref(w, g, 4)
+    planes = codec.pack_bitplane(codes)
+    out_k = ops.qsq_matmul(x, planes, scales, group_size=g,
+                           bm=bm, bk=bk, bn=bn, interpret=True)
+    out_r = ref.qsq_matmul_ref(x, planes, scales, g)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("k,n,g", [(64, 32, 16), (256, 128, 32), (512, 64, 64)])
+@pytest.mark.parametrize("phi", [1, 2, 4])
+def test_qsq_quantize_vs_ref(k, n, g, phi):
+    w = jax.random.normal(jax.random.PRNGKey(k + phi), (k, n)) * 0.1
+    codes_k, scales_k = ops.qsq_quantize(w, group_size=g, phi=phi, interpret=True)
+    codes_r, scales_r = ref.qsq_quantize_ref(w, g, phi)
+    np.testing.assert_array_equal(np.asarray(codes_k), np.asarray(codes_r))
+    np.testing.assert_allclose(np.asarray(scales_k), np.asarray(scales_r), rtol=1e-6)
+
+
+def test_pack_weight_end_to_end():
+    """pack_weight -> qsq_matmul equals dense matmul with dequantized w."""
+    from repro.core.qsq import QSQConfig, dequantize, quantize
+
+    k, n, g = 128, 64, 16
+    w = jax.random.normal(jax.random.PRNGKey(3), (k, n)) * 0.1
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, k))
+    planes, scales = ops.pack_weight(w, group_size=g, interpret=True)
+    out = ops.qsq_matmul(x, planes, scales, group_size=g,
+                         bm=8, bk=64, bn=32, interpret=True)
+    wq = dequantize(quantize(w, QSQConfig(phi=4, group_size=g)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x @ wq),
+                               rtol=2e-5, atol=2e-4)
+
+
+def test_kernel_rejects_bad_tiles():
+    x = jnp.zeros((32, 64))
+    planes = jnp.zeros((2, 3, 32), jnp.int32)
+    scales = jnp.zeros((4, 32))
+    with pytest.raises(ValueError):  # scales shape inconsistent with group_size
+        ops.qsq_matmul(x, planes, scales, group_size=32, interpret=True)
+    with pytest.raises(ValueError):  # tile does not divide K
+        ops.qsq_matmul(x, planes, scales, group_size=16, bk=48, interpret=True)
+
+
+def test_xla_fallback_matches():
+    k, n, g = 128, 64, 16
+    w = jax.random.normal(jax.random.PRNGKey(5), (k, n)) * 0.1
+    x = jax.random.normal(jax.random.PRNGKey(6), (16, k))
+    codes, scales = ops.qsq_quantize(w, group_size=g, use_pallas=False)
+    planes = codec.pack_bitplane(codes)
+    a = ops.qsq_matmul(x, planes, scales, group_size=g, use_pallas=False)
+    b = ops.qsq_matmul(x, planes, scales, group_size=g, bm=16, bk=64, bn=32,
+                       interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-4)

@@ -1,0 +1,80 @@
+"""Packed-weight (bit-plane) serving path: models.layers.W + quant.packed."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import Model
+from repro.models.base import init_params
+from repro.quant.packed import (
+    pack_params, packed_bits_report, packed_param_descs,
+)
+
+
+@pytest.mark.parametrize("arch", ["deepseek_7b", "mamba2_1_3b", "mixtral_8x22b"])
+def test_packed_decode_close_to_dense(arch):
+    cfg = get_arch(arch, smoke=True)
+    model = Model(cfg)
+    descs = model.param_descs()
+    params = init_params(jax.random.PRNGKey(0), descs)
+    packed = pack_params(params, descs, group_size=16, min_numel=1024)
+
+    tok = jnp.ones((2, 1), jnp.int32)
+    cache_a = init_params(jax.random.PRNGKey(1), model.cache_descs(2, 8))
+    cache_b = init_params(jax.random.PRNGKey(1), model.cache_descs(2, 8))
+    l_dense, _ = model.decode(params, cache_a, {"tokens": tok})
+    l_packed, _ = model.decode(packed, cache_b, {"tokens": tok})
+    corr = float(jnp.corrcoef(l_dense.reshape(-1), l_packed.reshape(-1))[0, 1])
+    assert corr > 0.7, f"packed decode diverged: corr={corr}"
+    assert not bool(jnp.isnan(l_packed).any())
+
+
+def test_packed_W_exact_roundtrip():
+    """W() must invert pack exactly (the quantized values, not the originals)."""
+    from repro.core import codec
+    from repro.core.qsq import QSQConfig, dequantize, quantize
+    from repro.models.layers import W
+
+    w = jax.random.normal(jax.random.PRNGKey(2), (64, 32)) * 0.1
+    q = quantize(w, QSQConfig(phi=4, group_size=16, refit_alpha=True))
+    packed = {"planes": codec.pack_bitplane(q.codes()), "scales": q.scales}
+    np.testing.assert_allclose(
+        np.asarray(W(packed)), np.asarray(dequantize(q)), rtol=1e-6
+    )
+
+
+def test_packed_descs_shapes_match_arrays():
+    cfg = get_arch("deepseek_7b", smoke=True)
+    model = Model(cfg)
+    descs = model.param_descs()
+    params = init_params(jax.random.PRNGKey(0), descs)
+    packed = pack_params(params, descs, group_size=16, min_numel=1024)
+    pdescs = packed_param_descs(descs, group_size=16, min_numel=1024)
+
+    flat_a = jax.tree_util.tree_flatten_with_path(packed)[0]
+    flat_d = {jax.tree_util.keystr(p): d
+              for p, d in jax.tree_util.tree_flatten_with_path(
+                  pdescs, is_leaf=lambda x: hasattr(x, "axes"))[0]}
+    for path, arr in flat_a:
+        key = jax.tree_util.keystr(path)
+        assert key in flat_d, key
+        assert tuple(arr.shape) == tuple(flat_d[key].shape), key
+
+
+def test_packed_report_savings():
+    full = Model(get_arch("deepseek_7b"))
+    rep = packed_bits_report(full.param_descs(), group_size=64)
+    assert rep["n_packed_leaves"] >= 5
+    assert 0.5 < rep["savings"] < 0.85  # most of the model at ~3.5 bits
+
+
+def test_wo_and_embeddings_stay_dense():
+    cfg = get_arch("deepseek_7b", smoke=True)
+    model = Model(cfg)
+    descs = model.param_descs()
+    params = init_params(jax.random.PRNGKey(0), descs)
+    packed = pack_params(params, descs, group_size=16, min_numel=1024)
+    assert not isinstance(packed["blocks"]["attn"]["wo"], dict)
+    assert not isinstance(packed["embed"]["tok"], dict)
+    assert isinstance(packed["embed"]["head"], dict)  # head IS packed

@@ -1,0 +1,167 @@
+"""Unit + property tests for the QSQ quantizer (Eq. 5-10, Table II)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    LEVEL_TABLE, QSQConfig, codes_to_levels, dequantize, levels_for_phi,
+    levels_to_codes, quantization_error, quantize, theta_levels,
+    zeros_fraction, exhaustive_threshold_search,
+)
+
+
+def _randw(shape, seed=0, scale=0.1):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+# ---------------------------------------------------------------- Eq. 8
+def test_theta_levels_eq8():
+    # phi=1 -> {0,1}; phi=2 -> {0,1,2}; phi=4 -> {0,1,2,4}
+    assert theta_levels(1) == 2
+    assert theta_levels(2) == 3
+    assert theta_levels(4) == 4
+    with pytest.raises(ValueError):
+        theta_levels(3)
+
+
+def test_levels_for_phi():
+    assert set(np.asarray(levels_for_phi(1)).tolist()) == {0, 1, -1}
+    assert set(np.asarray(levels_for_phi(2)).tolist()) == {0, 1, 2, -1, -2}
+    assert set(np.asarray(levels_for_phi(4)).tolist()) == {0, 1, 2, 4, -1, -2, -4}
+
+
+# ---------------------------------------------------------------- Eq. 9
+def test_alpha_formula():
+    w = _randw((32, 8), seed=1)
+    for phi in (1, 2, 4):
+        q = quantize(w, QSQConfig(phi=phi, group_size=16))
+        wg = np.asarray(w).reshape(2, 16, 8)
+        expected = np.abs(wg).sum(axis=1) / (phi * 16)
+        np.testing.assert_allclose(np.asarray(q.scales), expected, rtol=1e-5)
+
+
+# ---------------------------------------------------------------- Table II
+def test_code_table_roundtrip():
+    levels = jnp.array([0, 1, 2, 4, -1, -2, -4], dtype=jnp.int8)
+    codes = levels_to_codes(levels)
+    np.testing.assert_array_equal(np.asarray(codes), [0, 1, 2, 3, 4, 5, 6])
+    back = codes_to_levels(codes)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(levels))
+
+
+def test_level_table_matches_paper():
+    # Table II: 000->0, 001->+1, 010->+2, 011->+4, 100->-1, 101->-2, 110->-4
+    assert LEVEL_TABLE.tolist() == [0, 1, 2, 4, -1, -2, -4, 0]
+
+
+# ---------------------------------------------------------------- quantize
+@pytest.mark.parametrize("phi", [1, 2, 4])
+@pytest.mark.parametrize("assign", ["nearest", "sigma"])
+def test_levels_within_alphabet(phi, assign):
+    w = _randw((64, 16), seed=2)
+    q = quantize(w, QSQConfig(phi=phi, group_size=16, assign=assign))
+    allowed = set(np.asarray(levels_for_phi(phi)).tolist())
+    assert set(np.unique(np.asarray(q.levels)).tolist()) <= allowed
+
+
+def test_nearest_minimizes_given_alpha():
+    """'nearest' must beat/tie any other assignment at fixed alpha (Eq. 5)."""
+    w = _randw((64, 4), seed=3)
+    cfg = QSQConfig(phi=4, group_size=16, assign="nearest")
+    q = quantize(w, cfg)
+    err_nearest = float(quantization_error(w, q))
+    err_sigma = float(
+        quantization_error(w, quantize(w, QSQConfig(phi=4, group_size=16, assign="sigma")))
+    )
+    assert err_nearest <= err_sigma + 1e-6
+
+
+def test_quality_scales_with_phi():
+    """Fig. 7: more levels (higher phi) => lower reconstruction error."""
+    w = _randw((256, 16), seed=4)
+    errs = {
+        phi: float(quantization_error(w, quantize(w, QSQConfig(phi=phi, group_size=16))))
+        for phi in (1, 2, 4)
+    }
+    assert errs[4] <= errs[2] <= errs[1]
+
+
+def test_zeros_increase():
+    """The paper reports ~+6% zeros after QSQ."""
+    w = _randw((512, 16), seed=5)
+    q = quantize(w, QSQConfig(phi=4, group_size=16))
+    assert float(zeros_fraction(q.levels)) > float(zeros_fraction(w))
+
+
+def test_exhaustive_threshold_search_improves_or_ties():
+    w = _randw((128, 8), seed=6)
+    base = QSQConfig(phi=4, group_size=16, assign="sigma", delta=3.0, gamma_frac=0.75)
+    best = exhaustive_threshold_search(w, base)
+    e_base = float(quantization_error(w, quantize(w, base)))
+    e_best = float(quantization_error(w, quantize(w, best)))
+    assert e_best <= e_base + 1e-6
+
+
+# ---------------------------------------------------------------- properties
+@settings(deadline=None, max_examples=25)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    phi=st.sampled_from([1, 2, 4]),
+    log_g=st.integers(0, 5),
+    scale=st.floats(1e-3, 10.0),
+)
+def test_property_reconstruction_bounded(seed, phi, log_g, scale):
+    """|w_hat| <= max_level * alpha and error <= |w| + |w_hat| elementwise."""
+    g = 2**log_g
+    w = jax.random.normal(jax.random.PRNGKey(seed), (4 * g, 4)) * scale
+    q = quantize(w, QSQConfig(phi=phi, group_size=g))
+    wh = np.asarray(dequantize(q))
+    max_level = {1: 1, 2: 2, 4: 4}[phi]
+    bound = max_level * np.repeat(np.asarray(q.scales), g, axis=0)
+    assert (np.abs(wh) <= bound + 1e-5).all()
+
+
+@settings(deadline=None, max_examples=25)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_sign_preserved(seed):
+    """Quantization never flips a weight's sign (it may zero it)."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (64, 4)) * 0.2
+    q = quantize(w, QSQConfig(phi=4, group_size=16))
+    prod = np.asarray(w) * np.asarray(q.levels).astype(np.float32)
+    assert (prod >= -1e-9).all()
+
+
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(0, 2**31 - 1), phi=st.sampled_from([1, 2, 4]))
+def test_property_scale_equivariance(seed, phi):
+    """quantize(c*w) == c * quantize(w) for c > 0 (alpha is linear in |w|)."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (32, 4)) * 0.1
+    c = 7.5
+    q1 = quantize(w, QSQConfig(phi=phi, group_size=16))
+    q2 = quantize(c * w, QSQConfig(phi=phi, group_size=16))
+    np.testing.assert_array_equal(np.asarray(q1.levels), np.asarray(q2.levels))
+    np.testing.assert_allclose(np.asarray(q2.scales), c * np.asarray(q1.scales), rtol=1e-5)
+
+
+def test_nbits_eq12():
+    w = _randw((64, 32), seed=7)
+    q = quantize(w, QSQConfig(phi=4, group_size=16))
+    # 3 bits per element + 32 per scalar group
+    assert q.nbits() == 3 * 64 * 32 + 32 * (64 // 16) * 32
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 2**31 - 1), phi=st.sampled_from([1, 2, 4]))
+def test_property_refit_never_worse(seed, phi):
+    """Least-squares alpha refit (beyond-paper) can only reduce Eq. 5 error."""
+    import dataclasses
+
+    w = jax.random.normal(jax.random.PRNGKey(seed), (64, 8)) * 0.15
+    base = QSQConfig(phi=phi, group_size=16)
+    e_paper = float(quantization_error(w, quantize(w, base)))
+    e_refit = float(
+        quantization_error(w, quantize(w, dataclasses.replace(base, refit_alpha=True)))
+    )
+    assert e_refit <= e_paper + 1e-5

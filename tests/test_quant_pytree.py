@@ -1,0 +1,116 @@
+"""Pytree quantization + wire (checkpoint/channel) format tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import QuantPolicy
+from repro.core.qsq import QSQConfig, QSQTensor
+from repro.models.base import init_params
+from repro.quant import (
+    dequantize_pytree, pack_pytree_wire, pytree_bits_report, quantize_pytree,
+    unpack_pytree_wire,
+)
+
+
+def _params():
+    return {
+        "layer": {
+            "w": jax.random.normal(jax.random.PRNGKey(0), (64, 32)) * 0.1,
+            "bias": jnp.zeros((32,)),
+            "norm_scale": jnp.ones((64,)),
+        },
+        "embed": jax.random.normal(jax.random.PRNGKey(1), (128, 64)) * 0.1,
+    }
+
+
+def test_policy_selects_matrices_only():
+    params = _params()
+    qp = quantize_pytree(params, QuantPolicy(base=QSQConfig(group_size=16), min_numel=512))
+    assert isinstance(qp.tree["layer"]["w"], QSQTensor)
+    assert isinstance(qp.tree["embed"], QSQTensor)
+    assert not isinstance(qp.tree["layer"]["bias"], QSQTensor)  # 1-D
+    assert not isinstance(qp.tree["layer"]["norm_scale"], QSQTensor)  # excluded
+
+
+def test_dequantize_shapes_and_finiteness():
+    params = _params()
+    qp = quantize_pytree(params, QuantPolicy(base=QSQConfig(group_size=16), min_numel=512))
+    deq = dequantize_pytree(qp)
+    for a, b in zip(jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(deq)):
+        assert a.shape == b.shape
+        assert np.isfinite(np.asarray(b)).all()
+
+
+def test_wire_roundtrip_exact():
+    """Wire (packed) -> unpack must reproduce codes and scales EXACTLY."""
+    params = _params()
+    qp = quantize_pytree(params, QuantPolicy(base=QSQConfig(group_size=16), min_numel=512))
+    wire = pack_pytree_wire(qp)
+    back = unpack_pytree_wire(wire)
+    w1 = np.asarray(qp.tree["layer"]["w"].levels)
+    w2 = np.asarray(back.tree["layer"]["w"].levels)
+    np.testing.assert_array_equal(w1, w2)
+    np.testing.assert_array_equal(
+        np.asarray(qp.tree["layer"]["w"].scales),
+        np.asarray(back.tree["layer"]["w"].scales),
+    )
+    # and dequantized views agree
+    d1 = dequantize_pytree(qp)
+    d2 = dequantize_pytree(back)
+    np.testing.assert_allclose(
+        np.asarray(d1["layer"]["w"]), np.asarray(d2["layer"]["w"])
+    )
+
+
+def test_bits_report_savings():
+    params = _params()
+    qp = quantize_pytree(params, QuantPolicy(base=QSQConfig(group_size=16), min_numel=512))
+    rep = pytree_bits_report(params, qp)
+    assert rep["n_quantized_leaves"] == 2
+    assert 0.5 < rep["memory_savings"] < 0.95
+
+
+def test_smoke_model_pytree_quantization():
+    """Quantize a whole smoke model; loss must stay finite and in-family."""
+    from repro.configs import get_arch
+    from repro.models import Model
+
+    cfg = get_arch("deepseek_7b", smoke=True)
+    model = Model(cfg)
+    params = init_params(jax.random.PRNGKey(0), model.param_descs())
+    qp = quantize_pytree(params, QuantPolicy(base=QSQConfig(group_size=16), min_numel=256))
+    deq = dequantize_pytree(qp, like=params)
+    tok = jnp.zeros((2, 16), jnp.int32)
+    l0 = float(model.loss(params, {"tokens": tok, "labels": tok}))
+    l1 = float(model.loss(deq, {"tokens": tok, "labels": tok}))
+    assert np.isfinite(l1)
+    assert abs(l1 - l0) < 2.0  # quantization is approximate, not destructive
+
+
+def test_sensitivity_rank_and_budgeted_policy():
+    """DESIGN.md §7.5: per-layer sensitivity ranking + phi-budget assignment."""
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch
+    from repro.core.policy import budgeted_policy, sensitivity_rank
+    from repro.models import Model
+
+    cfg = get_arch("deepseek_7b", smoke=True)
+    model = Model(cfg)
+    params = init_params(jax.random.PRNGKey(0), model.param_descs())
+    tok = jnp.zeros((2, 16), jnp.int32)
+    batch = {"tokens": tok, "labels": tok}
+    policy = QuantPolicy(base=QSQConfig(group_size=16), min_numel=256)
+
+    sens = sensitivity_rank(params, lambda p, b: model.loss(p, b), policy, batch)
+    assert len(sens) >= 3
+    # ranked descending by loss increase
+    deltas = [d for _, d in sens]
+    assert deltas == sorted(deltas, reverse=True)
+
+    bp = budgeted_policy(sens, policy)
+    assert len(bp.overrides) == len(sens)
+    # most sensitive layer gets the highest quality (phi=4)
+    import re
+    top_path = sens[0][0]
+    assert bp.overrides[re.escape(top_path)].phi == 4

@@ -1,0 +1,70 @@
+"""Serving engine: batched generation, wire-checkpoint loading."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.policy import QuantPolicy
+from repro.core.qsq import QSQConfig
+from repro.models import Model
+from repro.models.base import init_params
+from repro.quant import pack_pytree_wire, quantize_pytree
+from repro.serve import ServeConfig, ServeEngine
+
+
+def _model_and_params(arch="deepseek_7b"):
+    cfg = get_arch(arch, smoke=True)
+    model = Model(cfg)
+    params = init_params(jax.random.PRNGKey(0), model.param_descs())
+    return model, params
+
+
+def test_generate_batched():
+    model, params = _model_and_params()
+    eng = ServeEngine(model, params, ServeConfig(batch_slots=4))
+    outs = eng.generate([[1, 2, 3], [4, 5]], max_new=8)
+    assert len(outs) == 2
+    assert all(len(o) == 8 for o in outs)
+    assert all(0 <= t < model.cfg.vocab for o in outs for t in o)
+
+
+def test_generate_deterministic():
+    model, params = _model_and_params()
+    eng = ServeEngine(model, params, ServeConfig(batch_slots=2))
+    a = eng.generate([[1, 2, 3]], max_new=6)
+    b = eng.generate([[1, 2, 3]], max_new=6)
+    assert a == b
+
+
+def test_generate_prompt_isolation():
+    """Outputs for a prompt must not depend on other slots' prompts."""
+    model, params = _model_and_params()
+    eng = ServeEngine(model, params, ServeConfig(batch_slots=4))
+    solo = eng.generate([[1, 2, 3]], max_new=5)[0]
+    pair = eng.generate([[1, 2, 3], [9, 9, 9]], max_new=5)[0]
+    assert solo == pair
+
+
+def test_serve_from_wire_close_to_exact():
+    """Engine loaded from the 3-bit wire artifact produces the same shape of
+    results and close logits behaviour (greedy tokens may differ on ties,
+    so compare the decoded weights' effect via loss)."""
+    model, params = _model_and_params()
+    qp = quantize_pytree(
+        params, QuantPolicy(base=QSQConfig(group_size=16), min_numel=256)
+    )
+    wire = pack_pytree_wire(qp)
+    eng = ServeEngine.from_wire(model, wire, ServeConfig(batch_slots=2))
+    outs = eng.generate([[1, 2, 3]], max_new=4)
+    assert len(outs[0]) == 4
+    # decoded params give finite loss in-family
+    tok = jnp.zeros((2, 8), jnp.int32)
+    l = float(model.loss(eng.params, {"tokens": tok, "labels": tok}))
+    assert np.isfinite(l)
+
+
+def test_mamba_engine():
+    model, params = _model_and_params("mamba2_1_3b")
+    eng = ServeEngine(model, params, ServeConfig(batch_slots=2))
+    outs = eng.generate([[3, 1]], max_new=4)
+    assert len(outs[0]) == 4

@@ -1,0 +1,129 @@
+"""End-to-end behaviour tests: the paper's full methodology on a real
+(small) model + the framework loop (train -> quantize -> transfer -> serve).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.policy import QuantPolicy
+from repro.core.qsq import QSQConfig
+from repro.data.pipeline import (
+    LMDataConfig, image_batches, lm_batch, synthetic_image_dataset,
+)
+from repro.models import Model
+from repro.models.base import init_params
+from repro.models.cnn import LENET, cnn_accuracy, cnn_descs, cnn_loss
+from repro.optim import AdamWConfig, adamw_init_descs, adamw_update
+from repro.quant import dequantize_pytree, pack_pytree_wire, quantize_pytree
+from repro.serve import ServeConfig, ServeEngine
+
+
+def _train_lenet(steps=300, lr=2e-3, n=1024):
+    imgs, labels = synthetic_image_dataset(n, LENET.input_hw, LENET.input_c,
+                                           LENET.n_classes, seed=0)
+    params = init_params(jax.random.PRNGKey(0), cnn_descs(LENET))
+    opt = init_params(jax.random.PRNGKey(0), adamw_init_descs(cnn_descs(LENET)))
+    ocfg = AdamWConfig(lr=lr, weight_decay=0.0)
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: cnn_loss(p, LENET, batch)
+        )(params)
+        params, opt, _ = adamw_update(ocfg, params, grads, opt)
+        return params, opt, loss
+
+    it = image_batches(imgs, labels, 64, seed=1)
+    for _ in range(steps):
+        _, batch = next(it)
+        params, opt, loss = step(params, opt, batch)
+    return params, imgs, labels
+
+
+def test_lenet_paper_pipeline():
+    """Table III methodology: train -> quantize -> accuracy stays close;
+    plus the +zeros and model-size claims."""
+    from repro.core.qsq import zeros_fraction
+
+    params, imgs, labels = _train_lenet()
+    acc_fp = cnn_accuracy(params, LENET, imgs[:256], labels[:256])
+    assert acc_fp > 0.85, f"float LeNet failed to learn: {acc_fp}"
+
+    # refit_alpha mode (same 3-bit wire format); the paper-faithful Eq. 9
+    # scalar's larger drop is characterized in benchmarks/bench_table3.py
+    policy = QuantPolicy(
+        base=QSQConfig(phi=4, group_size=16, refit_alpha=True), min_numel=256
+    )
+    qp = quantize_pytree(params, policy)
+    deq = dequantize_pytree(qp, like=params)
+    acc_q = cnn_accuracy(deq, LENET, imgs[:256], labels[:256])
+    # paper: 98.68% -> 97.59% (a ~1.1 point drop); we allow a modest drop
+    assert acc_q > acc_fp - 0.15, f"quantized acc dropped too far: {acc_fp}->{acc_q}"
+
+    # +zeros claim
+    from repro.core.qsq import QSQTensor
+
+    total_z_fp, total_z_q, n = 0.0, 0.0, 0
+    for leaf_fp, leaf_q in zip(
+        jax.tree_util.tree_leaves(params),
+        jax.tree_util.tree_leaves(
+            qp.tree, is_leaf=lambda x: isinstance(x, QSQTensor)
+        ),
+    ):
+        if isinstance(leaf_q, QSQTensor):
+            total_z_fp += float(zeros_fraction(leaf_fp))
+            total_z_q += float(zeros_fraction(leaf_q.levels))
+            n += 1
+    assert n > 0 and total_z_q > total_z_fp
+
+
+def test_fc_finetune_recovers_accuracy():
+    """Table III row 3: retraining only the FC layers after quantization
+    recovers (most of) the drop."""
+    params, imgs, labels = _train_lenet()
+    policy = QuantPolicy(base=QSQConfig(phi=1, group_size=16), min_numel=256)
+    deq = dequantize_pytree(quantize_pytree(params, policy), like=params)
+    acc_q = cnn_accuracy(deq, LENET, imgs[:256], labels[:256])
+
+    # fine-tune FC only (convs frozen at quantized values)
+    ocfg = AdamWConfig(lr=1e-3, weight_decay=0.0)
+    opt = init_params(jax.random.PRNGKey(1), adamw_init_descs(cnn_descs(LENET)))
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(lambda p: cnn_loss(p, LENET, batch))(params)
+        # zero conv grads => FC-only fine-tune
+        grads = {"convs": jax.tree_util.tree_map(jnp.zeros_like, grads["convs"]),
+                 "fcs": grads["fcs"]}
+        params, opt, _ = adamw_update(ocfg, params, grads, opt)
+        return params, opt, loss
+
+    it = image_batches(imgs, labels, 64, seed=3)
+    tuned = deq
+    for _ in range(60):
+        _, batch = next(it)
+        tuned, opt, _ = step(tuned, opt, batch)
+    acc_ft = cnn_accuracy(tuned, LENET, imgs[:256], labels[:256])
+    assert acc_ft >= acc_q - 0.02  # never hurts, normally recovers
+
+
+def test_e2e_train_quantize_transfer_serve():
+    """The framework loop: train a small LM, QSQ-encode it (the channel
+    artifact), decode on the 'edge', and serve tokens."""
+    cfg = get_arch("smollm_135m", smoke=True)
+    model = Model(cfg)
+    data = LMDataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4)
+
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    tr = Trainer(model, TrainerConfig(total_steps=25, log_every=5,
+                                      opt=AdamWConfig(lr=3e-3)),
+                 lambda s: lm_batch(data, s))
+    state, _ = tr.run()
+
+    policy = QuantPolicy(base=QSQConfig(group_size=16), min_numel=512)
+    wire = pack_pytree_wire(quantize_pytree(state.params, policy))
+    eng = ServeEngine.from_wire(model, wire, ServeConfig(batch_slots=2))
+    outs = eng.generate([[1, 2, 3]], max_new=5)
+    assert len(outs[0]) == 5
