@@ -1,0 +1,102 @@
+"""Serve-latency benchmark: dense engine vs packed-wire engine.
+
+Builds a smollm-class (32-aligned) model, ships it through the QSQ wire,
+and times `ServeEngine.generate` for (a) the exact dense engine, (b) the
+wire engine with full dense decode at load, and (c) the wire engine serving
+packed bit-planes end-to-end.  On this CPU container the packed matmuls run
+the Pallas kernel in interpret mode, so its WALL time is meaningless as a
+TPU prediction; the derived columns carry the structural serving win: bits
+held per weight (= HBM residency / weight-stream bytes on the target) and
+the packed-leaf count.  Emits one BENCH json line for dashboard scraping,
+plus the standard (name, us_per_call, derived) rows for benchmarks.run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.policy import QuantPolicy
+from repro.core.qsq import QSQConfig
+from repro.models.api import Model
+from repro.models.base import init_params
+from repro.quant import pack_pytree_wire, quantize_pytree, tree_bits_report
+from repro.serve import ServeConfig, ServeEngine
+
+PROMPTS = [[1, 2, 3], [9, 9], [100, 42, 7, 8]]
+MAX_NEW = 16
+
+
+def _model():
+    cfg = ArchConfig(name="smollm-bench", family="dense", n_layers=2,
+                     d_model=64, n_heads=4, n_kv=2, d_ff=128, vocab=256,
+                     dtype=jnp.float32, remat=False)
+    model = Model(cfg)
+    params = init_params(jax.random.PRNGKey(0), model.param_descs())
+    return model, params
+
+
+def _tok_per_s(engine) -> tuple[float, float]:
+    """(tokens/s, us/token) for a generate() call, after one warmup."""
+    engine.generate(PROMPTS, max_new=MAX_NEW)  # warmup: jit both scans
+    n = len(PROMPTS) * MAX_NEW
+    t0 = time.time()
+    engine.generate(PROMPTS, max_new=MAX_NEW)
+    dt = time.time() - t0
+    return n / dt, dt / n * 1e6
+
+
+def main(verbose: bool = True):
+    model, params = _model()
+    descs = model.param_descs()
+    policy = QuantPolicy(base=QSQConfig(group_size=16, refit_alpha=True),
+                         min_numel=512)
+    wire = pack_pytree_wire(quantize_pytree(params, policy, descs))
+
+    engines = {
+        "dense_exact": ServeEngine(model, params, ServeConfig(batch_slots=4)),
+        "wire_dense": ServeEngine.from_wire(
+            model, wire, ServeConfig(batch_slots=4, packed=False)),
+        "wire_packed": ServeEngine.from_wire(
+            model, wire, ServeConfig(batch_slots=4)),
+    }
+
+    rows = []
+    stats = {}
+    for name, eng in engines.items():
+        tok_s, us_tok = _tok_per_s(eng)
+        rep = tree_bits_report(eng.params)
+        n_w = sum(int(jnp.size(l)) for l in jax.tree_util.tree_leaves(params))
+        bits_per_weight = rep["bits"] / n_w
+        rows.append((f"serve/{name}", us_tok,
+                     f"tok_s={tok_s:.1f}|bits_per_weight={bits_per_weight:.2f}"
+                     f"|packed_leaves={eng.n_packed_leaves}"))
+        stats[name] = {
+            "tok_s": round(tok_s, 2),
+            "us_per_tok": round(us_tok, 1),
+            "bits_per_weight": round(bits_per_weight, 2),
+            "packed_leaves": eng.n_packed_leaves,
+        }
+        if verbose:
+            print(f"  {name}: {tok_s:.1f} tok/s ({us_tok:.0f} us/tok), "
+                  f"{bits_per_weight:.2f} bits/weight, "
+                  f"{eng.n_packed_leaves} packed leaves")
+
+    # tokens must agree bit-exactly across all three engines
+    outs = [eng.generate(PROMPTS, max_new=8) for eng in
+            (engines["wire_dense"], engines["wire_packed"])]
+    assert outs[0] == outs[1], "packed engine diverged from dense decode"
+
+    print("BENCH " + json.dumps({"bench": "serve",
+                                 "prompts": len(PROMPTS),
+                                 "max_new": MAX_NEW,
+                                 **stats}))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -12,7 +12,7 @@ import traceback
 
 from benchmarks import (
     bench_compression, bench_fig7, bench_fig8, bench_fig9, bench_fig10,
-    bench_fig11, bench_kernels, bench_table3,
+    bench_fig11, bench_kernels, bench_serve, bench_table3,
 )
 
 BENCHES = {
@@ -24,6 +24,7 @@ BENCHES = {
     "fig11": bench_fig11.main,
     "kernels": bench_kernels.main,
     "compression": bench_compression.main,
+    "serve": bench_serve.main,
 }
 
 

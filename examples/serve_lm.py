@@ -33,12 +33,15 @@ def main():
 
     cfg = get_arch(args.arch, smoke=True)
     model = Model(cfg)
-    params = init_params(jax.random.PRNGKey(0), model.param_descs())
+    descs = model.param_descs()
+    params = init_params(jax.random.PRNGKey(0), descs)
 
-    # "transmit" the model in QSQ wire form and decode on arrival
+    # "transmit" the model in QSQ wire form; passing descs groups matmul
+    # weights along their contraction axis so the receiver can serve them
+    # packed (bit-planes through the fused dequant-matmul), not just decode.
     wire = pack_pytree_wire(
         quantize_pytree(params, QuantPolicy(base=QSQConfig(group_size=16),
-                                            min_numel=512))
+                                            min_numel=512), descs)
     )
     raw = sum(l.size * l.dtype.itemsize for l in jax.tree_util.tree_leaves(params))
     wired = sum(
@@ -48,6 +51,8 @@ def main():
     print(f"channel payload: {wired / 1e6:.2f} MB (raw {raw / 1e6:.2f} MB)")
 
     eng = ServeEngine.from_wire(model, wire, ServeConfig(batch_slots=4))
+    print(f"serving {eng.n_packed_leaves} matmul weights straight from the "
+          f"3-bit wire (no full-tree dequantize)")
     prompts = [[1, 2, 3, 4], [10, 20], [7, 7, 7]]
     t0 = time.time()
     outs = eng.generate(prompts, max_new=args.max_new)

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import re
 import shutil
 import threading
 from pathlib import Path
@@ -152,10 +153,15 @@ class CheckpointManager:
             self.step_path(s).unlink(missing_ok=True)
             self.meta_path(s).unlink(missing_ok=True)
 
-    # -- QSQ wire export (the paper's channel artifact) --------------------
-    def export_wire(self, params, policy: QuantPolicy, name: str = "wire") -> Path:
-        """Write the 3-bit+scalar encoded model; returns the file path."""
-        qp = quantize_pytree(params, policy)
+    # -- QSQ wire export / import (the paper's channel artifact) -----------
+    def export_wire(self, params, policy: QuantPolicy, name: str = "wire",
+                    descs=None) -> Path:
+        """Write the 3-bit+scalar encoded model; returns the file path.
+
+        Pass the model's ``descs`` (ParamDesc tree) to group matmul weights
+        along their contraction axis — the layout ``load_wire`` +
+        ``ServeEngine.from_wire`` serve packed, without dequantizing."""
+        qp = quantize_pytree(params, policy, descs)
         wire = pack_pytree_wire(qp)
         path = self.dir / f"{name}.npz"
         flat, _ = _flatten(wire)
@@ -163,3 +169,36 @@ class CheckpointManager:
         np.savez(tmp, **flat)
         tmp.rename(path)
         return path
+
+    def load_wire(self, name_or_path: str | Path = "wire"):
+        """Inverse of :func:`export_wire`: npz -> nested wire tree (lossless).
+
+        The result feeds ``ServeEngine.from_wire`` / ``quant.tree_from_wire``
+        directly; codes and scales round-trip bit-exactly."""
+        path = Path(name_or_path)
+        if not path.suffix:
+            path = path.with_suffix(".npz")
+        if len(path.parts) == 1:  # bare name -> this manager's directory
+            path = self.dir / path
+        data = np.load(path, allow_pickle=False)
+        root: dict = {}
+        key_re = re.compile(r"\['([^']*)'\]|\[(\d+)\]")
+        for key in data.files:
+            parts = [m.group(1) if m.group(1) is not None else int(m.group(2))
+                     for m in key_re.finditer(key)]
+            node = root
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = data[key]
+
+        def _listify(node):
+            """int-keyed dicts (flattened tuples/lists, e.g. wire 'shape'
+            entries) -> lists; everything else stays a dict."""
+            if not isinstance(node, dict):
+                return node
+            out = {k: _listify(v) for k, v in node.items()}
+            if out and all(isinstance(k, int) for k in out):
+                return [out[i] for i in sorted(out)]
+            return out
+
+        return _listify(root)

@@ -3,7 +3,7 @@
 [arXiv:2212.04356; unverified].  4+4L d_model=384 6H d_ff=1536 vocab=51865.
 input_specs() supplies precomputed frame embeddings (B, 1500, 384).
 Decode shapes are lowered mechanically (the real model caps at 448
-positions) — recorded in EXPERIMENTS.md; long_500k skipped (full attention).
+positions) — recorded by the dry-run sweep; long_500k skipped (full attention).
 """
 import jax.numpy as jnp
 

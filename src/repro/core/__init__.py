@@ -7,6 +7,7 @@ from repro.core.qsq import (
     quantization_error,
     zeros_fraction,
     levels_for_phi,
+    bits_per_code,
     theta_levels,
     levels_to_codes,
     codes_to_levels,
@@ -18,7 +19,7 @@ from repro.core.policy import QuantPolicy, sensitivity_rank, budgeted_policy
 
 __all__ = [
     "QSQConfig", "QSQTensor", "quantize", "dequantize", "quantization_error",
-    "zeros_fraction", "levels_for_phi", "theta_levels", "levels_to_codes",
+    "zeros_fraction", "levels_for_phi", "bits_per_code", "theta_levels", "levels_to_codes",
     "codes_to_levels", "exhaustive_threshold_search", "LEVEL_TABLE",
     "codec", "csd", "energy", "QuantPolicy", "sensitivity_rank", "budgeted_policy",
 ]

@@ -99,7 +99,7 @@ def model_savings(
 
 
 # --------------------------------------------------------------------------
-# TPU roofline terms (§Roofline of EXPERIMENTS.md)
+# TPU roofline terms (aggregated by benchmarks/roofline.py)
 # --------------------------------------------------------------------------
 def roofline_terms(
     hlo_flops: float,

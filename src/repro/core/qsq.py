@@ -48,6 +48,14 @@ def theta_levels(phi: int) -> int:
     return int(np.ceil(np.log2(2 * (1 + np.log2(phi))))) + 1
 
 
+def bits_per_code(phi: int) -> int:
+    """Wire bits per weight: 3-bit Table II codes for phi in {2,4}; the
+    ternary phi=1 alphabet {0,+-1} fits in 2 bits.  Single source of truth
+    for QSQConfig.bits_per_code and every nbits() accounting."""
+    theta_levels(phi)  # validate
+    return 2 if phi == 1 else 3
+
+
 def levels_for_phi(phi: int) -> np.ndarray:
     """Signed level alphabet for a given phi.
 
@@ -100,7 +108,7 @@ class QSQConfig:
     @property
     def bits_per_code(self) -> int:
         """3-bit encoding for phi in {2,4}; ternary (phi=1) fits in 2 bits."""
-        return 2 if self.phi == 1 else 3
+        return bits_per_code(self.phi)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -149,9 +157,8 @@ class QSQTensor:
 
     def nbits(self, scalar_bits: int = 32) -> int:
         """Total stored bits (Eq. 12 generalized to arbitrary tensors)."""
-        bits_per_code = 2 if self.phi == 1 else 3
         return int(
-            bits_per_code * np.prod(self.shape)
+            bits_per_code(self.phi) * np.prod(self.shape)
             + scalar_bits * np.prod(self.scales.shape)
         )
 
@@ -167,8 +174,14 @@ def levels_to_codes(levels: jax.Array) -> jax.Array:
 
 
 def codes_to_levels(codes: jax.Array) -> jax.Array:
-    """Inverse of :func:`levels_to_codes` via Table II."""
-    return jnp.asarray(LEVEL_TABLE)[codes.astype(jnp.int32)]
+    """Inverse of :func:`levels_to_codes` via Table II.
+
+    Matches the kernel decoder (`kernels.qsq_matmul._decode_codes`) on every
+    3-bit pattern: the unused code 7 decodes to 0, and any stray high bits
+    (corrupt/unmasked input) are dropped before the table lookup instead of
+    clamping to the last table entry.
+    """
+    return jnp.asarray(LEVEL_TABLE)[codes.astype(jnp.int32) & 0x7]
 
 
 def _grouped(w: jax.Array, group_size: int) -> jax.Array:

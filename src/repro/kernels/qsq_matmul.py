@@ -10,7 +10,8 @@ feeds the MXU — so dense f32/bf16 weights never touch HBM.
 HBM traffic for weights drops from 16 bits/weight (bf16) to
 3 + 32/G bits/weight (= 5 bits at G=16, 3.5 bits at G=64): a 3.2-4.6x cut in
 the weight-streaming memory-roofline term, which dominates decode-shape
-inference (see EXPERIMENTS.md §Perf).
+inference (measured by benchmarks/bench_kernels.py and
+benchmarks/bench_serve.py; see README.md §Performance).
 
 Layout:
   x       (M, K)            bf16/f32   activations
@@ -33,6 +34,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x.
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 PLANE = 32  # codes per bit-plane word (matches codec.PLANE_GROUP)
 
@@ -125,6 +129,6 @@ def qsq_matmul(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=_COMPILER_PARAMS(dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, planes, scales)

@@ -5,7 +5,7 @@ Run as:  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek_7b --shape
 
 Produces experiments/dryrun/<arch>__<shape>__<mesh>.json with
 memory_analysis, cost_analysis, per-collective byte counts and the three
-roofline terms (EXPERIMENTS.md §Dry-run / §Roofline read these files).
+roofline terms (benchmarks/roofline.py aggregates these files).
 """
 # The VERY FIRST lines, before ANY other import: jax locks the device count
 # on first init, and the dry-run needs 512 host placeholder devices.

@@ -13,19 +13,24 @@ from typing import Mapping
 import jax
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def _mesh(shape, axes):
+    # jax.sharding.AxisType only exists on newer jax; older versions default
+    # every axis to Auto, which is exactly what we want.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _mesh(shape, axes)
 
 
 def make_debug_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over however many devices the test process has."""
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+    return _mesh((data, model), ("data", "model"))
 
 
 def data_axes(mesh) -> tuple:

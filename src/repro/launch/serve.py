@@ -1,10 +1,13 @@
-"""Serving launcher: --arch <id> [--wire PATH] [--prompts ...].
+"""Serving launcher: --arch <id> [--wire [--dense]] [--max-new N].
 
-Loads exact params (fresh init on this CPU container) or a QSQ wire
-artifact and serves batched greedy decoding through the ServeEngine.
-On a real pod the same entry point builds the production mesh and shards
-params/caches with launch/mesh.py rules (see launch/dryrun.py for the
-lowering path that proves those shardings compile).
+Loads exact params (fresh init on this CPU container) or round-trips the
+model through the QSQ wire artifact and serves batched greedy decoding
+through the ServeEngine.  With --wire the engine keeps matmul weights in
+3-bit bit-plane form end-to-end (add --dense to decode everything at load
+and compare).  On a real pod the same entry point builds the production
+mesh and shards params/caches with launch/mesh.py rules (see
+launch/dryrun.py for the lowering path that proves those shardings
+compile).
 """
 from __future__ import annotations
 
@@ -19,7 +22,7 @@ from repro.core.policy import QuantPolicy
 from repro.core.qsq import QSQConfig
 from repro.models.api import Model
 from repro.models.base import init_params
-from repro.quant import pack_pytree_wire, quantize_pytree
+from repro.quant import quantize_pytree, pack_pytree_wire, tree_bits_report
 from repro.serve import ServeConfig, ServeEngine
 
 
@@ -30,20 +33,36 @@ def main():
     ap.add_argument("--full", dest="smoke", action="store_false")
     ap.add_argument("--wire", action="store_true",
                     help="round-trip the model through the QSQ wire format")
+    ap.add_argument("--dense", action="store_true",
+                    help="with --wire: decode the whole tree at load instead "
+                         "of serving packed bit-planes")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     args = ap.parse_args()
 
     cfg = get_arch(args.arch, smoke=args.smoke)
     model = Model(cfg)
-    params = init_params(jax.random.PRNGKey(0), model.param_descs())
+    descs = model.param_descs()
+    params = init_params(jax.random.PRNGKey(0), descs)
 
     if args.wire:
-        wire = pack_pytree_wire(quantize_pytree(
-            params, QuantPolicy(base=QSQConfig(group_size=16, refit_alpha=True),
-                                min_numel=512)))
-        engine = ServeEngine.from_wire(model, wire, ServeConfig(batch_slots=args.slots))
-        print("loaded from QSQ wire artifact (3-bit + scalars, shift/scale decode)")
+        qp = quantize_pytree(
+            params,
+            QuantPolicy(base=QSQConfig(group_size=16, refit_alpha=True),
+                        min_numel=512),
+            descs,
+        )
+        wire = pack_pytree_wire(qp)
+        engine = ServeEngine.from_wire(
+            model, wire,
+            ServeConfig(batch_slots=args.slots, packed=not args.dense),
+        )
+        rep = tree_bits_report(engine.params)
+        print(
+            f"loaded from QSQ wire artifact "
+            f"({engine.n_packed_leaves} leaves served packed, "
+            f"{rep['savings'] * 100:.0f}% below f32)"
+        )
     else:
         engine = ServeEngine(model, params, ServeConfig(batch_slots=args.slots))
 

@@ -95,6 +95,28 @@ class Model:
             return encdec.encdec_decode(params, self.cfg, cache, tokens)
         raise ValueError(f)
 
+    def prefill(self, params, cache, tokens):
+        """Prime a decode cache for whole (B, S) prompts in one scanned step.
+
+        Returns (cache, last_logits).  Family-agnostic: every family that
+        can decode() can prefill.  ``params`` may be any WeightStore mix —
+        dense arrays, QSQ levels, or packed bit-planes."""
+        from repro.train.step import make_cache_prefill_step
+
+        return make_cache_prefill_step(self)(params, cache, tokens)
+
+    def serve_params(self, wire_tree, packed: bool = True):
+        """Wire artifact -> serving param tree (packed matmul weights when
+        ``packed``, full dense decode otherwise).  Returns (params, n_packed)."""
+        from repro.models.base import abstract_params
+        from repro.quant.store import dense_tree, serve_tree, tree_from_wire
+
+        store = tree_from_wire(wire_tree)
+        descs = self.param_descs()
+        if packed:
+            return serve_tree(store, descs)
+        return dense_tree(store, like=abstract_params(descs)), 0
+
     # -- inputs ----------------------------------------------------------
     def input_descs(self, shape: ShapeConfig):
         cfg = self.cfg

@@ -65,6 +65,15 @@ def _is_desc(x) -> bool:
     return isinstance(x, ParamDesc)
 
 
+# Descriptor trees may contain WeightStore pytree nodes (quant/store.py)
+# whose children are ParamDesc — e.g. quant.packed.packed_param_descs wraps
+# planes/scales descriptors in PackedWeight.  Every tree_map below uses
+# is_leaf=_is_desc, so it descends into those nodes and the derived
+# abstract/real/PartitionSpec trees keep the same WeightStore structure,
+# which is exactly what the jitted serve step takes as arguments.
+is_desc = _is_desc
+
+
 def _init_one(key, d: ParamDesc) -> jax.Array:
     if d.init == "zeros":
         return jnp.zeros(d.shape, d.dtype)

@@ -14,36 +14,38 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.base import ParamDesc, constrain, dense, xscan
+from repro.quant.store import is_store
 
 # --------------------------------------------------------------------------
-# Packed-weight view.
+# WeightStore view.
 #
-# Serving can ship weights as QSQ bit-planes + scales ({"planes", "scales"}
-# dicts) instead of dense arrays — the paper's decode-on-use.  W() is the
-# shift-and-scale decoder (Table II) applied where the weight is consumed;
-# because params flow through the layer scan as xs, only ONE layer's dense
-# weights ever materialize at a time, while the step *arguments* (= HBM
-# residency) stay at ~3.2-5 bits/weight.  On TPU the Pallas qsq_matmul
-# kernel fuses this decode into the matmul tile loop (kernels/qsq_matmul.py).
+# Serving can ship weights as WeightStore leaves (quant/store.py: QSQ
+# levels or 3-bit bit-planes + scales) instead of dense arrays — the
+# paper's decode-on-use.  W() is the shift-and-scale decoder (Table II)
+# applied where the weight is consumed; because params flow through the
+# layer scan as xs, only ONE layer's dense weights ever materialize at a
+# time, while the step *arguments* (= HBM residency) stay at ~3.2-5
+# bits/weight.  matvec() goes one step further for 1-axis contractions:
+# packed leaves route through the Pallas qsq_matmul kernel
+# (kernels/qsq_matmul.py), which fuses the decode into the matmul tile
+# loop so dense weights never exist outside VREGs.
 # --------------------------------------------------------------------------
-def is_packed(p) -> bool:
-    return isinstance(p, dict) and "planes" in p
-
-
 def W(p):
-    """Weight view: dequantize a packed weight dict, pass dense through."""
-    if not is_packed(p):
-        return p
-    from repro.core import codec
-    from repro.core.qsq import codes_to_levels
+    """Weight view: decode a WeightStore leaf to dense, pass arrays through."""
+    if is_store(p):
+        return p.as_dense()
+    return p
 
-    codes = codec.unpack_bitplane(p["planes"])  # (K, ...)
-    lev = codes_to_levels(codes).astype(jnp.float32)
-    k = lev.shape[0]
-    ng = p["scales"].shape[0]
-    g = k // ng
-    w = (lev.reshape(ng, g, *lev.shape[1:]) * p["scales"][:, None]).reshape(lev.shape)
-    return w
+
+def matvec(p, x: jax.Array) -> jax.Array:
+    """x (..., K) contracted with weight p (K, *rest) -> (..., *rest).
+
+    WeightStore leaves dispatch their own matmul (fused dequant-matmul for
+    PackedWeight); dense arrays take the plain tensordot.  Output dtype
+    follows x."""
+    if is_store(p):
+        return p.matmul(x)
+    return jnp.tensordot(x, p.astype(x.dtype), axes=1)
 
 
 # --------------------------------------------------------------------------
@@ -103,9 +105,9 @@ def attn_descs(d: int, n_heads: int, n_kv: int, head_dim: int,
 
 
 def _project_qkv(p: dict, x: jax.Array, positions, theta: float):
-    q = jnp.einsum("bsd,dhk->bshk", x, W(p["wq"]).astype(x.dtype))
-    k = jnp.einsum("bsd,dhk->bshk", x, W(p["wk"]).astype(x.dtype))
-    v = jnp.einsum("bsd,dhk->bshk", x, W(p["wv"]).astype(x.dtype))
+    q = matvec(p["wq"], x)  # (b, s, h, hd)
+    k = matvec(p["wk"], x)
+    v = matvec(p["wv"], x)
     if "q_norm" in p:
         q = rmsnorm(q, p["q_norm"])
         k = rmsnorm(k, p["k_norm"])
@@ -256,7 +258,7 @@ def decode_attention(
 
 def cross_attention(p: dict, x: jax.Array, kv: tuple[jax.Array, jax.Array]) -> jax.Array:
     """Cross-attn with precomputed encoder/vision K, V: kv = (k, v) (B,T,Kv,hd)."""
-    q = jnp.einsum("bsd,dhk->bshk", x, W(p["wq"]).astype(x.dtype))
+    q = matvec(p["wq"], x)
     if "q_norm" in p:
         q = rmsnorm(q, p["q_norm"])
     k, v = kv
@@ -267,8 +269,8 @@ def cross_attention(p: dict, x: jax.Array, kv: tuple[jax.Array, jax.Array]) -> j
 
 
 def cross_kv(p: dict, enc: jax.Array) -> tuple[jax.Array, jax.Array]:
-    k = jnp.einsum("btd,dhk->bthk", enc, W(p["wk"]).astype(enc.dtype))
-    v = jnp.einsum("btd,dhk->bthk", enc, W(p["wv"]).astype(enc.dtype))
+    k = matvec(p["wk"], enc)
+    v = matvec(p["wv"], enc)
     if "k_norm" in p:
         k = rmsnorm(k, p["k_norm"])
     return k, v
@@ -286,10 +288,10 @@ def mlp_descs(d: int, ff: int, dtype=jnp.float32) -> dict:
 
 
 def mlp(p: dict, x: jax.Array) -> jax.Array:
-    g = jax.nn.silu(x @ W(p["wg"]).astype(x.dtype))
-    u = x @ W(p["wu"]).astype(x.dtype)
+    g = jax.nn.silu(matvec(p["wg"], x))
+    u = matvec(p["wu"], x)
     g = constrain(g, ("batch", "seq_act", "mlp"))
-    return constrain((g * u) @ W(p["wd"]).astype(x.dtype), ("batch", "seq_act", None))
+    return constrain(matvec(p["wd"], g * u), ("batch", "seq_act", None))
 
 
 # --------------------------------------------------------------------------
@@ -379,7 +381,7 @@ def moe(
     # (Constraining the expert dim before the scatter makes SPMD fall back
     # to partial-scatter + full-buffer all-reduce; an unbatched 3-index
     # scatter makes it all-gather the 68 GB update tensor — both measured
-    # on qwen3-moe, see EXPERIMENTS.md §Perf.)
+    # on qwen3-moe via benchmarks/hillclimb.py --change moe_local.)
     buf = jnp.zeros((shards, e, cap + 1, d), xt.dtype)
     buf = constrain(buf, ("batch", None, None, None))
     buf = jax.vmap(lambda b0, ei, pi, xi: b0.at[ei, pi].add(xi))(
@@ -418,12 +420,12 @@ def embed_descs(vocab: int, d: int, dtype=jnp.float32) -> dict:
 
 
 def embed(p: dict, tokens: jax.Array, dtype) -> jax.Array:
-    x = jnp.take(p["tok"], tokens, axis=0).astype(dtype)
+    x = jnp.take(W(p["tok"]), tokens, axis=0).astype(dtype)
     return constrain(x, ("batch", "seq_act", None))
 
 
 def lm_head(p: dict, x: jax.Array) -> jax.Array:
-    logits = (x @ W(p["head"]).astype(x.dtype)).astype(jnp.float32)
+    logits = matvec(p["head"], x).astype(jnp.float32)
     return constrain(logits, ("batch", "seq_act", "vocab"))
 
 

@@ -16,3 +16,24 @@ __all__ = [
     "pack_pytree_wire",
     "unpack_pytree_wire",
 ]
+
+from repro.quant.store import (
+    DenseWeight,
+    PackedWeight,
+    QSQWeight,
+    WeightStore,
+    dense_tree,
+    is_store,
+    quantize_tree,
+    serve_tree,
+    set_packed_matmul_kernel,
+    tree_bits_report,
+    tree_from_wire,
+    tree_to_wire,
+)
+
+__all__ += [
+    "WeightStore", "DenseWeight", "QSQWeight", "PackedWeight", "is_store",
+    "quantize_tree", "dense_tree", "serve_tree", "tree_bits_report",
+    "tree_to_wire", "tree_from_wire", "set_packed_matmul_kernel",
+]

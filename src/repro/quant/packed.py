@@ -1,9 +1,11 @@
 """Packed-weight serving: params as QSQ bit-planes + scales.
 
-Converts a model's param tree (and its descriptor tree) into the packed form
-consumed by ``models.layers.W``: each large weight whose contraction axis is
-a known logical axis ("embed" / "mlp" / "heads_inner") becomes
-``{"planes": int32 (.., K/32, 3, ..), "scales": f32 (.., K/G, ..)}``.
+Converts a model's param tree (and its descriptor tree) into the
+:class:`~repro.quant.store.PackedWeight` form consumed by
+``models.layers``: each large weight whose contraction axis is a known
+logical axis ("embed" / "mlp" / "heads_inner") becomes bit-planes
+``(.., K/32, 3, ..)`` + scales ``(.., K/G, ..)`` behind the uniform
+WeightStore API.
 
 Weights that stay dense: embeddings (gathered, not matmul'd), routers
 (tiny + fp32-sensitive), attention output projections (contraction spans
@@ -12,7 +14,8 @@ heads x head_dim — would need a reshape view), norms/biases, conv kernels.
 This is the dry-run/serving realization of the paper's "model crosses the
 channel in 3-bit form and is decoded by shift/scale on chip": the serve_step
 *arguments* carry ~3.2-5 bits per packed weight instead of 16, which is the
-HBM-residency and weight-streaming win measured in EXPERIMENTS.md §Perf.
+HBM-residency and weight-streaming win measured by
+``benchmarks/bench_serve.py`` and the §Perf dry-run cells.
 """
 from __future__ import annotations
 
@@ -23,16 +26,9 @@ import jax.numpy as jnp
 from repro.core import codec
 from repro.core.qsq import QSQConfig, quantize
 from repro.models.base import ParamDesc, _is_desc
-
-CONTRACT_AXES = ("embed", "mlp", "heads_inner")
-EXCLUDE_PATHS = ("tok", "router", "conv", "norm", "a_log", "dt_bias")
-
-
-def _contract_idx(d: ParamDesc) -> int | None:
-    for i, name in enumerate(d.axes):
-        if name in CONTRACT_AXES:
-            return i
-    return None
+from repro.quant.store import (  # noqa: F401 — axes/paths re-exported
+    CONTRACT_AXES, EXCLUDE_PATHS, PackedWeight, contract_idx, kernel_eligible,
+)
 
 
 def _fit_group(k: int, group_size: int) -> int:
@@ -43,29 +39,23 @@ def _fit_group(k: int, group_size: int) -> int:
 
 
 def _should_pack(path: str, d: ParamDesc, min_numel: int) -> bool:
-    if any(e in path for e in EXCLUDE_PATHS):
-        return False
     if int(np.prod(d.shape)) < min_numel:
         return False
-    idx = _contract_idx(d)
-    if idx is None:
-        return False
-    # every axis before the contraction must be a stack axis ("layers" or an
-    # anonymous nested-stack axis) — rules out e.g. wo (heads, hd, embed),
-    # whose "embed" is the OUTPUT dim, not the contraction.
-    if any(a not in ("layers", None) for a in d.axes[:idx]):
-        return False
-    return d.shape[idx] % codec.PLANE_GROUP == 0
+    return kernel_eligible(path, d)
 
 
 def packed_param_descs(descs, group_size: int = 64, min_numel: int = 65536):
-    """Descriptor tree for the packed form (dry-run abstract inputs)."""
+    """Descriptor tree for the packed form (dry-run abstract inputs).
+
+    Packed leaves become PackedWeight nodes whose children are ParamDesc, so
+    ``abstract_params`` / ``partition_specs`` descend into them and the
+    jitted serve step takes PackedWeight arguments directly."""
 
     def leaf(path, d: ParamDesc):
         p = jax.tree_util.keystr(path)
         if not _should_pack(p, d, min_numel):
             return d
-        idx = _contract_idx(d)
+        idx = contract_idx(d)
         k = d.shape[idx]
         g = _fit_group(k, group_size)
         prefix_s, rest_s = d.shape[:idx], d.shape[idx + 1:]
@@ -74,27 +64,28 @@ def packed_param_descs(descs, group_size: int = 64, min_numel: int = 65536):
         # (FSDP over dp) — otherwise packed weights end up LESS sharded
         # than dense ones and per-device argument bytes grow 3x.
         cname = d.axes[idx]
-        return {
-            "planes": ParamDesc(prefix_s + (k // codec.PLANE_GROUP, 3) + rest_s,
-                                prefix_a + (cname, None) + rest_a,
-                                dtype=jnp.int32, init="zeros"),
-            "scales": ParamDesc(prefix_s + (k // g,) + rest_s,
-                                prefix_a + (cname,) + rest_a,
-                                dtype=jnp.float32, init="zeros"),
-        }
+        return PackedWeight(
+            planes=ParamDesc(prefix_s + (k // codec.PLANE_GROUP, 3) + rest_s,
+                             prefix_a + (cname, None) + rest_a,
+                             dtype=jnp.int32, init="zeros"),
+            scales=ParamDesc(prefix_s + (k // g,) + rest_s,
+                             prefix_a + (cname,) + rest_a,
+                             dtype=jnp.float32, init="zeros"),
+            group_size=g, phi=4, rest_ndim=len(rest_s),
+        )
 
     return jax.tree_util.tree_map_with_path(leaf, descs, is_leaf=_is_desc)
 
 
 def pack_params(params, descs, group_size: int = 64, min_numel: int = 65536,
                 phi: int = 4, refit_alpha: bool = True):
-    """Real-array packing (serving engine load path)."""
+    """Real-array packing (serving engine load path) -> PackedWeight leaves."""
 
     def leaf(path, w, d: ParamDesc):
         p = jax.tree_util.keystr(path)
         if not _should_pack(p, d, min_numel):
             return w
-        idx = _contract_idx(d)
+        idx = contract_idx(d)
         k = d.shape[idx]
         g = _fit_group(k, group_size)
         cfg = QSQConfig(phi=phi, group_size=g, refit_alpha=refit_alpha)
@@ -107,7 +98,8 @@ def pack_params(params, descs, group_size: int = 64, min_numel: int = 65536,
         for _ in range(idx):  # vmap over stacked layer axes
             fn = jax.vmap(fn)
         planes, scales = fn(w)
-        return {"planes": planes, "scales": scales}
+        return PackedWeight(planes=planes, scales=scales, group_size=g,
+                            phi=phi, rest_ndim=len(d.shape) - idx - 1)
 
     return jax.tree_util.tree_map_with_path(leaf, params, descs)
 
@@ -124,7 +116,7 @@ def packed_bits_report(descs, group_size: int = 64, min_numel: int = 65536) -> d
         dense_bits += bits
         p = jax.tree_util.keystr(path)
         if _should_pack(p, d, min_numel):
-            idx = _contract_idx(d)
+            idx = contract_idx(d)
             k = d.shape[idx]
             g = _fit_group(k, group_size)
             packed_bits += 3 * numel + 32 * (numel // g)

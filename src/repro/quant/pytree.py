@@ -1,10 +1,16 @@
-"""QSQ over parameter pytrees.
+"""QSQ over parameter pytrees — legacy API over :mod:`repro.quant.store`.
 
 This is the "encode the model before the channel, decode at the edge" layer
 of the paper, generalized: any JAX param pytree can be converted to a
 :class:`QuantizedParams` store (3-bit codes + scalars for quantized leaves,
 untouched leaves kept as-is), shipped (checkpoint / DCN / broadcast), and
-decoded back — or fed *packed* into the Pallas fused dequant-matmul.
+decoded back — or served *packed* through the Pallas fused dequant-matmul.
+
+The leaf representations and the wire codec live in
+:mod:`repro.quant.store` (the unified ``WeightStore``); this module keeps
+the established pytree-level entry points, now producing
+:class:`~repro.quant.store.QSQWeight` leaves (a ``QSQTensor`` subclass, so
+existing isinstance checks keep working).
 """
 from __future__ import annotations
 
@@ -12,12 +18,10 @@ import dataclasses
 from typing import Any
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core import codec
-from repro.core.policy import QuantPolicy, path_str
-from repro.core.qsq import QSQTensor, dequantize, quantize
+from repro.core.policy import QuantPolicy
+from repro.core.qsq import QSQTensor
+from repro.quant import store as _store
 
 
 @jax.tree_util.register_pytree_node_class
@@ -25,7 +29,7 @@ from repro.core.qsq import QSQTensor, dequantize, quantize
 class QuantizedParams:
     """A param pytree where selected leaves are QSQTensor, others raw arrays."""
 
-    tree: Any  # pytree with QSQTensor and jax.Array leaves
+    tree: Any  # pytree with QSQWeight/QSQTensor and jax.Array leaves
 
     def tree_flatten(self):
         return (self.tree,), None
@@ -38,140 +42,45 @@ class QuantizedParams:
         return dequantize_pytree(self, like)
 
 
-def _conv_view(leaf):
-    """(kh, kw, cin, cout) -> channel-major view (cin, kh*kw*cout).
-
-    The paper's Fig. 5 vectors run across channels of the convolution
-    filters; QSQ groups along the leading axis, so put cin first."""
-    w = jnp.moveaxis(leaf, 2, 0)
-    return w.reshape(w.shape[0], -1)
-
-
-def _conv_unview(levels_like, conv_shape):
-    kh, kw, cin, cout = conv_shape
-    return jnp.moveaxis(levels_like.reshape(cin, kh, kw, cout), 0, 2)
-
-
-def quantize_pytree(params, policy: QuantPolicy) -> QuantizedParams:
+def quantize_pytree(params, policy: QuantPolicy, descs=None) -> QuantizedParams:
     """Quantize every leaf the policy selects; keep the rest untouched.
 
-    4-D conv weights are quantized in the channel-major view (Fig. 5)."""
-
-    def _leaf(path, leaf):
-        view = _conv_view(leaf) if leaf.ndim == 4 else leaf
-        cfg = policy.config_for(path_str(path), view.shape)
-        if cfg is None:
-            return leaf
-        q = quantize(view, cfg)
-        if leaf.ndim == 4:
-            q = QSQTensor(levels=q.levels, scales=q.scales,
-                          group_size=q.group_size, phi=q.phi,
-                          conv_shape=tuple(leaf.shape))
-        return q
-
-    tree = jax.tree_util.tree_map_with_path(_leaf, params)
-    return QuantizedParams(tree=tree)
+    With ``descs`` (ParamDesc tree), matmul weights are grouped along their
+    contraction axis (serving-kernel layout); without, grouping runs along
+    axis 0, and 4-D conv weights use the channel-major view (Fig. 5).
+    """
+    return QuantizedParams(tree=_store.quantize_tree(params, policy, descs))
 
 
 def dequantize_pytree(qp: QuantizedParams, like=None):
-    """Decode every QSQTensor leaf back to a dense array.
+    """Decode every quantized leaf back to a dense array.
 
     ``like`` (optional pytree of arrays or ShapeDtypeStructs) supplies target
     dtypes; defaults to f32 for quantized leaves.
     """
-    def _leaf(leaf, ref=None):
-        if isinstance(leaf, QSQTensor):
-            dtype = ref.dtype if ref is not None else jnp.float32
-            w = dequantize(leaf, dtype=dtype)
-            if leaf.conv_shape is not None:
-                w = _conv_unview(w, leaf.conv_shape)
-            return w
-        return leaf
-
-    if like is None:
-        return jax.tree_util.tree_map(
-            _leaf, qp.tree, is_leaf=lambda x: isinstance(x, QSQTensor)
-        )
-    return jax.tree_util.tree_map(
-        _leaf, qp.tree, like, is_leaf=lambda x: isinstance(x, QSQTensor)
-    )
+    return _store.dense_tree(qp.tree, like)
 
 
 def pytree_bits_report(params, qp: QuantizedParams) -> dict:
     """Eq. 11/12 accounting over a whole model (drives Fig. 9 at LLM scale)."""
     full_bits = 0
-    q_bits = 0
-    n_quantized = 0
-    n_total = 0
     for leaf in jax.tree_util.tree_leaves(params):
         full_bits += 8 * leaf.size * leaf.dtype.itemsize
-    for leaf in jax.tree_util.tree_leaves(
-        qp.tree, is_leaf=lambda x: isinstance(x, QSQTensor)
-    ):
-        n_total += 1
-        if isinstance(leaf, QSQTensor):
-            q_bits += leaf.nbits()
-            n_quantized += 1
-        else:
-            q_bits += 8 * leaf.size * leaf.dtype.itemsize
+    rep = _store.tree_bits_report(qp.tree)
     return {
         "full_bits": full_bits,
-        "quantized_bits": q_bits,
-        "memory_savings": 1.0 - q_bits / max(full_bits, 1),
-        "n_quantized_leaves": n_quantized,
-        "n_leaves": n_total,
+        "quantized_bits": rep["bits"],
+        "memory_savings": 1.0 - rep["bits"] / max(full_bits, 1),
+        "n_quantized_leaves": rep["n_store_leaves"],
+        "n_leaves": rep["n_leaves"],
     }
 
 
-# --------------------------------------------------------------------------
-# Wire form: every QSQTensor leaf -> {packed int32 words, scales, meta}.
-# This is what the checkpoint writer stores and what crosses DCN in the
-# gradient-compression path.
-# --------------------------------------------------------------------------
 def pack_pytree_wire(qp: QuantizedParams):
     """QuantizedParams -> (pytree of wire dicts / raw arrays)."""
-
-    def _leaf(leaf):
-        if not isinstance(leaf, QSQTensor):
-            return leaf
-        codes = leaf.codes().reshape(-1)
-        return {
-            "__qsq__": True,
-            "packed": codec.pack_dense(codes, bits=3),
-            "scales": leaf.scales,
-            "shape": tuple(leaf.levels.shape),
-            "group_size": leaf.group_size,
-            "phi": leaf.phi,
-            "conv_shape": tuple(leaf.conv_shape) if leaf.conv_shape else (),
-        }
-
-    return jax.tree_util.tree_map(
-        _leaf, qp.tree, is_leaf=lambda x: isinstance(x, QSQTensor)
-    )
+    return _store.tree_to_wire(qp.tree)
 
 
 def unpack_pytree_wire(wire) -> QuantizedParams:
-    """Inverse of :func:`pack_pytree_wire`."""
-
-    def _is_wire(x):
-        return isinstance(x, dict) and x.get("__qsq__") is True
-
-    def _leaf(leaf):
-        if not _is_wire(leaf):
-            return leaf
-        n = int(np.prod(leaf["shape"]))
-        codes = codec.unpack_dense(leaf["packed"], n).reshape(leaf["shape"])
-        from repro.core.qsq import codes_to_levels
-
-        return QSQTensor(
-            levels=codes_to_levels(codes),
-            scales=leaf["scales"],
-            group_size=leaf["group_size"],
-            phi=leaf["phi"],
-            conv_shape=(tuple(int(x) for x in leaf["conv_shape"])
-                        if len(leaf.get("conv_shape", ())) else None),
-        )
-
-    return QuantizedParams(
-        tree=jax.tree_util.tree_map(_leaf, wire, is_leaf=_is_wire)
-    )
+    """Inverse of :func:`pack_pytree_wire` (lossless)."""
+    return QuantizedParams(tree=_store.tree_from_wire(wire))

@@ -1,0 +1,546 @@
+"""Unified WeightStore: one leaf API over the three QSQ weight forms.
+
+A model parameter can live in three interchangeable representations:
+
+* **dense**  — a plain array (``DenseWeight`` or a raw ``jax.Array``),
+* **qsq**    — signed QSQ levels + per-group scalars (``QSQWeight``, the
+  transport/checkpoint form: human-readable int8 levels),
+* **packed** — 3-bit bit-planes + per-group scalars (``PackedWeight``, the
+  HBM/serving form the Pallas fused dequant-matmul consumes directly).
+
+Every leaf exposes the same surface — ``as_dense()``, ``matmul(x)``,
+``nbits()`` — and is a registered pytree node, so whole param trees mix
+representations freely, flow through ``jax.lax.scan`` (stacked layer axes
+are sliced off the array children; the aux metadata is stack-invariant),
+and jit/pjit like any array tree.
+
+Grouping geometry: ``rest_ndim`` counts the trailing output dims after the
+grouped (contraction) axis.  The number of leading stack axes is derived
+from the arrays at use time (``ndim - 1 - rest_ndim``), so a leaf sliced by
+a layer scan decodes itself correctly without metadata rewrites.
+
+Tree-level helpers quantize a param pytree under a :class:`QuantPolicy`
+(grouping along the true contraction axis when descriptors are supplied),
+convert to/from the 3-bit wire format, and build serving trees that keep
+kernel-eligible weights packed end-to-end.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codec
+from repro.core.policy import QuantPolicy, path_str
+from repro.core.qsq import (
+    QSQTensor, _quantize_impl, bits_per_code, codes_to_levels, levels_to_codes,
+    quantize,
+)
+
+# Logical axes a 2-D-view matmul contracts over, and path fragments that
+# must never be served packed (gathered embeddings, routers, convs, norms,
+# SSM decay params; attention wo contracts over heads x head_dim jointly and
+# is excluded by the stack-prefix rule below).
+CONTRACT_AXES = ("embed", "mlp", "heads_inner")
+STACK_AXES = ("layers", None)
+EXCLUDE_PATHS = ("tok", "router", "conv", "norm", "a_log", "dt_bias")
+
+
+def _is_desc(x) -> bool:
+    # duck-typed ParamDesc check (avoids importing repro.models here, which
+    # would create an import cycle models.layers -> quant.store -> models)
+    return hasattr(x, "axes") and hasattr(x, "shape") and hasattr(x, "dtype")
+
+
+def contract_idx(desc) -> int | None:
+    """Index of the first contraction axis in a ParamDesc, else None."""
+    for i, name in enumerate(desc.axes):
+        if name in CONTRACT_AXES:
+            return i
+    return None
+
+
+def kernel_eligible(path: str, desc) -> bool:
+    """True if this param can be served as bit-planes through qsq_matmul:
+    the contraction axis is leading (after scan-stack axes only) and its
+    length is a multiple of the 32-code plane word."""
+    if any(e in path for e in EXCLUDE_PATHS):
+        return False
+    idx = contract_idx(desc)
+    if idx is None:
+        return False
+    if any(a not in STACK_AXES for a in desc.axes[:idx]):
+        return False
+    return desc.shape[idx] % codec.PLANE_GROUP == 0
+
+
+def _largest_tile(n: int, pref: int, mult: int = 1) -> int | None:
+    """Largest divisor of n that is <= pref and a multiple of mult."""
+    for t in range(min(pref, n), 0, -1):
+        if n % t == 0 and t % mult == 0:
+            return t
+    return None
+
+
+def _conv_view(leaf):
+    """(kh, kw, cin, cout) -> channel-major view (cin, kh*kw*cout) (Fig. 5)."""
+    w = jnp.moveaxis(leaf, 2, 0)
+    return w.reshape(w.shape[0], -1)
+
+
+def _conv_unview(levels_like, conv_shape):
+    kh, kw, cin, cout = conv_shape
+    return jnp.moveaxis(levels_like.reshape(cin, kh, kw, cout), 0, 2)
+
+
+# --------------------------------------------------------------------------
+# Leaf representations
+# --------------------------------------------------------------------------
+class WeightStore:
+    """Uniform API over the dense / qsq / packed leaf representations."""
+
+    kind: str = "?"
+
+    def as_dense(self, dtype=jnp.float32) -> jax.Array:
+        raise NotImplementedError
+
+    def matmul(self, x: jax.Array) -> jax.Array:
+        """x (..., K) contracted with this weight (K, *rest) -> (..., *rest)."""
+        raise NotImplementedError
+
+    def nbits(self) -> int:
+        """Total stored bits of this representation."""
+        raise NotImplementedError
+
+
+def is_store(x) -> bool:
+    return isinstance(x, WeightStore)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DenseWeight(WeightStore):
+    """A dense array behind the WeightStore API."""
+
+    value: jax.Array
+    kind = "dense"
+
+    def tree_flatten(self):
+        return (self.value,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(value=children[0])
+
+    @property
+    def shape(self):
+        return self.value.shape
+
+    def as_dense(self, dtype=jnp.float32):
+        return self.value.astype(dtype)
+
+    def matmul(self, x):
+        return jnp.tensordot(x, self.value.astype(x.dtype), axes=1)
+
+    def nbits(self) -> int:
+        return int(8 * self.value.size * jnp.dtype(self.value.dtype).itemsize)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QSQWeight(QSQTensor, WeightStore):
+    """QSQ levels + scales, grouping axis anywhere (not just axis 0).
+
+    Extends :class:`QSQTensor` (so legacy isinstance checks keep working)
+    with ``rest_ndim``: the number of trailing dims after the grouped axis.
+    ``None`` means legacy axis-0 grouping (``levels.ndim - 1``).  Leading
+    stack axes (scan-stacked layers) are whatever remains; they are derived
+    from the array rank at call time, which makes scan slicing transparent.
+    """
+
+    rest_ndim: int | None = None
+    kind = "qsq"
+
+    def tree_flatten(self):
+        return (self.levels, self.scales), (
+            self.group_size, self.phi, self.conv_shape, self.rest_ndim,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        levels, scales = children
+        return cls(levels=levels, scales=scales, group_size=aux[0],
+                   phi=aux[1], conv_shape=aux[2], rest_ndim=aux[3])
+
+    @classmethod
+    def from_tensor(cls, q: QSQTensor, rest_ndim: int | None = None):
+        return cls(levels=q.levels, scales=q.scales, group_size=q.group_size,
+                   phi=q.phi, conv_shape=q.conv_shape, rest_ndim=rest_ndim)
+
+    def _rest(self) -> int:
+        return self.rest_ndim if self.rest_ndim is not None else self.levels.ndim - 1
+
+    def _stack(self) -> int:
+        return self.levels.ndim - 1 - self._rest()
+
+    def as_dense(self, dtype=jnp.float32):
+        def dq(lev, sc):
+            ng = sc.shape[0]
+            g = lev.shape[0] // max(ng, 1)
+            out = lev.astype(jnp.float32).reshape(ng, g, *lev.shape[1:]) * sc[:, None]
+            return out.reshape(lev.shape)
+
+        fn = dq
+        for _ in range(self._stack()):
+            fn = jax.vmap(fn)
+        w = fn(self.levels, self.scales)
+        if self.conv_shape is not None:
+            w = _conv_unview(w, self.conv_shape)
+        return w.astype(dtype)
+
+    # override QSQTensor.dequantize (axis-0 only) with the rank-aware decode
+    def dequantize(self, dtype=jnp.float32):
+        return self.as_dense(dtype)
+
+    def matmul(self, x):
+        return jnp.tensordot(x, self.as_dense(x.dtype), axes=1)
+
+    def pack(self) -> "PackedWeight":
+        """-> bit-plane form.  The grouped axis length must be 32-aligned."""
+        if self.conv_shape is not None:
+            raise ValueError("conv-view QSQ weights are not kernel-servable")
+
+        def enc(lev):
+            return codec.pack_bitplane(levels_to_codes(lev))
+
+        fn = enc
+        for _ in range(self._stack()):
+            fn = jax.vmap(fn)
+        return PackedWeight(planes=fn(self.levels), scales=self.scales,
+                            group_size=self.group_size, phi=self.phi,
+                            rest_ndim=self._rest())
+
+    # nbits() inherited from QSQTensor (same accounting for any grouping).
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedWeight(WeightStore):
+    """Bit-plane packed 3-bit codes + per-group scalars — the serving form.
+
+    planes: (*stack, K//32, 3, *rest) int32, scales: (*stack, K//G, *rest)
+    f32.  ``matmul`` feeds the Pallas fused dequant-matmul (interpret mode
+    off-TPU) so dense weights never materialize in HBM; decode happens in
+    VREGs next to the MXU, per the paper's Table II shift-and-scale decoder.
+    """
+
+    planes: jax.Array
+    scales: jax.Array
+    group_size: int
+    phi: int
+    rest_ndim: int = 0
+    kind = "packed"
+
+    def tree_flatten(self):
+        return (self.planes, self.scales), (self.group_size, self.phi, self.rest_ndim)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        planes, scales = children
+        return cls(planes=planes, scales=scales, group_size=aux[0], phi=aux[1],
+                   rest_ndim=aux[2])
+
+    def _stack(self) -> int:
+        return self.planes.ndim - 2 - self.rest_ndim
+
+    @property
+    def shape(self):
+        """Logical dense shape."""
+        st = self._stack()
+        k = self.planes.shape[st] * codec.PLANE_GROUP
+        return self.planes.shape[:st] + (k,) + self.planes.shape[st + 2:]
+
+    def unpack(self) -> QSQWeight:
+        def dec(pl_):
+            return codes_to_levels(codec.unpack_bitplane(pl_))
+
+        fn = dec
+        for _ in range(self._stack()):
+            fn = jax.vmap(fn)
+        return QSQWeight(levels=fn(self.planes), scales=self.scales,
+                         group_size=self.group_size, phi=self.phi,
+                         rest_ndim=self.rest_ndim)
+
+    def as_dense(self, dtype=jnp.float32):
+        return self.unpack().as_dense(dtype)
+
+    def matmul(self, x):
+        if self._stack():
+            raise ValueError(
+                "matmul on a stacked PackedWeight — slice the stack axis "
+                "(e.g. via the layer scan) first"
+            )
+        rest = self.planes.shape[2:]
+        k = self.planes.shape[0] * codec.PLANE_GROUP
+        if x.shape[-1] != k:
+            raise ValueError(f"x last dim {x.shape[-1]} != K {k}")
+        n = int(np.prod(rest)) if rest else 1
+        ng = self.scales.shape[0]
+        g = k // ng
+        lead = x.shape[:-1]
+        m = int(np.prod(lead)) if lead else 1
+
+        bm = _largest_tile(m, 256)
+        bn = _largest_tile(n, 256)
+        bk = _largest_tile(k, 512, mult=(codec.PLANE_GROUP * g) // math.gcd(codec.PLANE_GROUP, g))
+        if not _PACKED_MATMUL_KERNEL or bk is None or bm is None or bn is None:
+            return jnp.tensordot(x, self.as_dense(x.dtype), axes=1)
+
+        from repro.kernels import ops  # deferred: keeps pallas off cold paths
+
+        out = ops.qsq_matmul(
+            x.reshape(m, k),
+            self.planes.reshape(k // codec.PLANE_GROUP, 3, n),
+            self.scales.reshape(ng, n),
+            group_size=g, bm=bm, bk=bk, bn=bn,
+        )
+        return out.astype(x.dtype).reshape(*lead, *rest)
+
+    def nbits(self) -> int:
+        return int(32 * (self.planes.size + self.scales.size))
+
+
+# The kernel routing switch: benchmarks/tests flip this to compare the fused
+# kernel against the XLA dequant+matmul on identical PackedWeight trees.
+_PACKED_MATMUL_KERNEL = True
+
+
+def set_packed_matmul_kernel(enabled: bool) -> None:
+    global _PACKED_MATMUL_KERNEL
+    _PACKED_MATMUL_KERNEL = bool(enabled)
+
+
+# --------------------------------------------------------------------------
+# Tree-level: quantize under a policy (contraction-aware when descs given)
+# --------------------------------------------------------------------------
+def quantize_tree(params, policy: QuantPolicy, descs=None):
+    """Quantize selected leaves of a param pytree -> QSQWeight leaves.
+
+    With ``descs`` (the model's ParamDesc tree), kernel-eligible matmul
+    weights are grouped along their true contraction axis — vmapped over
+    leading scan-stack axes — which is the layout both the wire format and
+    the serving kernel want.  Other selected leaves (and everything when
+    ``descs`` is None) keep the legacy axis-0 grouping; 4-D conv kernels are
+    grouped in the channel-major view (paper Fig. 5).
+    """
+
+    def _eligible_leaf(path, leaf, desc):
+        idx = contract_idx(desc)
+        cfg = policy.config_for(path, leaf.shape[idx:])
+        if cfg is None:
+            return leaf
+
+        def enc(w):
+            return _quantize_impl(
+                w, phi=cfg.phi, group_size=cfg.group_size, assign=cfg.assign,
+                delta=cfg.delta, gamma_frac=cfg.gamma_frac,
+                refit_alpha=cfg.refit_alpha,
+            )
+
+        fn = enc
+        for _ in range(idx):
+            fn = jax.vmap(fn)
+        levels, scales = fn(leaf)
+        return QSQWeight(levels=levels, scales=scales,
+                         group_size=cfg.group_size, phi=cfg.phi,
+                         rest_ndim=leaf.ndim - idx - 1)
+
+    def _legacy_leaf(path, leaf):
+        view = _conv_view(leaf) if leaf.ndim == 4 else leaf
+        cfg = policy.config_for(path, view.shape)
+        if cfg is None:
+            return leaf
+        q = quantize(view, cfg)
+        if leaf.ndim == 4:
+            q = dataclasses.replace(q, conv_shape=tuple(leaf.shape))
+        return QSQWeight.from_tensor(q, rest_ndim=q.levels.ndim - 1)
+
+    if descs is None:
+        return jax.tree_util.tree_map_with_path(
+            lambda p, l: _legacy_leaf(path_str(p), l), params
+        )
+
+    def _leaf(path, leaf, desc):
+        p = path_str(path)
+        if _is_desc(desc) and kernel_eligible(p, desc):
+            return _eligible_leaf(p, leaf, desc)
+        return _legacy_leaf(p, leaf)
+
+    return jax.tree_util.tree_map_with_path(_leaf, params, descs)
+
+
+def dense_tree(tree, like=None):
+    """Decode every WeightStore/QSQTensor leaf to dense (others untouched).
+
+    ``like`` (optional matching pytree of arrays/ShapeDtypeStructs) supplies
+    target dtypes; defaults to f32.  Plain :class:`QSQTensor` leaves (from
+    direct ``core.qsq.quantize`` calls) decode with their legacy axis-0
+    grouping, conv view included.
+    """
+
+    def _decodable(x):
+        return is_store(x) or isinstance(x, QSQTensor)
+
+    def _leaf(leaf, ref=None):
+        dtype = ref.dtype if ref is not None else jnp.float32
+        if is_store(leaf):
+            return leaf.as_dense(dtype)
+        if isinstance(leaf, QSQTensor):
+            w = leaf.dequantize(dtype)
+            if leaf.conv_shape is not None:
+                w = _conv_unview(w, leaf.conv_shape)
+            return w
+        return leaf
+
+    if like is None:
+        return jax.tree_util.tree_map(_leaf, tree, is_leaf=_decodable)
+    return jax.tree_util.tree_map(_leaf, tree, like, is_leaf=_decodable)
+
+
+def serve_tree(tree, descs, dtype=None):
+    """Serving layout: pack kernel-eligible QSQ leaves, decode the rest.
+
+    This is what ``ServeEngine.from_wire`` holds: matmul weights stay in
+    3-bit bit-plane form end-to-end (decoded tile-by-tile inside the fused
+    kernel), while gathered/sensitive leaves (embeddings, norms, wo, convs)
+    are decoded once at load.  Returns (params_tree, n_packed).
+    """
+    n_packed = 0
+
+    def _leaf(path, leaf, desc):
+        nonlocal n_packed
+        if not is_store(leaf):
+            return leaf
+        p = path_str(path)
+        if (
+            isinstance(leaf, QSQWeight)
+            and leaf.conv_shape is None
+            and _is_desc(desc)
+            and kernel_eligible(p, desc)
+            # the wire must have been grouped along the contraction axis
+            # (legacy axis-0 wires fall back to dense decode)
+            and leaf._rest() == len(desc.shape) - contract_idx(desc) - 1
+            and leaf.levels.shape[contract_idx(desc)] % codec.PLANE_GROUP == 0
+        ):
+            n_packed += 1
+            return leaf.pack()
+        want = dtype if dtype is not None else getattr(desc, "dtype", jnp.float32)
+        return leaf.as_dense(want)
+
+    out = jax.tree_util.tree_map_with_path(
+        _leaf, tree, descs, is_leaf=lambda x: is_store(x)
+    )
+    return out, n_packed
+
+
+def tree_bits_report(tree) -> dict:
+    """Eq. 11/12 accounting over a mixed-representation tree."""
+    total_bits = 0
+    dense_bits = 0
+    n_store = 0
+    n_total = 0
+    for leaf in jax.tree_util.tree_leaves(tree, is_leaf=is_store):
+        n_total += 1
+        if is_store(leaf):
+            n_store += 1
+            total_bits += leaf.nbits()
+            dense_bits += int(8 * 4 * np.prod(leaf.shape))  # vs f32
+        else:
+            b = int(8 * leaf.size * jnp.dtype(leaf.dtype).itemsize)
+            total_bits += b
+            dense_bits += b
+    return {
+        "bits": total_bits,
+        "dense_bits": dense_bits,
+        "savings": 1.0 - total_bits / max(dense_bits, 1),
+        "n_store_leaves": n_store,
+        "n_leaves": n_total,
+    }
+
+
+# --------------------------------------------------------------------------
+# Wire form: QSQWeight <-> {packed int32 words, scales, meta} dict.
+# One codec for checkpoint export, DCN transfer and the serving load path.
+# --------------------------------------------------------------------------
+WIRE_FLAG = "__qsq__"
+
+
+def is_wire_leaf(x) -> bool:
+    return isinstance(x, dict) and bool(x.get(WIRE_FLAG, False))
+
+
+def wire_encode_leaf(q: QSQTensor) -> dict:
+    """Any QSQTensor/QSQWeight -> the dense-packed 3-bit wire dict."""
+    codes = levels_to_codes(q.levels).reshape(-1)
+    rest = q.rest_ndim if isinstance(q, QSQWeight) and q.rest_ndim is not None \
+        else q.levels.ndim - 1
+    return {
+        WIRE_FLAG: True,
+        "packed": codec.pack_dense(codes, bits=3),
+        "scales": q.scales,
+        "shape": tuple(int(s) for s in q.levels.shape),
+        "group_size": int(q.group_size),
+        "phi": int(q.phi),
+        "rest_ndim": int(rest),
+        "conv_shape": tuple(int(s) for s in q.conv_shape) if q.conv_shape else (),
+    }
+
+
+def wire_decode_leaf(d: dict) -> QSQWeight:
+    """Inverse of :func:`wire_encode_leaf` (lossless: codes + scales exact).
+
+    Tolerates legacy wire dicts (no rest_ndim => axis-0 grouping) and
+    npz-roundtripped metadata (numpy scalars/arrays instead of ints/tuples).
+    """
+    shape = tuple(int(s) for s in np.asarray(d["shape"]).reshape(-1))
+    n = int(np.prod(shape)) if shape else 1
+    codes = codec.unpack_dense(jnp.asarray(d["packed"]), n).reshape(shape)
+    conv = tuple(int(s) for s in np.asarray(d.get("conv_shape", ())).reshape(-1))
+    rest = d.get("rest_ndim", None)
+    return QSQWeight(
+        levels=codes_to_levels(codes),
+        scales=jnp.asarray(d["scales"]),
+        group_size=int(d["group_size"]),
+        phi=int(d["phi"]),
+        conv_shape=conv if conv else None,
+        rest_ndim=int(np.asarray(rest)) if rest is not None else None,
+    )
+
+
+def tree_to_wire(tree) -> Any:
+    """Store tree -> wire tree (raw leaves pass through untouched)."""
+
+    def _leaf(leaf):
+        if isinstance(leaf, PackedWeight):
+            return wire_encode_leaf(leaf.unpack())
+        if isinstance(leaf, QSQTensor):
+            return wire_encode_leaf(leaf)
+        if isinstance(leaf, DenseWeight):
+            return leaf.value
+        return leaf
+
+    return jax.tree_util.tree_map(
+        _leaf, tree, is_leaf=lambda x: is_store(x) or isinstance(x, QSQTensor)
+    )
+
+
+def tree_from_wire(wire) -> Any:
+    """Wire tree -> store tree with QSQWeight leaves."""
+    return jax.tree_util.tree_map(
+        lambda x: wire_decode_leaf(x) if is_wire_leaf(x) else x,
+        wire, is_leaf=is_wire_leaf,
+    )

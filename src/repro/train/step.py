@@ -62,3 +62,44 @@ def make_serve_step(model: Model) -> Callable:
         return next_tokens[:, None], cache
 
     return serve_step
+
+
+def make_cache_prefill_step(model: Model) -> Callable:
+    """(params, cache, tokens (B, S)) -> (cache, last_logits (B, V)).
+
+    Primes the KV/SSM cache for a whole prompt in ONE jitted lax.scan over
+    positions instead of a per-token Python loop — a single device program
+    with no host round-trips, for every model family that can decode."""
+
+    def prefill_step(params, cache, tokens):
+        def body(cache, tok):  # tok (B, 1)
+            logits, cache = model.decode(params, cache, {"tokens": tok})
+            return cache, logits[:, -1, :]
+
+        cache, logits = jax.lax.scan(
+            body, cache, jnp.moveaxis(tokens, 1, 0)[:, :, None]
+        )
+        return cache, logits[-1]
+
+    return prefill_step
+
+
+def make_decode_loop(model: Model) -> Callable:
+    """(params, cache, first (B,1), xs (T,)) -> (tokens (T, B), cache).
+
+    Greedy multi-token decode as one jitted lax.scan: T = len(xs) steps run
+    device-side back to back; the host syncs once, on the returned token
+    block.  ``first`` is the token sampled from the prefill logits; the
+    emitted row t is the token fed at step t (so row 0 == first)."""
+
+    def decode_loop(params, cache, first, xs):
+        def body(carry, _):
+            cur, cache = carry
+            logits, cache = model.decode(params, cache, {"tokens": cur})
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+            return (nxt, cache), cur[:, 0]
+
+        (_, cache), toks = jax.lax.scan(body, (first, cache), xs)
+        return toks, cache
+
+    return decode_loop

@@ -1,8 +1,17 @@
-"""CSD rounding / digit-count tests (the Quality Scalable Multiplier numerics)."""
+"""CSD rounding / digit-count tests (the Quality Scalable Multiplier numerics).
+
+Property tests use hypothesis when available, otherwise a fixed seed sweep.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on the environment
+    HAS_HYPOTHESIS = False
 
 from repro.core import csd
 
@@ -21,24 +30,43 @@ def test_powers_of_two_exact():
     np.testing.assert_array_equal(np.asarray(csd.csd_digit_count(x)), [1] * 6)
 
 
-@settings(deadline=None, max_examples=30)
-@given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 6))
-def test_property_error_decreases_with_digits(seed, k):
-    """Truncating fewer partial products can only reduce the error."""
+def _check_error_decreases_with_digits(seed, k):
     w = jax.random.normal(jax.random.PRNGKey(seed), (128,)) * 0.5
     e_k = float(jnp.sum((w - csd.csd_round(w, k)) ** 2))
     e_k1 = float(jnp.sum((w - csd.csd_round(w, k + 1)) ** 2))
     assert e_k1 <= e_k + 1e-9
 
 
-@settings(deadline=None, max_examples=30)
-@given(seed=st.integers(0, 2**31 - 1))
-def test_property_relative_error_bound(seed):
-    """1-digit CSD rounding is within 33% relative error (nearest PoT)."""
+def _check_relative_error_bound(seed):
     w = jax.random.uniform(jax.random.PRNGKey(seed), (128,), minval=1e-3, maxval=100.0)
     out = np.asarray(csd.csd_round(w, 1))
     rel = np.abs(out - np.asarray(w)) / np.asarray(w)
     assert (rel <= 1.0 / 3.0 + 1e-6).all()
+
+
+if HAS_HYPOTHESIS:
+
+    @settings(deadline=None, max_examples=30)
+    @given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 6))
+    def test_property_error_decreases_with_digits(seed, k):
+        """Truncating fewer partial products can only reduce the error."""
+        _check_error_decreases_with_digits(seed, k)
+
+    @settings(deadline=None, max_examples=30)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_property_relative_error_bound(seed):
+        """1-digit CSD rounding is within 33% relative error (nearest PoT)."""
+        _check_relative_error_bound(seed)
+
+else:
+
+    @pytest.mark.parametrize("seed,k", [(0, 1), (1, 2), (2, 4), (3, 6)])
+    def test_property_error_decreases_with_digits(seed, k):
+        _check_error_decreases_with_digits(seed, k)
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_property_relative_error_bound(seed):
+        _check_relative_error_bound(seed)
 
 
 def test_partial_product_savings_range():

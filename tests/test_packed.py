@@ -35,10 +35,12 @@ def test_packed_W_exact_roundtrip():
     from repro.core import codec
     from repro.core.qsq import QSQConfig, dequantize, quantize
     from repro.models.layers import W
+    from repro.quant.store import PackedWeight
 
     w = jax.random.normal(jax.random.PRNGKey(2), (64, 32)) * 0.1
     q = quantize(w, QSQConfig(phi=4, group_size=16, refit_alpha=True))
-    packed = {"planes": codec.pack_bitplane(q.codes()), "scales": q.scales}
+    packed = PackedWeight(planes=codec.pack_bitplane(q.codes()), scales=q.scales,
+                          group_size=16, phi=4, rest_ndim=1)
     np.testing.assert_allclose(
         np.asarray(W(packed)), np.asarray(dequantize(q)), rtol=1e-6
     )
@@ -75,6 +77,8 @@ def test_wo_and_embeddings_stay_dense():
     descs = model.param_descs()
     params = init_params(jax.random.PRNGKey(0), descs)
     packed = pack_params(params, descs, group_size=16, min_numel=1024)
-    assert not isinstance(packed["blocks"]["attn"]["wo"], dict)
-    assert not isinstance(packed["embed"]["tok"], dict)
-    assert isinstance(packed["embed"]["head"], dict)  # head IS packed
+    from repro.quant.store import PackedWeight
+
+    assert not isinstance(packed["blocks"]["attn"]["wo"], PackedWeight)
+    assert not isinstance(packed["embed"]["tok"], PackedWeight)
+    assert isinstance(packed["embed"]["head"], PackedWeight)  # head IS packed

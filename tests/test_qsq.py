@@ -1,9 +1,17 @@
-"""Unit + property tests for the QSQ quantizer (Eq. 5-10, Table II)."""
+"""Unit + property tests for the QSQ quantizer (Eq. 5-10, Table II).
+
+Property tests use hypothesis when available, otherwise a fixed seed sweep.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on the environment
+    HAS_HYPOTHESIS = False
 
 from repro.core import (
     LEVEL_TABLE, QSQConfig, codes_to_levels, dequantize, levels_for_phi,
@@ -105,15 +113,7 @@ def test_exhaustive_threshold_search_improves_or_ties():
 
 
 # ---------------------------------------------------------------- properties
-@settings(deadline=None, max_examples=25)
-@given(
-    seed=st.integers(0, 2**31 - 1),
-    phi=st.sampled_from([1, 2, 4]),
-    log_g=st.integers(0, 5),
-    scale=st.floats(1e-3, 10.0),
-)
-def test_property_reconstruction_bounded(seed, phi, log_g, scale):
-    """|w_hat| <= max_level * alpha and error <= |w| + |w_hat| elementwise."""
+def _check_reconstruction_bounded(seed, phi, log_g, scale):
     g = 2**log_g
     w = jax.random.normal(jax.random.PRNGKey(seed), (4 * g, 4)) * scale
     q = quantize(w, QSQConfig(phi=phi, group_size=g))
@@ -123,20 +123,14 @@ def test_property_reconstruction_bounded(seed, phi, log_g, scale):
     assert (np.abs(wh) <= bound + 1e-5).all()
 
 
-@settings(deadline=None, max_examples=25)
-@given(seed=st.integers(0, 2**31 - 1))
-def test_property_sign_preserved(seed):
-    """Quantization never flips a weight's sign (it may zero it)."""
+def _check_sign_preserved(seed):
     w = jax.random.normal(jax.random.PRNGKey(seed), (64, 4)) * 0.2
     q = quantize(w, QSQConfig(phi=4, group_size=16))
     prod = np.asarray(w) * np.asarray(q.levels).astype(np.float32)
     assert (prod >= -1e-9).all()
 
 
-@settings(deadline=None, max_examples=15)
-@given(seed=st.integers(0, 2**31 - 1), phi=st.sampled_from([1, 2, 4]))
-def test_property_scale_equivariance(seed, phi):
-    """quantize(c*w) == c * quantize(w) for c > 0 (alpha is linear in |w|)."""
+def _check_scale_equivariance(seed, phi):
     w = jax.random.normal(jax.random.PRNGKey(seed), (32, 4)) * 0.1
     c = 7.5
     q1 = quantize(w, QSQConfig(phi=phi, group_size=16))
@@ -145,17 +139,7 @@ def test_property_scale_equivariance(seed, phi):
     np.testing.assert_allclose(np.asarray(q2.scales), c * np.asarray(q1.scales), rtol=1e-5)
 
 
-def test_nbits_eq12():
-    w = _randw((64, 32), seed=7)
-    q = quantize(w, QSQConfig(phi=4, group_size=16))
-    # 3 bits per element + 32 per scalar group
-    assert q.nbits() == 3 * 64 * 32 + 32 * (64 // 16) * 32
-
-
-@settings(deadline=None, max_examples=20)
-@given(seed=st.integers(0, 2**31 - 1), phi=st.sampled_from([1, 2, 4]))
-def test_property_refit_never_worse(seed, phi):
-    """Least-squares alpha refit (beyond-paper) can only reduce Eq. 5 error."""
+def _check_refit_never_worse(seed, phi):
     import dataclasses
 
     w = jax.random.normal(jax.random.PRNGKey(seed), (64, 8)) * 0.15
@@ -165,3 +149,61 @@ def test_property_refit_never_worse(seed, phi):
         quantization_error(w, quantize(w, dataclasses.replace(base, refit_alpha=True)))
     )
     assert e_refit <= e_paper + 1e-5
+
+
+if HAS_HYPOTHESIS:
+
+    @settings(deadline=None, max_examples=25)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        phi=st.sampled_from([1, 2, 4]),
+        log_g=st.integers(0, 5),
+        scale=st.floats(1e-3, 10.0),
+    )
+    def test_property_reconstruction_bounded(seed, phi, log_g, scale):
+        """|w_hat| <= max_level * alpha and error <= |w| + |w_hat| elementwise."""
+        _check_reconstruction_bounded(seed, phi, log_g, scale)
+
+    @settings(deadline=None, max_examples=25)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_property_sign_preserved(seed):
+        """Quantization never flips a weight's sign (it may zero it)."""
+        _check_sign_preserved(seed)
+
+    @settings(deadline=None, max_examples=15)
+    @given(seed=st.integers(0, 2**31 - 1), phi=st.sampled_from([1, 2, 4]))
+    def test_property_scale_equivariance(seed, phi):
+        """quantize(c*w) == c * quantize(w) for c > 0 (alpha is linear in |w|)."""
+        _check_scale_equivariance(seed, phi)
+
+    @settings(deadline=None, max_examples=20)
+    @given(seed=st.integers(0, 2**31 - 1), phi=st.sampled_from([1, 2, 4]))
+    def test_property_refit_never_worse(seed, phi):
+        """Least-squares alpha refit (beyond-paper) can only reduce Eq. 5 error."""
+        _check_refit_never_worse(seed, phi)
+
+else:
+
+    @pytest.mark.parametrize("seed,phi,log_g,scale",
+                             [(0, 1, 0, 1e-3), (1, 2, 3, 0.1), (2, 4, 5, 10.0)])
+    def test_property_reconstruction_bounded(seed, phi, log_g, scale):
+        _check_reconstruction_bounded(seed, phi, log_g, scale)
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_property_sign_preserved(seed):
+        _check_sign_preserved(seed)
+
+    @pytest.mark.parametrize("seed,phi", [(0, 1), (1, 2), (2, 4)])
+    def test_property_scale_equivariance(seed, phi):
+        _check_scale_equivariance(seed, phi)
+
+    @pytest.mark.parametrize("seed,phi", [(0, 1), (1, 2), (2, 4)])
+    def test_property_refit_never_worse(seed, phi):
+        _check_refit_never_worse(seed, phi)
+
+
+def test_nbits_eq12():
+    w = _randw((64, 32), seed=7)
+    q = quantize(w, QSQConfig(phi=4, group_size=16))
+    # 3 bits per element + 32 per scalar group
+    assert q.nbits() == 3 * 64 * 32 + 32 * (64 // 16) * 32

@@ -68,3 +68,67 @@ def test_mamba_engine():
     eng = ServeEngine(model, params, ServeConfig(batch_slots=2))
     outs = eng.generate([[3, 1]], max_new=4)
     assert len(outs[0]) == 4
+
+
+def _smollm_class_model():
+    """smollm_135m-class dense config with 32-aligned dims so the qsq_matmul
+    kernel can serve every matmul weight packed (the smoke config's d=48 is
+    not plane-aligned)."""
+    import dataclasses
+
+    from repro.configs.base import ArchConfig
+
+    cfg = ArchConfig(name="smollm-like", family="dense", n_layers=2,
+                     d_model=64, n_heads=4, n_kv=2, d_ff=128, vocab=256,
+                     dtype=jnp.float32, remat=False)
+    model = Model(cfg)
+    params = init_params(jax.random.PRNGKey(0), model.param_descs())
+    return model, params
+
+
+def test_packed_engine_tokens_match_dense_exactly():
+    """Acceptance: ServeEngine.from_wire with packed leaves (Pallas
+    interpret mode on CPU) emits EXACTLY the tokens of the engine that
+    dense-dequantized the same wire."""
+    model, params = _smollm_class_model()
+    wire = pack_pytree_wire(quantize_pytree(
+        params,
+        QuantPolicy(base=QSQConfig(group_size=16, refit_alpha=True), min_numel=512),
+        model.param_descs(),
+    ))
+    eng_packed = ServeEngine.from_wire(model, wire, ServeConfig(batch_slots=4))
+    eng_dense = ServeEngine.from_wire(
+        model, wire, ServeConfig(batch_slots=4, packed=False)
+    )
+    # the packed engine really holds bit-planes, not a dequantized tree
+    from repro.quant.store import PackedWeight
+
+    assert eng_packed.n_packed_leaves >= 7
+    assert isinstance(eng_packed.params["blocks"]["mlp"]["wg"], PackedWeight)
+    assert isinstance(eng_packed.params["embed"]["head"], PackedWeight)
+    assert eng_dense.n_packed_leaves == 0
+
+    prompts = [[1, 2, 3], [9, 9], [100, 42, 7, 8]]
+    out_p = eng_packed.generate(prompts, max_new=16)
+    out_d = eng_dense.generate(prompts, max_new=16)
+    assert out_p == out_d
+
+
+def test_wire_export_load_serve_roundtrip(tmp_path):
+    """Checkpoint wire export -> load_wire -> packed engine, losslessly."""
+    from repro.checkpoint.manager import CheckpointConfig, CheckpointManager
+
+    model, params = _smollm_class_model()
+    policy = QuantPolicy(base=QSQConfig(group_size=16), min_numel=512)
+    mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path / "w"),
+                                             async_save=False))
+    mgr.export_wire(params, policy, descs=model.param_descs())
+    wire = mgr.load_wire()
+
+    eng_disk = ServeEngine.from_wire(model, wire, ServeConfig(batch_slots=2))
+    in_memory = pack_pytree_wire(quantize_pytree(params, policy,
+                                                 model.param_descs()))
+    eng_mem = ServeEngine.from_wire(model, in_memory, ServeConfig(batch_slots=2))
+    assert eng_disk.n_packed_leaves == eng_mem.n_packed_leaves > 0
+    assert (eng_disk.generate([[5, 6, 7]], max_new=8)
+            == eng_mem.generate([[5, 6, 7]], max_new=8))

@@ -1,0 +1,183 @@
+"""WeightStore: the unified dense / qsq / packed leaf representations.
+
+Covers the uniform leaf API (as_dense / matmul / nbits), contraction-aware
+tree quantization, the lossless wire codec, the packed serving layout, and
+scan-slicing of stacked packed leaves.  The round-trip property test runs
+under hypothesis when installed, else over a fixed case sweep.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on the environment
+    HAS_HYPOTHESIS = False
+
+from repro.core.policy import QuantPolicy
+from repro.core.qsq import QSQConfig, QSQTensor, bits_per_code, quantize
+from repro.models.base import ParamDesc
+from repro.quant import store
+
+
+def _stacked_params():
+    """A mini 'model': stacked mlp weight, wo-style weight, embedding, norm."""
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    params = {
+        "wg": jax.random.normal(ks[0], (3, 64, 96)) * 0.1,   # (L, K, F)
+        "wo": jax.random.normal(ks[1], (3, 4, 16, 64)) * 0.1,  # (L, h, hd, d)
+        "tok": jax.random.normal(ks[2], (128, 64)) * 0.1,
+        "norm": jnp.ones((64,)),
+    }
+    descs = {
+        "wg": ParamDesc((3, 64, 96), ("layers", "embed", "mlp")),
+        "wo": ParamDesc((3, 4, 16, 64), ("layers", "heads", None, "embed")),
+        "tok": ParamDesc((128, 64), ("vocab", "embed")),
+        "norm": ParamDesc((64,), (None,)),
+    }
+    return params, descs
+
+
+def _policy():
+    return QuantPolicy(base=QSQConfig(group_size=16, refit_alpha=True),
+                       min_numel=512)
+
+
+def test_quantize_tree_contraction_grouping():
+    params, descs = _stacked_params()
+    qt = store.quantize_tree(params, _policy(), descs)
+    wg = qt["wg"]
+    assert isinstance(wg, store.QSQWeight)
+    assert isinstance(wg, QSQTensor)  # legacy isinstance checks keep working
+    # grouped along the contraction axis (64), vmapped over the layer stack
+    assert wg.scales.shape == (3, 64 // 16, 96)
+    assert wg.rest_ndim == 1
+    # wo: contraction spans heads x hd -> not kernel-groupable; the legacy
+    # 4-D channel-major view applies and decodes back to the original shape
+    assert isinstance(qt["wo"], store.QSQWeight)
+    assert qt["wo"].conv_shape == (3, 4, 16, 64)
+    assert qt["wo"].as_dense().shape == (3, 4, 16, 64)
+    # norm excluded entirely
+    assert not store.is_store(qt["norm"])
+
+
+def test_uniform_leaf_api():
+    params, descs = _stacked_params()
+    qt = store.quantize_tree(params, _policy(), descs)
+    q = qt["wg"]
+    p = q.pack()
+    d = store.DenseWeight(value=q.as_dense())
+    for leaf in (q, p, d):
+        assert leaf.as_dense().shape == (3, 64, 96)
+        assert leaf.nbits() > 0
+    np.testing.assert_allclose(np.asarray(p.as_dense()), np.asarray(q.as_dense()),
+                               rtol=1e-6)
+    # packed is ~3.5 bits/weight, dense is 32
+    assert p.nbits() == q.nbits() < d.nbits() / 5
+
+
+def test_packed_matmul_matches_dense_after_scan_slice():
+    """Slicing the stack axis (what the layer scan does) must leave a leaf
+    whose kernel matmul equals x @ as_dense exactly."""
+    params, descs = _stacked_params()
+    qt = store.quantize_tree(params, _policy(), descs)
+    pw = qt["wg"].pack()
+    layer1 = jax.tree_util.tree_map(lambda a: a[1], pw)
+    assert isinstance(layer1, store.PackedWeight)
+    x = jax.random.normal(jax.random.PRNGKey(7), (5, 64))
+    out_k = layer1.matmul(x)
+    out_d = jnp.tensordot(x, layer1.as_dense(x.dtype), axes=1)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_d),
+                               rtol=2e-5, atol=2e-4)
+    # stacked leaves refuse a direct matmul instead of silently misdecoding
+    with pytest.raises(ValueError):
+        pw.matmul(x)
+
+
+def test_serve_tree_packs_only_kernel_eligible():
+    params, descs = _stacked_params()
+    qt = store.quantize_tree(params, _policy(), descs)
+    served, n_packed = store.serve_tree(qt, descs)
+    assert n_packed == 1
+    assert isinstance(served["wg"], store.PackedWeight)
+    # wo / tok decoded dense at load; norm untouched
+    assert isinstance(served["wo"], jax.Array)
+    assert served["wo"].shape == (3, 4, 16, 64)
+    assert isinstance(served["tok"], jax.Array)
+
+
+def test_wire_roundtrip_lossless_and_legacy_compatible():
+    params, descs = _stacked_params()
+    qt = store.quantize_tree(params, _policy(), descs)
+    wire = store.tree_to_wire(qt)
+    back = store.tree_from_wire(wire)
+    for k in ("wg", "wo"):
+        np.testing.assert_array_equal(np.asarray(qt[k].levels),
+                                      np.asarray(back[k].levels))
+        np.testing.assert_array_equal(np.asarray(qt[k].scales),
+                                      np.asarray(back[k].scales))
+        assert back[k].rest_ndim == (qt[k].rest_ndim
+                                     if qt[k].rest_ndim is not None
+                                     else qt[k].levels.ndim - 1)
+    # a legacy wire dict (no rest_ndim) decodes with axis-0 grouping
+    legacy = {k: v for k, v in wire["wo"].items() if k != "rest_ndim"}
+    lw = store.wire_decode_leaf(legacy)
+    np.testing.assert_allclose(np.asarray(lw.as_dense()),
+                               np.asarray(qt["wo"].as_dense()))
+
+
+def test_bits_report_counts_packed_leaves():
+    params, descs = _stacked_params()
+    qt = store.quantize_tree(params, _policy(), descs)
+    served, _ = store.serve_tree(qt, descs)
+    rep = store.tree_bits_report(served)
+    assert rep["n_store_leaves"] == 1
+    assert rep["n_leaves"] == 4
+    assert 0 < rep["savings"] < 1
+
+
+def _check_leaf_roundtrip(seed, phi, log_g, stack):
+    """quantize -> pack -> wire -> unpack -> pack must be lossless."""
+    g = 2 ** log_g
+    k = max(32, 4 * g)
+    shape = (2,) * stack + (k, 8)
+    w = jax.random.normal(jax.random.PRNGKey(seed), shape) * 0.2
+
+    def enc(w2):
+        q = quantize(w2, QSQConfig(phi=phi, group_size=g))
+        return q.levels, q.scales
+
+    fn = enc
+    for _ in range(stack):
+        fn = jax.vmap(fn)
+    levels, scales = fn(w)
+    q = store.QSQWeight(levels=levels, scales=scales, group_size=g, phi=phi,
+                        rest_ndim=1)
+    back = store.wire_decode_leaf(store.wire_encode_leaf(q))
+    np.testing.assert_array_equal(np.asarray(back.levels), np.asarray(q.levels))
+    np.testing.assert_array_equal(np.asarray(back.scales), np.asarray(q.scales))
+    p2 = back.pack().unpack()
+    np.testing.assert_array_equal(np.asarray(p2.levels), np.asarray(q.levels))
+    np.testing.assert_allclose(np.asarray(back.as_dense()),
+                               np.asarray(q.as_dense()))
+    assert q.nbits() == bits_per_code(phi) * levels.size + 32 * scales.size
+
+
+if HAS_HYPOTHESIS:
+
+    @settings(deadline=None, max_examples=25)
+    @given(seed=st.integers(0, 2**31 - 1), phi=st.sampled_from([1, 2, 4]),
+           log_g=st.integers(0, 5), stack=st.integers(0, 2))
+    def test_property_store_roundtrip(seed, phi, log_g, stack):
+        _check_leaf_roundtrip(seed, phi, log_g, stack)
+
+else:
+
+    @pytest.mark.parametrize("seed,phi,log_g,stack", [
+        (0, 4, 4, 0), (1, 4, 0, 1), (2, 2, 3, 2), (3, 1, 5, 1),
+    ])
+    def test_property_store_roundtrip(seed, phi, log_g, stack):
+        _check_leaf_roundtrip(seed, phi, log_g, stack)
