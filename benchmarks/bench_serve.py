@@ -1,30 +1,31 @@
-"""Serve-latency benchmark: dense engine vs packed-wire engine.
+"""Serve-latency benchmark: dense vs packed engines, plus the quality dial.
 
-Builds a smollm-class (32-aligned) model, ships it through the QSQ wire,
-and times `ServeEngine.generate` for (a) the exact dense engine, (b) the
-wire engine with full dense decode at load, and (c) the wire engine serving
-packed bit-planes end-to-end.  On this CPU container the packed matmuls run
-the Pallas kernel in interpret mode, so its WALL time is meaningless as a
-TPU prediction; the derived columns carry the structural serving win: bits
-held per weight (= HBM residency / weight-stream bytes on the target) and
-the packed-leaf count.  Emits one BENCH json line for dashboard scraping,
-plus the standard (name, us_per_call, derived) rows for benchmarks.run.
+Builds a smollm-class (32-aligned) model, compresses it into an
+EdgeArtifact, and times `ServeEngine.generate` for (a) the exact dense
+engine, (b) the wire engine with full dense decode at load, and (c) the
+wire engine serving packed bit-planes end-to-end — then sweeps the
+artifact's quality tiers, where lower tiers drop LSB bit-planes from the
+least-sensitive layers without re-quantizing.  On this CPU container the
+packed matmuls run the Pallas kernel in interpret mode, so WALL time is
+meaningless as a TPU prediction; the derived columns carry the structural
+serving win: bits held per weight (= HBM residency / weight-stream bytes
+on the target) and the packed-leaf count.  Emits one BENCH json line for
+the engine comparison and one per quality tier, plus the standard
+(name, us_per_call, derived) rows for benchmarks.run.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import time
 
 import jax
 import jax.numpy as jnp
 
+from repro import api
 from repro.configs.base import ArchConfig
-from repro.core.policy import QuantPolicy
-from repro.core.qsq import QSQConfig
 from repro.models.api import Model
 from repro.models.base import init_params
-from repro.quant import pack_pytree_wire, quantize_pytree, tree_bits_report
+from repro.quant import tree_bits_report
 from repro.serve import ServeConfig, ServeEngine
 
 PROMPTS = [[1, 2, 3], [9, 9], [100, 42, 7, 8]]
@@ -50,43 +51,45 @@ def _tok_per_s(engine) -> tuple[float, float]:
     return n / dt, dt / n * 1e6
 
 
+def _measure(name, eng, params, rows, stats, verbose):
+    tok_s, us_tok = _tok_per_s(eng)
+    rep = tree_bits_report(eng.params)
+    n_w = sum(int(jnp.size(l)) for l in jax.tree_util.tree_leaves(params))
+    bits_per_weight = rep["bits"] / n_w
+    rows.append((f"serve/{name}", us_tok,
+                 f"tok_s={tok_s:.1f}|bits_per_weight={bits_per_weight:.2f}"
+                 f"|packed_leaves={eng.n_packed_leaves}"))
+    stats[name] = {
+        "tok_s": round(tok_s, 2),
+        "us_per_tok": round(us_tok, 1),
+        "weight_bits": rep["bits"],
+        "bits_per_weight": round(bits_per_weight, 2),
+        "packed_leaves": eng.n_packed_leaves,
+    }
+    if verbose:
+        print(f"  {name}: {tok_s:.1f} tok/s ({us_tok:.0f} us/tok), "
+              f"{bits_per_weight:.2f} bits/weight, "
+              f"{eng.n_packed_leaves} packed leaves")
+    return stats[name]
+
+
 def main(verbose: bool = True):
     model, params = _model()
-    descs = model.param_descs()
-    policy = QuantPolicy(base=QSQConfig(group_size=16, refit_alpha=True),
-                         min_numel=512)
-    wire = pack_pytree_wire(quantize_pytree(params, policy, descs))
+    artifact = api.compress(model, params)
 
     engines = {
         "dense_exact": ServeEngine(model, params, ServeConfig(batch_slots=4)),
-        "wire_dense": ServeEngine.from_wire(
-            model, wire, ServeConfig(batch_slots=4, packed=False)),
-        "wire_packed": ServeEngine.from_wire(
-            model, wire, ServeConfig(batch_slots=4)),
+        "wire_dense": artifact.engine(quality="hi", batch_slots=4,
+                                      packed=False),
+        "wire_packed": artifact.engine(quality="hi", batch_slots=4),
     }
 
     rows = []
     stats = {}
     for name, eng in engines.items():
-        tok_s, us_tok = _tok_per_s(eng)
-        rep = tree_bits_report(eng.params)
-        n_w = sum(int(jnp.size(l)) for l in jax.tree_util.tree_leaves(params))
-        bits_per_weight = rep["bits"] / n_w
-        rows.append((f"serve/{name}", us_tok,
-                     f"tok_s={tok_s:.1f}|bits_per_weight={bits_per_weight:.2f}"
-                     f"|packed_leaves={eng.n_packed_leaves}"))
-        stats[name] = {
-            "tok_s": round(tok_s, 2),
-            "us_per_tok": round(us_tok, 1),
-            "bits_per_weight": round(bits_per_weight, 2),
-            "packed_leaves": eng.n_packed_leaves,
-        }
-        if verbose:
-            print(f"  {name}: {tok_s:.1f} tok/s ({us_tok:.0f} us/tok), "
-                  f"{bits_per_weight:.2f} bits/weight, "
-                  f"{eng.n_packed_leaves} packed leaves")
+        _measure(name, eng, params, rows, stats, verbose)
 
-    # tokens must agree bit-exactly across all three engines
+    # tokens must agree bit-exactly across the two wire engines
     outs = [eng.generate(PROMPTS, max_new=8) for eng in
             (engines["wire_dense"], engines["wire_packed"])]
     assert outs[0] == outs[1], "packed engine diverged from dense decode"
@@ -95,6 +98,27 @@ def main(verbose: bool = True):
                                  "prompts": len(PROMPTS),
                                  "max_new": MAX_NEW,
                                  **stats}))
+
+    # quality-tier sweep: one engine per tier from the SAME artifact, lower
+    # tiers realized by LSB plane truncation (never a re-quantize); one
+    # BENCH line per tier so the perf trajectory captures the
+    # quality/throughput trade-off.  'hi' IS the wire_packed engine — reuse
+    # it instead of repacking and re-jitting an identical tree.
+    for tier in artifact.quality_names():
+        drop = artifact.drop_map(tier)
+        eng = (engines["wire_packed"] if not drop
+               else artifact.engine(quality=tier, batch_slots=4))
+        tier_stats = _measure(f"tier_{tier}", eng, params, rows, stats,
+                              verbose)
+        print("BENCH " + json.dumps({
+            "bench": "serve_quality",
+            "tier": tier,
+            "truncated_leaves": len(drop),
+            "tok_s": tier_stats["tok_s"],
+            "weight_bits": tier_stats["weight_bits"],
+            "packed_leaves": tier_stats["packed_leaves"],
+        }))
+
     return rows
 
 

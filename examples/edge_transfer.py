@@ -1,11 +1,16 @@
 """The paper's headline scenario, end to end:
 
-  cloud:  train LeNet -> QSQ-encode (3-bit codes + scalars) -> write to the
-          "channel" (a file standing in for the network link)
-  edge:   read the artifact -> decode with shift/scale only -> run inference
+  cloud:  train LeNet -> compress to an EdgeArtifact (3-bit codes +
+          scalars) -> write to the "channel" (a file standing in for the
+          network link)
+  edge:   load the artifact -> decode with shift/scale only -> run
+          inference, at more than one quality tier from the SAME payload
 
-Reports the channel payload size (Eq. 11/12), decode time, and the accuracy
-delta — the three quantities the paper trades against each other.
+Reports the channel payload size (Eq. 11/12), decode time, and the
+accuracy delta — the three quantities the paper trades against each other
+— and then turns the quality dial: the 'lo' tier drops LSB code planes
+from the least-sensitive layers (the CSD-truncation analogue) without a
+second transmission or any re-quantization.
 
   PYTHONPATH=src python examples/edge_transfer.py
 """
@@ -18,16 +23,12 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 import jax
-import numpy as np
 
 from benchmarks.common import train_cnn
-from repro.checkpoint.manager import CheckpointManager, CheckpointConfig, _flatten
+from repro import api
 from repro.core.policy import QuantPolicy
 from repro.core.qsq import QSQConfig
 from repro.models.cnn import LENET, cnn_accuracy
-from repro.quant import (
-    dequantize_pytree, pack_pytree_wire, quantize_pytree, unpack_pytree_wire,
-)
 
 
 def main():
@@ -36,13 +37,15 @@ def main():
     acc_fp = cnn_accuracy(params, LENET, ev_i, ev_l)
     print(f"trained LeNet: accuracy {acc_fp:.4f}")
 
+    policy = QuantPolicy(
+        base=QSQConfig(phi=4, group_size=16, refit_alpha=True), min_numel=256
+    )
     with tempfile.TemporaryDirectory() as d:
-        mgr = CheckpointManager(CheckpointConfig(directory=d, async_save=False))
-        policy = QuantPolicy(
-            base=QSQConfig(phi=4, group_size=16, refit_alpha=True), min_numel=256
-        )
         t0 = time.time()
-        wire_path = mgr.export_wire(params, policy)
+        # model-free compress: no serving Model, but the artifact still
+        # carries the tier spec + sensitivity ranking for dense decode.
+        artifact = api.compress(None, params, policy=policy)
+        wire_path = artifact.save(Path(d) / "lenet.edge.npz")
         t_enc = time.time() - t0
 
         raw_bytes = sum(l.size * l.dtype.itemsize
@@ -53,22 +56,24 @@ def main():
               f"{(1 - wire_bytes / raw_bytes) * 100:.1f}% saved)")
 
         print("== EDGE ==")
-        data = np.load(wire_path)
-        # rebuild the wire pytree from the flat archive
-        qp0 = quantize_pytree(params, policy)
-        wire_like = pack_pytree_wire(qp0)
-        flat, treedef = jax.tree_util.tree_flatten_with_path(wire_like)
-        leaves = [data[jax.tree_util.keystr(p)] for p, _ in flat]
-        wire = jax.tree_util.tree_unflatten(treedef, leaves)
-
+        received = api.load(wire_path)
         t0 = time.time()
-        decoded = dequantize_pytree(unpack_pytree_wire(wire), like=params)
+        decoded = received.dense_params(quality="hi", like=params)
         jax.block_until_ready(jax.tree_util.tree_leaves(decoded)[0])
         t_dec = time.time() - t0
         acc_q = cnn_accuracy(decoded, LENET, ev_i, ev_l)
         print(f"decoded in {t_dec * 1e3:.0f} ms (shift/scale only) -> "
               f"accuracy {acc_q:.4f} (drop {acc_fp - acc_q:+.4f})")
         print(f"paper comparison: 82.49% size reduction, ~1.1 point drop")
+
+        # the quality dial: same payload, LSB planes dropped at decode time
+        for tier in ("mid", "lo"):
+            deq = received.dense_params(quality=tier, like=params)
+            acc_t = cnn_accuracy(deq, LENET, ev_i, ev_l)
+            n_trunc = len(received.drop_map(tier))
+            print(f"tier {tier!r}: {n_trunc} layers LSB-truncated -> "
+                  f"accuracy {acc_t:.4f} (drop {acc_fp - acc_t:+.4f}, "
+                  f"no re-transmission)")
 
 
 if __name__ == "__main__":

@@ -1,28 +1,29 @@
-"""Serving example: batched greedy decoding from an exact or QSQ-wire model.
+"""Serving example: the quality-dial facade, compress -> save -> serve.
 
   PYTHONPATH=src python examples/serve_lm.py [--arch mamba2_1_3b]
 
-Demonstrates the paper's edge flow end-to-end: the serving process receives
-the 3-bit + scalar artifact (10x smaller than f32), decodes it with
-shift/scale on arrival, and serves batched requests.
+Demonstrates the paper's edge flow end-to-end through `repro.api`: the
+model is compressed once into a self-describing EdgeArtifact (3-bit codes
++ scalars, ~10x smaller than f32), saved, loaded back as the receiver
+would, and served at every quality tier — lower tiers drop LSB bit-planes
+from the least-sensitive layers (the CSD-truncation analogue) without
+ever re-quantizing.
 """
 import argparse
 import sys
+import tempfile
 import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax
-import numpy as np
 
+from repro import api
 from repro.configs import ARCH_IDS, get_arch
-from repro.core.policy import QuantPolicy
-from repro.core.qsq import QSQConfig
 from repro.models.api import Model
 from repro.models.base import init_params
-from repro.quant import pack_pytree_wire, quantize_pytree
-from repro.serve import ServeConfig, ServeEngine
+from repro.quant import tree_bits_report
 
 
 def main():
@@ -33,35 +34,33 @@ def main():
 
     cfg = get_arch(args.arch, smoke=True)
     model = Model(cfg)
-    descs = model.param_descs()
-    params = init_params(jax.random.PRNGKey(0), descs)
+    params = init_params(jax.random.PRNGKey(0), model.param_descs())
 
-    # "transmit" the model in QSQ wire form; passing descs groups matmul
-    # weights along their contraction axis so the receiver can serve them
-    # packed (bit-planes through the fused dequant-matmul), not just decode.
-    wire = pack_pytree_wire(
-        quantize_pytree(params, QuantPolicy(base=QSQConfig(group_size=16),
-                                            min_numel=512), descs)
-    )
+    # one call replaces quantize -> pack -> export: the artifact carries the
+    # wire tree plus the tier spec and per-layer sensitivity ranking.
+    artifact = api.compress(model, params)
     raw = sum(l.size * l.dtype.itemsize for l in jax.tree_util.tree_leaves(params))
-    wired = sum(
-        np.asarray(l).size * 4 if hasattr(l, "size") else 0
-        for l in jax.tree_util.tree_leaves(wire)
-    )
-    print(f"channel payload: {wired / 1e6:.2f} MB (raw {raw / 1e6:.2f} MB)")
 
-    eng = ServeEngine.from_wire(model, wire, ServeConfig(batch_slots=4))
-    print(f"serving {eng.n_packed_leaves} matmul weights straight from the "
-          f"3-bit wire (no full-tree dequantize)")
-    prompts = [[1, 2, 3, 4], [10, 20], [7, 7, 7]]
-    t0 = time.time()
-    outs = eng.generate(prompts, max_new=args.max_new)
-    dt = time.time() - t0
-    for p, o in zip(prompts, outs):
-        print(f"  prompt={p} -> {o}")
-    n_tok = len(prompts) * args.max_new
-    print(f"{n_tok} tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s, "
-          f"batch={len(prompts)})")
+    with tempfile.TemporaryDirectory() as d:
+        path = artifact.save(Path(d) / "model.edge.npz")
+        print(f"channel payload: {path.stat().st_size / 1e6:.2f} MB "
+              f"(raw {raw / 1e6:.2f} MB)")
+
+        # the edge side: load the self-describing artifact and dial quality
+        received = api.load(path)
+        prompts = [[1, 2, 3, 4], [10, 20], [7, 7, 7]]
+        for tier in received.quality_names():
+            eng = received.engine(quality=tier, batch_slots=4)
+            rep = tree_bits_report(eng.params)
+            t0 = time.time()
+            outs = eng.generate(prompts, max_new=args.max_new)
+            dt = time.time() - t0
+            n_tok = len(prompts) * args.max_new
+            print(f"tier {tier!r}: {eng.n_packed_leaves} packed leaves, "
+                  f"{rep['bits'] / 8e3:.1f} kB weights, "
+                  f"{n_tok / dt:.1f} tok/s")
+            for p, o in zip(prompts, outs):
+                print(f"    prompt={p} -> {o}")
 
 
 if __name__ == "__main__":

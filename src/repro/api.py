@@ -1,0 +1,36 @@
+"""The quality-dial facade: compress → EdgeArtifact → engine, one import.
+
+    from repro import api
+
+    art = api.compress(model, params)          # policy -> 3-bit wire
+    art.save("model.edge.npz")
+    art = api.load("model.edge.npz")           # self-describing npz
+    eng = art.engine(quality="mid", batch_slots=4)
+    eng.generate([[1, 2, 3]], max_new=16)
+    eng.set_quality("lo")                      # re-dial, no reload/requant
+
+Everything here is a re-export of :mod:`repro.quant.artifact`; the legacy
+entry points (``quantize_pytree`` → ``pack_pytree_wire`` → ``export_wire``
+→ ``load_wire`` → ``tree_from_wire`` → ``ServeEngine.from_wire``) remain
+as thin delegates for existing callers.
+"""
+from repro.quant.artifact import (
+    DEFAULT_TIERS,
+    EdgeArtifact,
+    QualitySpec,
+    QualityTier,
+    compress,
+    default_policy,
+)
+
+load = EdgeArtifact.load
+
+__all__ = [
+    "DEFAULT_TIERS",
+    "EdgeArtifact",
+    "QualitySpec",
+    "QualityTier",
+    "compress",
+    "default_policy",
+    "load",
+]

@@ -20,11 +20,8 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import re
-import shutil
 import threading
 from pathlib import Path
-from typing import Any
 
 import jax
 import numpy as np
@@ -41,23 +38,11 @@ class CheckpointConfig:
     async_save: bool = True
 
 
-def _flatten(tree) -> tuple[dict, Any]:
-    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
-    out = {}
-    for path, leaf in flat:
-        key = jax.tree_util.keystr(path)
-        out[key] = np.asarray(jax.device_get(leaf))
-    return out, treedef
-
-
 def save_pytree(tree, path: Path):
     """Atomic single-file save (npz + json treedef via key order)."""
-    path = Path(path)
-    path.parent.mkdir(parents=True, exist_ok=True)
-    flat, _ = _flatten(tree)
-    tmp = path.with_suffix(".tmp.npz")
-    np.savez(tmp, **{k: v for k, v in flat.items()})
-    tmp.rename(path)
+    from repro.quant.artifact import atomic_savez, flatten_keystr
+
+    atomic_savez(flatten_keystr(tree), Path(path))
 
 
 def load_pytree(tree_like, path: Path, sharding=None):
@@ -154,51 +139,33 @@ class CheckpointManager:
             self.meta_path(s).unlink(missing_ok=True)
 
     # -- QSQ wire export / import (the paper's channel artifact) -----------
+    # Both are thin delegates over the EdgeArtifact npz codec
+    # (repro.quant.artifact) — one file format for checkpoint export and the
+    # quality-dial facade; artifacts written by EdgeArtifact.save load here
+    # and vice versa (the artifact just carries extra tier/arch metadata).
     def export_wire(self, params, policy: QuantPolicy, name: str = "wire",
                     descs=None) -> Path:
         """Write the 3-bit+scalar encoded model; returns the file path.
 
         Pass the model's ``descs`` (ParamDesc tree) to group matmul weights
-        along their contraction axis — the layout ``load_wire`` +
-        ``ServeEngine.from_wire`` serve packed, without dequantizing."""
+        along their contraction axis — the layout the quality-dial engines
+        serve packed, without dequantizing."""
+        from repro.quant.artifact import save_wire_npz
+
         qp = quantize_pytree(params, policy, descs)
-        wire = pack_pytree_wire(qp)
-        path = self.dir / f"{name}.npz"
-        flat, _ = _flatten(wire)
-        tmp = path.with_suffix(".tmp.npz")
-        np.savez(tmp, **flat)
-        tmp.rename(path)
-        return path
+        return save_wire_npz(pack_pytree_wire(qp), self.dir / f"{name}.npz")
 
     def load_wire(self, name_or_path: str | Path = "wire"):
         """Inverse of :func:`export_wire`: npz -> nested wire tree (lossless).
 
-        The result feeds ``ServeEngine.from_wire`` / ``quant.tree_from_wire``
+        The result feeds ``EdgeArtifact`` / ``quant.tree_from_wire``
         directly; codes and scales round-trip bit-exactly."""
+        from repro.quant.artifact import load_wire_npz
+
         path = Path(name_or_path)
         if not path.suffix:
             path = path.with_suffix(".npz")
         if len(path.parts) == 1:  # bare name -> this manager's directory
             path = self.dir / path
-        data = np.load(path, allow_pickle=False)
-        root: dict = {}
-        key_re = re.compile(r"\['([^']*)'\]|\[(\d+)\]")
-        for key in data.files:
-            parts = [m.group(1) if m.group(1) is not None else int(m.group(2))
-                     for m in key_re.finditer(key)]
-            node = root
-            for p in parts[:-1]:
-                node = node.setdefault(p, {})
-            node[parts[-1]] = data[key]
-
-        def _listify(node):
-            """int-keyed dicts (flattened tuples/lists, e.g. wire 'shape'
-            entries) -> lists; everything else stays a dict."""
-            if not isinstance(node, dict):
-                return node
-            out = {k: _listify(v) for k, v in node.items()}
-            if out and all(isinstance(k, int) for k in out):
-                return [out[i] for i in sorted(out)]
-            return out
-
-        return _listify(root)
+        wire, _ = load_wire_npz(path)
+        return wire

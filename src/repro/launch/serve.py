@@ -1,13 +1,14 @@
-"""Serving launcher: --arch <id> [--wire [--dense]] [--max-new N].
+"""Serving launcher: --arch <id> [--wire [--quality T] [--dense]].
 
-Loads exact params (fresh init on this CPU container) or round-trips the
-model through the QSQ wire artifact and serves batched greedy decoding
-through the ServeEngine.  With --wire the engine keeps matmul weights in
-3-bit bit-plane form end-to-end (add --dense to decode everything at load
-and compare).  On a real pod the same entry point builds the production
-mesh and shards params/caches with launch/mesh.py rules (see
-launch/dryrun.py for the lowering path that proves those shardings
-compile).
+Loads exact params (fresh init on this CPU container) or compresses the
+model into a quality-dialed EdgeArtifact and serves batched decoding
+through the facade (`repro.api`).  With --wire the engine keeps matmul
+weights in 3-bit bit-plane form end-to-end; --quality picks the serving
+tier (lower tiers drop LSB bit-planes from the least-sensitive layers —
+no re-quantization); add --dense to decode everything at load and compare.
+On a real pod the same entry point builds the production mesh and shards
+params/caches with launch/mesh.py rules (see launch/dryrun.py for the
+lowering path that proves those shardings compile).
 """
 from __future__ import annotations
 
@@ -17,12 +18,11 @@ import time
 import jax
 import numpy as np
 
+from repro import api
 from repro.configs import ARCH_IDS, get_arch
-from repro.core.policy import QuantPolicy
-from repro.core.qsq import QSQConfig
 from repro.models.api import Model
 from repro.models.base import init_params
-from repro.quant import quantize_pytree, pack_pytree_wire, tree_bits_report
+from repro.quant import tree_bits_report
 from repro.serve import ServeConfig, ServeEngine
 
 
@@ -32,34 +32,44 @@ def main():
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full", dest="smoke", action="store_false")
     ap.add_argument("--wire", action="store_true",
-                    help="round-trip the model through the QSQ wire format")
+                    help="compress to the QSQ wire artifact and serve it")
+    ap.add_argument("--quality", default="hi",
+                    choices=api.DEFAULT_TIERS.names(),
+                    help="with --wire: serving tier (plane truncation, "
+                         "no re-quantization)")
     ap.add_argument("--dense", action="store_true",
                     help="with --wire: decode the whole tree at load instead "
                          "of serving packed bit-planes")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompts", type=int, default=None,
+                    help="number of synthetic prompts to serve "
+                         "(default: min(--slots, 3))")
     args = ap.parse_args()
+
+    if args.slots < 1:
+        ap.error("--slots must be >= 1")
+    if args.prompts is None:
+        args.prompts = min(args.slots, 3)
+    elif not 1 <= args.prompts <= args.slots:
+        ap.error(f"--prompts must be in [1, --slots={args.slots}]; "
+                 f"got {args.prompts}")
+    if not args.wire and (args.quality != "hi" or args.dense):
+        ap.error("--quality/--dense only apply with --wire")
 
     cfg = get_arch(args.arch, smoke=args.smoke)
     model = Model(cfg)
-    descs = model.param_descs()
-    params = init_params(jax.random.PRNGKey(0), descs)
+    params = init_params(jax.random.PRNGKey(0), model.param_descs())
 
     if args.wire:
-        qp = quantize_pytree(
-            params,
-            QuantPolicy(base=QSQConfig(group_size=16, refit_alpha=True),
-                        min_numel=512),
-            descs,
-        )
-        wire = pack_pytree_wire(qp)
-        engine = ServeEngine.from_wire(
-            model, wire,
-            ServeConfig(batch_slots=args.slots, packed=not args.dense),
+        artifact = api.compress(model, params)
+        engine = artifact.engine(
+            quality=args.quality, batch_slots=args.slots,
+            packed=not args.dense,
         )
         rep = tree_bits_report(engine.params)
         print(
-            f"loaded from QSQ wire artifact "
+            f"serving tier {args.quality!r} from the QSQ wire artifact "
             f"({engine.n_packed_leaves} leaves served packed, "
             f"{rep['savings'] * 100:.0f}% below f32)"
         )
@@ -68,7 +78,7 @@ def main():
 
     rng = np.random.RandomState(0)
     prompts = [rng.randint(0, cfg.vocab, size=rng.randint(2, 6)).tolist()
-               for _ in range(min(args.slots, 3))]
+               for _ in range(args.prompts)]
     t0 = time.time()
     outs = engine.generate(prompts, max_new=args.max_new)
     dt = time.time() - t0

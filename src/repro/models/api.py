@@ -105,16 +105,24 @@ class Model:
 
         return make_cache_prefill_step(self)(params, cache, tokens)
 
-    def serve_params(self, wire_tree, packed: bool = True):
+    def serve_params(self, wire_tree, packed: bool = True, drop_map=None):
         """Wire artifact -> serving param tree (packed matmul weights when
-        ``packed``, full dense decode otherwise).  Returns (params, n_packed)."""
+        ``packed``, full dense decode otherwise).  Returns (params, n_packed).
+
+        ``drop_map`` (path -> LSB planes to drop) realizes a quality tier on
+        the already-quantized codes — the EdgeArtifact dial — without ever
+        re-quantizing."""
         from repro.models.base import abstract_params
-        from repro.quant.store import dense_tree, serve_tree, tree_from_wire
+        from repro.quant.store import (
+            dense_tree, serve_tree, tree_from_wire, truncate_tree,
+        )
 
         store = tree_from_wire(wire_tree)
         descs = self.param_descs()
         if packed:
-            return serve_tree(store, descs)
+            return serve_tree(store, descs, drop_map=drop_map)
+        if drop_map:
+            store = truncate_tree(store, drop_map)
         return dense_tree(store, like=abstract_params(descs)), 0
 
     # -- inputs ----------------------------------------------------------

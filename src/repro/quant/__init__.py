@@ -24,16 +24,31 @@ from repro.quant.store import (
     WeightStore,
     dense_tree,
     is_store,
+    max_level_delta,
     quantize_tree,
     serve_tree,
     set_packed_matmul_kernel,
     tree_bits_report,
     tree_from_wire,
     tree_to_wire,
+    truncate_tree,
 )
 
 __all__ += [
     "WeightStore", "DenseWeight", "QSQWeight", "PackedWeight", "is_store",
     "quantize_tree", "dense_tree", "serve_tree", "tree_bits_report",
     "tree_to_wire", "tree_from_wire", "set_packed_matmul_kernel",
+    "truncate_tree", "max_level_delta",
+]
+
+from repro.quant.artifact import (
+    DEFAULT_TIERS,
+    EdgeArtifact,
+    QualitySpec,
+    QualityTier,
+    compress,
+)
+
+__all__ += [
+    "EdgeArtifact", "QualitySpec", "QualityTier", "DEFAULT_TIERS", "compress",
 ]

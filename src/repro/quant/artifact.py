@@ -1,0 +1,399 @@
+"""EdgeArtifact: one quality-dialed facade from policy → wire → engine.
+
+The paper's headline is *quality scalability* — per-layer phi levels plus
+CSD LSB truncation trade accuracy for energy/memory.  This module makes
+that a single API surface instead of six hand-composed entry points:
+
+    art = compress(model, params)            # policy -> 3-bit wire + tiers
+    art.save("model.edge.npz")               # self-describing artifact
+    art = EdgeArtifact.load("model.edge.npz")
+    eng = art.engine(quality="mid")          # serve at a named tier
+    eng.set_quality("lo")                    # re-dial without reloading
+
+Quality tiers are *real*, not cosmetic: ``compress`` quantizes once at full
+quality and stores a per-layer sensitivity ranking; a lower tier is then
+realized at serve time by dropping LSB bit-planes from the packed weights
+of the least-sensitive layers (``PackedWeight.truncate`` — the progressive
+wire analogue of the paper's CSD LSB truncation).  No tier ever
+re-quantizes, so every tier of one artifact shares one set of codes and
+scalars on disk.
+
+The npz layout is a superset of the old ``CheckpointManager.export_wire``
+format: the same flat wire keys plus one ``__edge_meta__`` JSON entry
+(arch config, tier spec, sensitivity ranking).  ``export_wire``/
+``load_wire`` delegate here, and bare wire files still load (they just
+carry no arch/tier metadata).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from pathlib import Path
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, HybridConfig, MoEConfig
+from repro.core.policy import QuantPolicy, budgeted_policy, path_str
+from repro.core.qsq import QSQConfig
+from repro.quant.store import (
+    QSQWeight, dense_tree, is_store, max_level_delta, packable_leaf,
+    quantize_tree, tree_from_wire, tree_to_wire, truncate_tree,
+)
+
+META_KEY = "__edge_meta__"
+FORMAT = "edge-artifact-v1"
+
+
+# --------------------------------------------------------------------------
+# Quality tiers
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class QualityTier:
+    """One position of the quality dial.
+
+    ``drop_planes`` LSB code planes are dropped from the least-sensitive
+    ``drop_frac`` fraction of the artifact's packable matmul weights (most
+    sensitive layers keep full quality, mirroring the paper's per-layer phi
+    assignment).  ``drop_planes=0`` is full quality.
+    """
+
+    name: str
+    drop_planes: int = 0
+    drop_frac: float = 1.0
+
+    def max_error_levels(self) -> int:
+        """Per-weight error bound of this tier, in level units (x alpha)."""
+        return max_level_delta(self.drop_planes)
+
+
+@dataclasses.dataclass(frozen=True)
+class QualitySpec:
+    """The named tiers one artifact can serve, best quality first."""
+
+    tiers: tuple[QualityTier, ...]
+
+    def names(self) -> list[str]:
+        return [t.name for t in self.tiers]
+
+    def get(self, name: str) -> QualityTier:
+        for t in self.tiers:
+            if t.name == name:
+                return t
+        raise KeyError(
+            f"unknown quality tier {name!r}; this artifact has {self.names()}"
+        )
+
+
+DEFAULT_TIERS = QualitySpec((
+    QualityTier("hi", drop_planes=0, drop_frac=0.0),
+    QualityTier("mid", drop_planes=1, drop_frac=0.5),
+    QualityTier("lo", drop_planes=1, drop_frac=1.0),
+))
+
+
+# --------------------------------------------------------------------------
+# ArchConfig <-> JSON (self-describing artifacts rebuild their Model)
+# --------------------------------------------------------------------------
+def _arch_to_json(cfg: ArchConfig) -> dict:
+    d = dataclasses.asdict(cfg)
+    d["dtype"] = jnp.dtype(cfg.dtype).name
+    return d
+
+
+def _arch_from_json(d: dict) -> ArchConfig:
+    known = {f.name for f in dataclasses.fields(ArchConfig)}
+    d = {k: v for k, v in d.items() if k in known}
+    d["dtype"] = jnp.dtype(d["dtype"])
+    if d.get("moe"):
+        d["moe"] = MoEConfig(**d["moe"])
+    if d.get("hybrid"):
+        d["hybrid"] = HybridConfig(**d["hybrid"])
+    return ArchConfig(**d)
+
+
+# --------------------------------------------------------------------------
+# npz wire codec (single source for checkpoint export and artifact save)
+# --------------------------------------------------------------------------
+_KEY_RE = re.compile(r"\['([^']*)'\]|\[(\d+)\]")
+
+
+def flatten_keystr(tree) -> dict:
+    """Pytree -> {jax keystr path: host numpy leaf} (npz-ready)."""
+    return {
+        jax.tree_util.keystr(p): np.asarray(jax.device_get(leaf))
+        for p, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]
+    }
+
+
+def atomic_savez(flat: dict, path: Path) -> Path:
+    """Write an npz via tmp-file + rename so a crashed writer can never
+    corrupt an existing file.  Shared by checkpoint saves and artifacts."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.with_suffix(".tmp.npz")
+    np.savez(tmp, **flat)
+    tmp.rename(path)
+    return path
+
+
+def save_wire_npz(wire, path: str | Path, meta: dict | None = None) -> Path:
+    """Atomically write a wire pytree (plus optional JSON meta) as npz."""
+    flat = flatten_keystr(wire)
+    if meta is not None:
+        flat[META_KEY] = np.array(json.dumps(meta))
+    return atomic_savez(flat, Path(path))
+
+
+def load_wire_npz(path: str | Path) -> tuple[Any, dict | None]:
+    """Inverse of :func:`save_wire_npz` -> (nested wire tree, meta or None).
+
+    Codes and scales round-trip bit-exactly; int-keyed levels (flattened
+    tuples/lists such as wire 'shape' entries) come back as lists.
+    """
+    data = np.load(Path(path), allow_pickle=False)
+    meta = None
+    root: dict = {}
+    for key in data.files:
+        if key == META_KEY:
+            meta = json.loads(str(data[key][()]))
+            continue
+        parts = [m.group(1) if m.group(1) is not None else int(m.group(2))
+                 for m in _KEY_RE.finditer(key)]
+        if not parts:
+            continue
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = data[key]
+
+    def _listify(node):
+        if not isinstance(node, dict):
+            return node
+        out = {k: _listify(v) for k, v in node.items()}
+        if out and all(isinstance(k, int) for k in out):
+            return [out[i] for i in sorted(out)]
+        return out
+
+    return _listify(root), meta
+
+
+# --------------------------------------------------------------------------
+# The artifact
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class EdgeArtifact:
+    """A quality-dialed compressed model: wire tree + tiers + arch identity.
+
+    ``wire`` is the 3-bit + scalar pytree (the channel payload).  ``rank``
+    is the per-layer sensitivity ordering, most sensitive first, over the
+    packable matmul weights (or all quantized leaves for model-free
+    artifacts such as the paper's CNNs); tiers resolve against it
+    deterministically, so a saved artifact serves identical tokens after
+    ``load``.
+    """
+
+    wire: Any
+    arch_config: ArchConfig | None = None
+    tiers: QualitySpec = DEFAULT_TIERS
+    rank: tuple = ()  # ((path, sensitivity_score), ...) most sensitive first
+    policy_meta: dict = dataclasses.field(default_factory=dict)
+
+    # -- identity ---------------------------------------------------------
+    @property
+    def arch(self) -> str:
+        return self.arch_config.name if self.arch_config is not None else ""
+
+    def model(self):
+        """Rebuild the serving Model from the stored arch config."""
+        if self.arch_config is None:
+            raise ValueError(
+                "this artifact carries no arch config (model-free compress "
+                "or legacy bare wire); use dense_params()/tree() instead"
+            )
+        from repro.models.api import Model  # deferred: models -> quant cycle
+
+        return Model(self.arch_config)
+
+    def quality_names(self) -> list[str]:
+        return self.tiers.names()
+
+    # -- tier resolution --------------------------------------------------
+    def drop_map(self, quality: str) -> dict[str, int]:
+        """Tier name -> {path: LSB planes to drop}, least sensitive first."""
+        tier = self.tiers.get(quality)
+        if tier.drop_planes <= 0 or tier.drop_frac <= 0:
+            return {}
+        if not self.rank:
+            # refusing beats silently serving full quality under a lower
+            # tier's name (bare checkpoint wires / the from_wire shim carry
+            # no ranking to resolve the tier against)
+            raise ValueError(
+                f"quality tier {quality!r} needs a sensitivity ranking to "
+                f"pick truncation targets, but this artifact has none "
+                f"(legacy bare wire?); rebuild it with repro.api.compress()"
+            )
+        paths = [p for p, _ in self.rank]  # most sensitive first
+        n_aff = min(len(paths), max(1, math.ceil(tier.drop_frac * len(paths))))
+        return {p: tier.drop_planes for p in paths[len(paths) - n_aff:]}
+
+    # -- realization ------------------------------------------------------
+    def tree(self):
+        """Decode the wire to a WeightStore tree (QSQWeight leaves)."""
+        return tree_from_wire(self.wire)
+
+    def serve_params(self, quality: str = "hi", packed: bool = True):
+        """(params, n_packed) at a tier — matmul weights stay bit-planes."""
+        return self.model().serve_params(
+            self.wire, packed=packed, drop_map=self.drop_map(quality)
+        )
+
+    def dense_params(self, quality: str = "hi", like=None):
+        """Fully decoded param tree at a tier (model-free path: CNNs etc.)."""
+        store = truncate_tree(self.tree(), self.drop_map(quality))
+        return dense_tree(store, like=like)
+
+    def engine(self, quality: str = "hi", serve_cfg=None, **serve_kw):
+        """Build a ServeEngine at a named tier.
+
+        ``serve_kw`` forwards to ``ServeConfig`` (batch_slots, max_len,
+        temperature, packed); pass ``serve_cfg`` to reuse an existing
+        config (mutually exclusive with ``serve_kw``).  The engine keeps a
+        handle to this artifact, so ``engine.set_quality(q)`` re-dials the
+        tier in place without reloading or re-quantizing.
+        """
+        from repro.serve.engine import ServeConfig, ServeEngine
+
+        if serve_cfg is not None and serve_kw:
+            raise TypeError(
+                f"pass either serve_cfg or ServeConfig kwargs, not both "
+                f"(got serve_cfg and {sorted(serve_kw)})"
+            )
+        cfg = serve_cfg if serve_cfg is not None else ServeConfig(**serve_kw)
+        params, n_packed = self.serve_params(quality, packed=cfg.packed)
+        eng = ServeEngine(self.model(), params, cfg)
+        eng.n_packed_leaves = n_packed
+        eng.artifact = self
+        eng.quality = quality
+        return eng
+
+    # -- persistence ------------------------------------------------------
+    def save(self, path: str | Path) -> Path:
+        """Write the self-describing artifact npz (wire + tiers + arch)."""
+        meta = {
+            "format": FORMAT,
+            "arch": _arch_to_json(self.arch_config)
+            if self.arch_config is not None else None,
+            "tiers": [dataclasses.asdict(t) for t in self.tiers.tiers],
+            "rank": [[p, float(s)] for p, s in self.rank],
+            "policy": self.policy_meta,
+        }
+        return save_wire_npz(self.wire, path, meta)
+
+    @classmethod
+    def load(cls, path: str | Path) -> "EdgeArtifact":
+        """Read an artifact npz; bare (legacy) wire files load with no
+        arch/tier metadata and serve only through ``dense_params``/
+        ``tree()`` or an explicitly supplied model."""
+        wire, meta = load_wire_npz(path)
+        if meta is None:
+            return cls(wire=wire)
+        return cls(
+            wire=wire,
+            arch_config=_arch_from_json(meta["arch"]) if meta.get("arch") else None,
+            tiers=QualitySpec(tuple(QualityTier(**t) for t in meta["tiers"]))
+            if meta.get("tiers") else DEFAULT_TIERS,
+            rank=tuple((p, s) for p, s in meta.get("rank", [])),
+            policy_meta=meta.get("policy", {}),
+        )
+
+
+# --------------------------------------------------------------------------
+# compress: policy -> wire -> artifact (the facade's entry point)
+# --------------------------------------------------------------------------
+def default_policy() -> QuantPolicy:
+    """The serving-grade default: contraction-grouped 3-bit QSQ with the
+    beyond-paper alpha refit (same wire format, several-fold lower error)."""
+    return QuantPolicy(
+        base=QSQConfig(group_size=16, refit_alpha=True), min_numel=512
+    )
+
+
+def _proxy_rank(params, store, descs) -> list[tuple[str, float]]:
+    """Data-free sensitivity proxy: relative quantization error per leaf.
+
+    Ranks the truncation candidates (packable leaves when descriptors are
+    available, every quantized leaf otherwise) by
+    ||w - dequant(w)||^2 / ||w||^2, descending — layers the 3-bit code
+    already hurts most are the ones a tier should protect from further LSB
+    truncation.  ``sensitivity_rank`` (calibration-data-driven) can replace
+    this via ``compress(..., sensitivity=...)``.
+    """
+    flat_p = {path_str(p): leaf
+              for p, leaf in jax.tree_util.tree_flatten_with_path(params)[0]}
+    desc_map = {}
+    if descs is not None:
+        desc_map = {path_str(p): d for p, d in
+                    jax.tree_util.tree_flatten_with_path(descs)[0]}
+    scores = []
+    for p, leaf in jax.tree_util.tree_flatten_with_path(
+            store, is_leaf=is_store)[0]:
+        ps = path_str(p)
+        if not isinstance(leaf, QSQWeight):
+            continue
+        if descs is not None and not packable_leaf(ps, leaf, desc_map.get(ps)):
+            continue
+        w = np.asarray(flat_p[ps], dtype=np.float32)
+        err = np.asarray(leaf.as_dense(jnp.float32), dtype=np.float32) - w
+        scores.append((ps, float(np.sum(err * err) /
+                                 (np.sum(w * w) + 1e-12))))
+    return sorted(scores, key=lambda t: -t[1])
+
+
+def compress(
+    model,
+    params,
+    policy: QuantPolicy | None = None,
+    tiers: QualitySpec = DEFAULT_TIERS,
+    sensitivity: Sequence[tuple[str, float]] | None = None,
+) -> EdgeArtifact:
+    """Quantize a model once and return the quality-dialed EdgeArtifact.
+
+    ``model`` is a ``repro.models.api.Model`` (its descriptors group matmul
+    weights along the contraction axis, the serving-kernel layout) or None
+    for model-free trees (the paper's CNNs): then the artifact supports
+    ``dense_params`` but not ``engine``.
+
+    ``sensitivity`` is an optional calibration ranking from
+    ``core.policy.sensitivity_rank`` (most sensitive first).  When given it
+    does double duty, exactly as the paper uses its per-layer search: it is
+    folded into the policy as per-layer phi overrides
+    (``budgeted_policy``), and it orders the tier truncation so low tiers
+    degrade the least-sensitive layers first.  Without it a data-free proxy
+    ranking (per-layer relative quantization error) orders the tiers.
+    """
+    policy = policy if policy is not None else default_policy()
+    if sensitivity:
+        policy = budgeted_policy(list(sensitivity), policy)
+    descs = model.param_descs() if model is not None else None
+    store = quantize_tree(params, policy, descs)
+    rank = (tuple((p, float(s)) for p, s in sensitivity) if sensitivity
+            else tuple(_proxy_rank(params, store, descs)))
+    return EdgeArtifact(
+        wire=tree_to_wire(store),
+        arch_config=model.cfg if model is not None else None,
+        tiers=tiers,
+        rank=rank,
+        policy_meta={
+            "phi": policy.base.phi,
+            "group_size": policy.base.group_size,
+            "assign": policy.base.assign,
+            "refit_alpha": policy.base.refit_alpha,
+            "n_overrides": len(policy.overrides),
+            "calibrated": bool(sensitivity),
+        },
+    )

@@ -37,8 +37,8 @@ import numpy as np
 from repro.core import codec
 from repro.core.policy import QuantPolicy, path_str
 from repro.core.qsq import (
-    QSQTensor, _quantize_impl, bits_per_code, codes_to_levels, levels_to_codes,
-    quantize,
+    LEVEL_TABLE, QSQTensor, _quantize_impl, bits_per_code, codes_to_levels,
+    levels_to_codes, quantize,
 )
 
 # Logical axes a 2-D-view matmul contracts over, and path fragments that
@@ -95,6 +95,40 @@ def _conv_view(leaf):
 def _conv_unview(levels_like, conv_shape):
     kh, kw, cin, cout = conv_shape
     return jnp.moveaxis(levels_like.reshape(cin, kh, kw, cout), 0, 2)
+
+
+# --------------------------------------------------------------------------
+# LSB plane truncation — the progressive-wire analogue of the paper's CSD
+# LSB truncation: a lower quality tier is realized from an already-quantized
+# artifact by zeroing the least-significant code bit-planes, never by
+# re-quantizing.
+# --------------------------------------------------------------------------
+def _trunc_code_mask(drop: int) -> int:
+    """3-bit code mask with the ``drop`` least-significant planes zeroed."""
+    if not 0 <= drop < 3:
+        raise ValueError(f"drop must be 0, 1 or 2; got {drop}")
+    return (~((1 << drop) - 1)) & 0x7
+
+
+def max_level_delta(drop: int) -> int:
+    """Worst-case |level change| from dropping ``drop`` LSB code planes.
+
+    The per-weight reconstruction error of a truncated tier is bounded by
+    ``max_level_delta(drop) * alpha`` for each group's scalar alpha (0 for
+    drop=0, 2 for drop=1, 4 for drop=2 over the valid Table II codes).
+
+    Note the asymmetry inherited from the Table II layout (negatives are
+    offset codes, not sign-magnitude): zero-filled decode after drop=1 maps
+    +1 -> 0 and +4 -> +2 but keeps -1 and -4 exact, so truncated layers
+    lean slightly negative.  The bound above covers both signs; a
+    sign-magnitude plane recoding that truncates symmetrically is a
+    ROADMAP follow-up.
+    """
+    mask = _trunc_code_mask(drop)
+    return int(max(
+        abs(int(LEVEL_TABLE[c]) - int(LEVEL_TABLE[c & mask]))
+        for c in range(7)  # 7 itself is unused on valid streams
+    ))
 
 
 # --------------------------------------------------------------------------
@@ -209,6 +243,20 @@ class QSQWeight(QSQTensor, WeightStore):
     def matmul(self, x):
         return jnp.tensordot(x, self.as_dense(x.dtype), axes=1)
 
+    def truncate(self, drop: int) -> "QSQWeight":
+        """Level-space LSB plane truncation (see :func:`max_level_delta`).
+
+        Maps each level through its Table II code with the ``drop`` lowest
+        code bits zeroed — bit-identical to ``pack().truncate(drop)`` but
+        applicable to any grouping (conv views included).  Scales are kept;
+        no re-quantization happens.
+        """
+        if drop == 0:
+            return self
+        mask = _trunc_code_mask(drop)
+        levels = codes_to_levels(levels_to_codes(self.levels) & mask)
+        return dataclasses.replace(self, levels=levels)
+
     def pack(self) -> "PackedWeight":
         """-> bit-plane form.  The grouped axis length must be 32-aligned."""
         if self.conv_shape is not None:
@@ -236,6 +284,12 @@ class PackedWeight(WeightStore):
     f32.  ``matmul`` feeds the Pallas fused dequant-matmul (interpret mode
     off-TPU) so dense weights never materialize in HBM; decode happens in
     VREGs next to the MXU, per the paper's Table II shift-and-scale decoder.
+
+    ``n_planes`` counts the *significant* planes (3 = full quality).  A
+    quality-tier truncation (:meth:`truncate`) zeroes the dropped LSB plane
+    words in place of removing them — the physical 3-slot layout is what the
+    fused kernel consumes — and ``nbits()`` accounts only the kept planes,
+    which is what an edge receiver of the truncated wire would store.
     """
 
     planes: jax.Array
@@ -243,16 +297,19 @@ class PackedWeight(WeightStore):
     group_size: int
     phi: int
     rest_ndim: int = 0
+    n_planes: int = 3
     kind = "packed"
 
     def tree_flatten(self):
-        return (self.planes, self.scales), (self.group_size, self.phi, self.rest_ndim)
+        return (self.planes, self.scales), (
+            self.group_size, self.phi, self.rest_ndim, self.n_planes,
+        )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         planes, scales = children
         return cls(planes=planes, scales=scales, group_size=aux[0], phi=aux[1],
-                   rest_ndim=aux[2])
+                   rest_ndim=aux[2], n_planes=aux[3] if len(aux) > 3 else 3)
 
     def _stack(self) -> int:
         return self.planes.ndim - 2 - self.rest_ndim
@@ -263,6 +320,25 @@ class PackedWeight(WeightStore):
         st = self._stack()
         k = self.planes.shape[st] * codec.PLANE_GROUP
         return self.planes.shape[:st] + (k,) + self.planes.shape[st + 2:]
+
+    def truncate(self, drop: int) -> "PackedWeight":
+        """Plane-truncated view: zero the ``drop`` LSB bit-planes.
+
+        ``drop`` counts from full quality, so the call is idempotent and
+        re-resolving a tier never deepens an earlier truncation by accident.
+        The view's ``as_dense``/``matmul``/``nbits`` all reflect the
+        truncation; the error vs the full-quality weight is bounded by
+        ``max_level_delta(drop) * alpha`` per group.
+        """
+        if drop == 0:
+            return self
+        if not 0 < drop < 3:
+            raise ValueError(f"drop must be 0, 1 or 2; got {drop}")
+        idx = (slice(None),) * (self._stack() + 1) + (slice(0, drop),)
+        return dataclasses.replace(
+            self, planes=self.planes.at[idx].set(0),
+            n_planes=min(self.n_planes, 3 - drop),
+        )
 
     def unpack(self) -> QSQWeight:
         def dec(pl_):
@@ -311,7 +387,8 @@ class PackedWeight(WeightStore):
         return out.astype(x.dtype).reshape(*lead, *rest)
 
     def nbits(self) -> int:
-        return int(32 * (self.planes.size + self.scales.size))
+        kept_plane_words = (self.planes.size // 3) * self.n_planes
+        return int(32 * (kept_plane_words + self.scales.size))
 
 
 # The kernel routing switch: benchmarks/tests flip this to compare the fused
@@ -411,40 +488,69 @@ def dense_tree(tree, like=None):
     return jax.tree_util.tree_map(_leaf, tree, like, is_leaf=_decodable)
 
 
-def serve_tree(tree, descs, dtype=None):
+def packable_leaf(path: str, leaf, desc) -> bool:
+    """True if this QSQ leaf can be served as bit-planes through the fused
+    kernel: kernel-eligible per its descriptor AND wire-grouped along the
+    contraction axis with a 32-aligned length (legacy axis-0 wires fall back
+    to dense decode)."""
+    return (
+        isinstance(leaf, QSQWeight)
+        and leaf.conv_shape is None
+        and _is_desc(desc)
+        and kernel_eligible(path, desc)
+        and leaf._rest() == len(desc.shape) - contract_idx(desc) - 1
+        and leaf.levels.shape[contract_idx(desc)] % codec.PLANE_GROUP == 0
+    )
+
+
+def serve_tree(tree, descs, dtype=None, drop_map=None):
     """Serving layout: pack kernel-eligible QSQ leaves, decode the rest.
 
-    This is what ``ServeEngine.from_wire`` holds: matmul weights stay in
+    This is what a quality-tiered engine holds: matmul weights stay in
     3-bit bit-plane form end-to-end (decoded tile-by-tile inside the fused
     kernel), while gathered/sensitive leaves (embeddings, norms, wo, convs)
-    are decoded once at load.  Returns (params_tree, n_packed).
+    are decoded once at load.  ``drop_map`` (path -> LSB planes to drop)
+    applies a quality-tier truncation to the packed leaves it names —
+    realized on the already-quantized codes, never by re-quantizing.
+    Returns (params_tree, n_packed).
     """
     n_packed = 0
+    drop_map = drop_map or {}
 
     def _leaf(path, leaf, desc):
         nonlocal n_packed
         if not is_store(leaf):
             return leaf
         p = path_str(path)
-        if (
-            isinstance(leaf, QSQWeight)
-            and leaf.conv_shape is None
-            and _is_desc(desc)
-            and kernel_eligible(p, desc)
-            # the wire must have been grouped along the contraction axis
-            # (legacy axis-0 wires fall back to dense decode)
-            and leaf._rest() == len(desc.shape) - contract_idx(desc) - 1
-            and leaf.levels.shape[contract_idx(desc)] % codec.PLANE_GROUP == 0
-        ):
+        if packable_leaf(p, leaf, desc):
             n_packed += 1
-            return leaf.pack()
+            return leaf.pack().truncate(drop_map.get(p, 0))
         want = dtype if dtype is not None else getattr(desc, "dtype", jnp.float32)
+        if p in drop_map:
+            leaf = leaf.truncate(drop_map[p]) if isinstance(leaf, QSQWeight) else leaf
         return leaf.as_dense(want)
 
     out = jax.tree_util.tree_map_with_path(
         _leaf, tree, descs, is_leaf=lambda x: is_store(x)
     )
     return out, n_packed
+
+
+def truncate_tree(tree, drop_map: dict):
+    """Apply per-path LSB plane truncation to QSQ/packed leaves of a tree.
+
+    ``drop_map`` maps '/'-joined pytree paths to planes-to-drop (from full
+    quality).  Leaves not named, and leaves with no truncatable form, pass
+    through untouched.
+    """
+
+    def _leaf(path, leaf):
+        drop = drop_map.get(path_str(path), 0)
+        if drop and isinstance(leaf, (QSQWeight, PackedWeight)):
+            return leaf.truncate(drop)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(_leaf, tree, is_leaf=is_store)
 
 
 def tree_bits_report(tree) -> dict:

@@ -1,22 +1,28 @@
 """Batched serving engine — serves directly from the 3-bit wire.
 
-Loads a model from an exact or QSQ-wire checkpoint.  The wire path is the
-paper's edge flow: the 3-bit + scalar artifact crosses the channel and is
-served WITHOUT a full-tree dequantize — matmul weights stay packed
-(:class:`~repro.quant.store.PackedWeight` bit-planes) end-to-end and are
-decoded tile-by-tile inside the fused Pallas dequant-matmul, so serving
-actually realizes the 3.2-4.6x weight-HBM cut the kernel was built for.
-Only non-matmul leaves (embeddings, norms, attention output projections,
-convs) are decoded once at load, per the QuantPolicy exclusions.
+Engines are normally built through the quality-dial facade
+(:func:`repro.api.compress` -> ``EdgeArtifact.engine(quality=...)``): the
+wire path is the paper's edge flow — the 3-bit + scalar artifact crosses
+the channel and is served WITHOUT a full-tree dequantize.  Matmul weights
+stay packed (:class:`~repro.quant.store.PackedWeight` bit-planes) end to
+end and are decoded tile-by-tile inside the fused Pallas dequant-matmul,
+so serving actually realizes the 3.2-4.6x weight-HBM cut the kernel was
+built for.  Only non-matmul leaves (embeddings, norms, attention output
+projections, convs) are decoded once at load, per the QuantPolicy
+exclusions.  ``set_quality`` re-dials an artifact-built engine to another
+tier in place — LSB plane truncation on the already-loaded wire, never a
+re-quantize.
 
 Generation is two jitted programs: a scanned prefill that primes the cache
-for the whole prompt in one dispatch, and a multi-token greedy decode scan
-that syncs with the host exactly once per generate() call.  Requests of
+for the whole prompt in one dispatch, and a multi-token decode scan
+(greedy, or temperature-sampled when ``ServeConfig.temperature > 0``) that
+syncs with the host exactly once per generate() call.  Requests of
 different lengths share one slot-based KV cache (continuous-batching-lite).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Sequence
 
 import jax
@@ -26,7 +32,8 @@ import numpy as np
 from repro.models.api import Model
 from repro.models.base import init_params
 from repro.train.step import (
-    make_cache_prefill_step, make_decode_loop, make_serve_step,
+    make_cache_prefill_step, make_decode_loop, make_sample_decode_loop,
+    make_serve_step,
 )
 
 
@@ -34,8 +41,8 @@ from repro.train.step import (
 class ServeConfig:
     batch_slots: int = 8
     max_len: int = 256
-    temperature: float = 0.0  # 0 => greedy
-    packed: bool = True  # from_wire: keep matmul weights in bit-plane form
+    temperature: float = 0.0  # 0 => greedy; > 0 => categorical sampling
+    packed: bool = True  # wire loads: keep matmul weights in bit-plane form
 
 
 class ServeEngine:
@@ -43,35 +50,73 @@ class ServeEngine:
         self.model = model
         self.cfg = cfg
         self.params = params
-        self.n_packed_leaves = 0  # overwritten by from_wire
+        self.n_packed_leaves = 0  # overwritten by the artifact/wire loaders
+        self.artifact = None      # set by EdgeArtifact.engine (quality dial)
+        self.quality: str | None = None
         self.serve_step = jax.jit(make_serve_step(model))
         self._prefill = jax.jit(make_cache_prefill_step(model))
         self._decode_loop = jax.jit(make_decode_loop(model))
+        self._sample_loop = None  # jitted lazily; most engines stay greedy
 
     # -- loading -----------------------------------------------------------
     @classmethod
     def from_wire(cls, model: Model, wire_tree, cfg: ServeConfig):
-        """Build an engine from a QSQ wire artifact (3-bit codes + scalars).
+        """Deprecated shim over :class:`repro.quant.artifact.EdgeArtifact`.
 
-        With ``cfg.packed`` (default), kernel-eligible matmul weights are
-        re-packed to bit-planes and SERVED in that form — no full-tree
-        dequantize ever happens; the shift-and-scale decode (Table II) runs
-        inside the matmul kernel at use time.  Leaves the kernel cannot
-        consume (or wires grouped along a non-contraction axis) are decoded
-        once here, which is also the complete behavior of ``packed=False``.
+        Equivalent to ``EdgeArtifact(wire, model.cfg).engine("hi",
+        serve_cfg=cfg)``: full-quality serving with kernel-eligible matmul
+        weights re-packed to bit-planes (``cfg.packed``, default) or a full
+        dense decode at load (``packed=False``).  New code should call
+        ``repro.api.compress(...)`` and dial quality on the artifact.
         """
-        params, n_packed = model.serve_params(wire_tree, packed=cfg.packed)
-        eng = cls(model, params, cfg)
-        eng.n_packed_leaves = n_packed
-        return eng
+        warnings.warn(
+            "ServeEngine.from_wire is deprecated; use repro.api.compress() "
+            "/ EdgeArtifact.engine(quality=...) instead",
+            DeprecationWarning, stacklevel=2,
+        )
+        from repro.quant.artifact import EdgeArtifact
+
+        art = EdgeArtifact(wire=wire_tree, arch_config=model.cfg)
+        return art.engine(quality="hi", serve_cfg=cfg)
+
+    # -- quality dial ------------------------------------------------------
+    def set_quality(self, quality: str) -> "ServeEngine":
+        """Re-resolve the param tree at another tier of this engine's
+        artifact, in place — plane truncation on the loaded wire, no reload
+        and no re-quantization.  The jitted programs take params as
+        arguments, so the dial costs one retrace, not a rebuild."""
+        if self.artifact is None:
+            raise ValueError(
+                "this engine was not built from an EdgeArtifact; construct "
+                "it via repro.api.compress(...).engine(quality=...) to dial "
+                "quality"
+            )
+        self.params, self.n_packed_leaves = self.artifact.serve_params(
+            quality, packed=self.cfg.packed
+        )
+        self.quality = quality
+        return self
 
     # -- generation ----------------------------------------------------------
-    def generate(self, prompts: Sequence[Sequence[int]], max_new: int = 32):
-        """Greedy-decode a batch of token-id prompts.  Returns lists of ids."""
+    def generate(self, prompts: Sequence[Sequence[int]], max_new: int = 32,
+                 seed: int = 0):
+        """Decode a batch of token-id prompts.  Returns lists of ids.
+
+        Greedy when ``cfg.temperature == 0``; otherwise samples from
+        ``softmax(logits / temperature)`` with a PRNG derived from ``seed``
+        (same seed + prompts => same tokens).
+        """
+        if len(prompts) == 0:
+            return []
+        if any(len(p) == 0 for p in prompts):
+            raise ValueError("every prompt must contain at least one token")
         b = len(prompts)
         slots = self.cfg.batch_slots
         if b > slots:
-            raise ValueError(f"{b} prompts > {slots} slots")
+            raise ValueError(
+                f"{b} prompts exceed the engine's {slots} batch slots; "
+                f"raise ServeConfig.batch_slots or split the batch"
+            )
         maxp = max(len(p) for p in prompts)
         cache_len = maxp + max_new + 1
 
@@ -83,11 +128,24 @@ class ServeEngine:
             toks[i, maxp - len(p):] = p  # left-pad
         # one jitted scan primes the cache for the whole prompt...
         cache, logits = self._prefill(self.params, cache, jnp.asarray(toks))
-        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        temp = self.cfg.temperature
         # ...and one jitted scan emits all max_new tokens; the np.asarray
         # below is the only host sync of the generation.
-        out_toks, _ = self._decode_loop(
-            self.params, cache, first, jnp.arange(max_new)
-        )
+        if temp > 0:
+            if self._sample_loop is None:
+                self._sample_loop = jax.jit(make_sample_decode_loop(self.model))
+            k_first, k_loop = jax.random.split(jax.random.PRNGKey(seed))
+            first = jax.random.categorical(
+                k_first, logits / temp, axis=-1
+            ).astype(jnp.int32)[:, None]
+            out_toks, _ = self._sample_loop(
+                self.params, cache, first, jax.random.split(k_loop, max_new),
+                jnp.float32(temp),
+            )
+        else:
+            first = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            out_toks, _ = self._decode_loop(
+                self.params, cache, first, jnp.arange(max_new)
+            )
         out = np.asarray(out_toks)  # (max_new, slots)
         return [out[:, i].tolist() for i in range(b)]

@@ -103,3 +103,27 @@ def make_decode_loop(model: Model) -> Callable:
         return toks, cache
 
     return decode_loop
+
+
+def make_sample_decode_loop(model: Model) -> Callable:
+    """(params, cache, first (B,1), keys (T,key), temperature) ->
+    (tokens (T, B), cache).
+
+    Temperature-sampled sibling of :func:`make_decode_loop`: one PRNG key
+    per step is scanned in, each next token drawn from
+    ``softmax(logits / temperature)``.  Still one device program and one
+    host sync per generate() call."""
+
+    def decode_loop(params, cache, first, keys, temperature):
+        def body(carry, key):
+            cur, cache = carry
+            logits, cache = model.decode(params, cache, {"tokens": cur})
+            nxt = jax.random.categorical(
+                key, logits[:, -1, :] / temperature, axis=-1
+            ).astype(jnp.int32)[:, None]
+            return (nxt, cache), cur[:, 0]
+
+        (_, cache), toks = jax.lax.scan(body, (first, cache), keys)
+        return toks, cache
+
+    return decode_loop

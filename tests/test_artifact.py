@@ -1,0 +1,262 @@
+"""The quality-dial API: EdgeArtifact facade + plane-truncated serving."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs.base import ArchConfig
+from repro.models.api import Model
+from repro.models.base import init_params
+from repro.quant import tree_bits_report
+from repro.quant.store import PackedWeight, QSQWeight, max_level_delta
+from repro.serve import ServeConfig, ServeEngine
+
+PROMPTS = [[1, 2, 3], [9, 9]]
+
+
+def _model_and_params():
+    cfg = ArchConfig(name="smollm-like", family="dense", n_layers=2,
+                     d_model=64, n_heads=4, n_kv=2, d_ff=128, vocab=256,
+                     dtype=jnp.float32, remat=False)
+    model = Model(cfg)
+    params = init_params(jax.random.PRNGKey(0), model.param_descs())
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def artifact():
+    model, params = _model_and_params()
+    return api.compress(model, params), model, params
+
+
+# -- plane-truncated PackedWeight ----------------------------------------
+def _a_packed_leaf(art) -> PackedWeight:
+    params, _ = art.serve_params(quality="hi")
+    leaf = params["embed"]["head"]
+    assert isinstance(leaf, PackedWeight)
+    return leaf
+
+
+def test_truncate_nbits_monotone(artifact):
+    art, _, _ = artifact
+    pw = _a_packed_leaf(art)
+    bits = [pw.truncate(d).nbits() for d in (0, 1, 2)]
+    assert bits[0] > bits[1] > bits[2]
+    # idempotent and counted from full quality
+    assert pw.truncate(1).truncate(1).nbits() == bits[1]
+    assert pw.truncate(1).n_planes == 2
+
+
+def test_truncate_error_bound(artifact):
+    """as_dense() of a truncated view stays within max_level_delta * alpha."""
+    art, _, _ = artifact
+    pw = _a_packed_leaf(art)
+    full = np.asarray(pw.as_dense())
+    scales = np.asarray(pw.scales)  # (K//G, N)
+    g = pw.group_size
+    for drop in (1, 2):
+        err = np.abs(np.asarray(pw.truncate(drop).as_dense()) - full)
+        err_g = err.reshape(scales.shape[0], g, -1)
+        bound = max_level_delta(drop) * scales[:, None, :] + 1e-6
+        assert np.all(err_g <= bound)
+
+
+def test_truncate_matmul_matches_dense(artifact):
+    """Kernel-path matmul on the truncated view == x @ truncated dense."""
+    art, _, _ = artifact
+    pw = _a_packed_leaf(art).truncate(1)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, pw.shape[0]), jnp.float32)
+    got = np.asarray(pw.matmul(x))
+    want = np.asarray(x) @ np.asarray(pw.as_dense())
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_qsq_truncate_matches_packed_truncate(artifact):
+    """Level-space truncation == plane-space truncation, bit for bit."""
+    art, _, _ = artifact
+    store = art.tree()
+    leaf = store["embed"]["head"]
+    assert isinstance(leaf, QSQWeight)
+    via_levels = np.asarray(leaf.truncate(1).as_dense())
+    via_planes = np.asarray(leaf.pack().truncate(1).as_dense())
+    np.testing.assert_array_equal(via_levels, via_planes)
+
+
+# -- the quality dial ----------------------------------------------------
+def test_tier_bits_strictly_decreasing(artifact):
+    art, _, _ = artifact
+    bits = []
+    for q in art.quality_names():
+        params, n_packed = art.serve_params(quality=q)
+        assert n_packed > 0  # every tier serves packed — no re-quantize path
+        bits.append(tree_bits_report(params)["bits"])
+    assert bits[0] > bits[1] > bits[2]
+
+
+def test_engine_quality_tiers_generate(artifact):
+    art, _, _ = artifact
+    for q in art.quality_names():
+        eng = art.engine(quality=q, batch_slots=4)
+        outs = eng.generate(PROMPTS, max_new=6)
+        assert len(outs) == 2 and all(len(o) == 6 for o in outs)
+
+
+def test_set_quality_matches_fresh_engine(artifact):
+    art, _, _ = artifact
+    eng = art.engine(quality="hi", batch_slots=4)
+    eng.set_quality("lo")
+    assert eng.quality == "lo"
+    fresh = art.engine(quality="lo", batch_slots=4)
+    assert (eng.generate(PROMPTS, max_new=6)
+            == fresh.generate(PROMPTS, max_new=6))
+    assert (tree_bits_report(eng.params)["bits"]
+            == tree_bits_report(fresh.params)["bits"])
+
+
+def test_set_quality_requires_artifact():
+    model, params = _model_and_params()
+    eng = ServeEngine(model, params, ServeConfig(batch_slots=2))
+    with pytest.raises(ValueError, match="EdgeArtifact"):
+        eng.set_quality("lo")
+
+
+# -- save / load ---------------------------------------------------------
+def test_save_load_engine_tokens_identical(artifact, tmp_path):
+    art, _, _ = artifact
+    path = art.save(tmp_path / "m.edge.npz")
+    art2 = api.load(path)
+    assert art2.arch == art.arch
+    assert art2.quality_names() == art.quality_names()
+    assert art2.drop_map("mid") == art.drop_map("mid")
+    for q in art.quality_names():
+        a = art.engine(quality=q, batch_slots=4).generate(PROMPTS, max_new=8)
+        b = art2.engine(quality=q, batch_slots=4).generate(PROMPTS, max_new=8)
+        assert a == b
+
+
+def test_saved_artifact_lower_tier_fewer_bits(artifact, tmp_path):
+    """Acceptance: one saved artifact serves a lower tier with strictly
+    fewer nbits, without re-quantizing."""
+    art, _, _ = artifact
+    art2 = api.load(art.save(tmp_path / "m.edge.npz"))
+    hi = art2.engine(quality="hi", batch_slots=2)
+    lo = art2.engine(quality="lo", batch_slots=2)
+    assert (tree_bits_report(lo.params)["bits"]
+            < tree_bits_report(hi.params)["bits"])
+    assert lo.n_packed_leaves == hi.n_packed_leaves > 0
+    assert len(lo.generate([[1, 2]], max_new=4)[0]) == 4
+
+
+def test_legacy_from_wire_matches_artifact_hi(artifact):
+    """Acceptance: the deprecated ServeEngine.from_wire path and
+    EdgeArtifact.engine(quality='hi') emit identical greedy tokens."""
+    art, model, _ = artifact
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = ServeEngine.from_wire(model, art.wire,
+                                       ServeConfig(batch_slots=4))
+    hi = art.engine(quality="hi", batch_slots=4)
+    assert (legacy.generate(PROMPTS, max_new=8)
+            == hi.generate(PROMPTS, max_new=8))
+    assert legacy.n_packed_leaves == hi.n_packed_leaves
+
+
+def test_from_wire_warns_deprecated(artifact):
+    art, model, _ = artifact
+    with pytest.warns(DeprecationWarning, match="repro.api.compress"):
+        ServeEngine.from_wire(model, art.wire, ServeConfig(batch_slots=2))
+
+
+def test_checkpoint_wire_loads_as_artifact(artifact, tmp_path):
+    """export_wire output (no meta) loads as a bare artifact; its wire tree
+    serves identically through an explicitly-provided arch config."""
+    from repro.checkpoint.manager import CheckpointConfig, CheckpointManager
+    from repro.core.policy import QuantPolicy
+    from repro.core.qsq import QSQConfig
+    from repro.quant.artifact import EdgeArtifact
+
+    art, model, params = artifact
+    mgr = CheckpointManager(CheckpointConfig(directory=str(tmp_path / "w"),
+                                             async_save=False))
+    mgr.export_wire(params, QuantPolicy(base=QSQConfig(group_size=16,
+                                                       refit_alpha=True),
+                                        min_numel=512),
+                    descs=model.param_descs())
+    bare = api.load(mgr.dir / "wire.npz")
+    assert bare.arch_config is None and bare.rank == ()
+    with pytest.raises(ValueError, match="arch config"):
+        bare.model()
+    eng = EdgeArtifact(wire=bare.wire, arch_config=model.cfg).engine(
+        quality="hi", batch_slots=2)
+    assert eng.n_packed_leaves > 0
+    # a rank-less artifact must refuse lower tiers rather than silently
+    # serving full quality under a lower tier's name
+    with pytest.raises(ValueError, match="sensitivity ranking"):
+        eng.set_quality("lo")
+
+
+def test_engine_rejects_cfg_and_kwargs(artifact):
+    from repro.serve import ServeConfig
+
+    art, _, _ = artifact
+    with pytest.raises(TypeError, match="not both"):
+        art.engine(quality="hi", serve_cfg=ServeConfig(batch_slots=2),
+                   batch_slots=4)
+
+
+# -- model-free (CNN) path ----------------------------------------------
+def test_model_free_compress_dense_tiers():
+    rng = np.random.RandomState(0)
+    params = {"w1": jnp.asarray(rng.randn(64, 32), jnp.float32),
+              "w2": jnp.asarray(rng.randn(64, 48), jnp.float32)}
+    art = api.compress(None, params)
+    assert len(art.rank) == 2
+    hi = art.dense_params(quality="hi", like=params)
+    lo = art.dense_params(quality="lo", like=params)
+    assert hi["w1"].shape == params["w1"].shape
+    # lo really truncates: reconstruction differs from hi somewhere
+    assert any(
+        not np.array_equal(np.asarray(hi[k]), np.asarray(lo[k]))
+        for k in params
+    )
+    with pytest.raises(ValueError, match="arch config"):
+        art.engine()
+
+
+# -- generate() fixes ----------------------------------------------------
+def test_generate_empty_prompt_list(artifact):
+    art, _, _ = artifact
+    assert art.engine(quality="hi", batch_slots=2).generate([]) == []
+
+
+def test_generate_empty_prompt_raises(artifact):
+    art, _, _ = artifact
+    eng = art.engine(quality="hi", batch_slots=2)
+    with pytest.raises(ValueError, match="at least one token"):
+        eng.generate([[1, 2], []])
+
+
+def test_generate_too_many_prompts_message(artifact):
+    art, _, _ = artifact
+    eng = art.engine(quality="hi", batch_slots=2)
+    with pytest.raises(ValueError, match="batch_slots"):
+        eng.generate([[1], [2], [3]])
+
+
+def test_generate_temperature_sampling(artifact):
+    art, _, _ = artifact
+    eng = art.engine(quality="hi", batch_slots=2, temperature=0.8)
+    a = eng.generate([[1, 2, 3]], max_new=8, seed=7)
+    b = eng.generate([[1, 2, 3]], max_new=8, seed=7)
+    c = eng.generate([[1, 2, 3]], max_new=8, seed=8)
+    assert a == b  # same seed reproduces
+    assert all(0 <= t < 256 for t in a[0])
+    # a different seed (or greedy) is allowed to differ; just sanity-check
+    # the sampled path actually ran the sampler
+    assert eng._sample_loop is not None
+    greedy = art.engine(quality="hi", batch_slots=2)
+    assert greedy._sample_loop is None
+    assert len(c[0]) == 8
