@@ -1,0 +1,182 @@
+"""Tile autotuner for the packed QSQ kernels.
+
+Sweeps candidate (bm, bk, bn) tile configs per benchmark shape, times the
+routed kernel (`ops.qsq_matvec` for decode shapes, `ops.qsq_matmul`
+otherwise), and writes the winners as a dispatch table
+(`kernels/dispatch.py` format): one exact entry per swept shape plus one
+"gemv"/"gemm" class default per backend (the config winning the most
+shapes of that class).
+
+On a real TPU this measures the Mosaic kernels and the table is worth
+checking in (``--apply`` overwrites ``src/repro/kernels/tuned_tiles.json``;
+re-run there after any kernel change).  On CPU the kernels execute in
+interpret mode, where timing reflects the interpreter, not the target —
+the sweep still validates that every candidate config runs and produces
+a loadable table, which is what the CI smoke uses (``--quick``).
+
+  PYTHONPATH=src python -m benchmarks.autotune [--quick] [--apply]
+      [--out PATH]
+
+Emits one ``BENCH {json}`` line per (shape, config) measurement and a
+final summary row per shape.
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit_us
+from repro.core import codec
+from repro.kernels import dispatch, ops, ref
+
+# (M, K, N, G) per shape class: decode GEMVs (M = batch slots) and
+# prefill/train GEMMs.  Tile-divisible shapes only: the tuner sweeps raw
+# kernel tiles; ragged shapes resolve THROUGH these class winners (the
+# dispatcher pads them to the fitted tile at plan time).
+GEMV_SHAPES = [
+    (1, 4096, 4096, 64),
+    (8, 2048, 2048, 64),
+    (8, 4096, 4096, 64),
+]
+GEMM_SHAPES = [
+    (128, 4096, 4096, 64),
+    (256, 2048, 2048, 64),
+]
+QUICK_SHAPES = [(8, 512, 256, 64), (64, 512, 256, 64)]
+
+# candidate tile sweeps (clamped to the shape by the kernels)
+GEMV_CANDS = {
+    "bk": (512, 1024, 2048),
+    "bn": (128, 256, 512),
+}
+GEMM_CANDS = {
+    "bm": (128, 256),
+    "bk": (256, 512),
+    "bn": (128, 256, 512),
+}
+
+
+def _inputs(m, k, n, g, seed=0):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (k, n)) * 0.05
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (m, k), jnp.bfloat16)
+    codes, scales = ref.qsq_quantize_ref(w, g, 4)
+    return x, codec.pack_bitplane(codes), scales
+
+
+def _valid(kind, m, k, n, g, cfg) -> bool:
+    """cfg tiles are pre-clamped to the shape by the sweep."""
+    if k % cfg["bk"] or cfg["bk"] % codec.PLANE_GROUP or cfg["bk"] % g:
+        return False
+    if n % cfg["bn"]:
+        return False
+    if kind == "gemm" and m % cfg["bm"]:
+        return False
+    return True
+
+
+def _sweep_one(kind, m, k, n, g, verbose):
+    x, planes, scales = _inputs(m, k, n, g)
+    cands = GEMV_CANDS if kind == "gemv" else GEMM_CANDS
+    names = list(cands)
+    dims = {"bm": m, "bk": k, "bn": n}
+    best = None
+    seen = set()
+    for vals in itertools.product(*(cands[nm] for nm in names)):
+        # clamp to the shape up front: dedupes candidates that the kernel
+        # would clamp to the same tiling, and keeps the stored winner's
+        # tiles <= the dimension they tile
+        cfg = {nm: min(v, dims[nm]) for nm, v in zip(names, vals)}
+        if tuple(sorted(cfg.items())) in seen:
+            continue
+        seen.add(tuple(sorted(cfg.items())))
+        if not _valid(kind, m, k, n, g, cfg):
+            continue
+        if kind == "gemv":
+            fn = lambda x, p, s: ops.qsq_matvec(  # noqa: E731
+                x, p, s, group_size=g, bk=cfg["bk"], bn=cfg["bn"])
+        else:
+            fn = lambda x, p, s: ops.qsq_matmul(  # noqa: E731
+                x, p, s, group_size=g, bm=cfg["bm"], bk=cfg["bk"],
+                bn=cfg["bn"])
+        us = timeit_us(fn, x, planes, scales, warmup=1, iters=3)
+        print("BENCH " + json.dumps({
+            "bench": "autotune", "case": dispatch.shape_key(m, k, n, g),
+            "kind": kind, **cfg, "us": round(us, 1),
+        }))
+        if best is None or us < best[0]:
+            best = (us, cfg)
+    if best is None:
+        if verbose:
+            print(f"  {kind} {dispatch.shape_key(m, k, n, g)}: no candidate "
+                  f"tile divides this shape — skipping (ragged shapes are "
+                  f"padded by the dispatcher, not tuned directly)")
+        return None
+    us, cfg = best
+    full = {"kind": kind, "bm": cfg.get("bm", min(m, dispatch.SUBLANE)),
+            "bk": cfg["bk"], "bn": cfg["bn"]}
+    if verbose:
+        print(f"  {kind} {dispatch.shape_key(m, k, n, g)}: best {full} "
+              f"({us:.0f}us)")
+    return us, full
+
+
+def tune(quick: bool = False, verbose: bool = True) -> tuple[dict, list]:
+    """Run the sweep; returns (dispatch-format table, bench rows)."""
+    backend = jax.default_backend()
+    if verbose and backend != "tpu":
+        print(f"  NOTE: backend={backend} runs Pallas in interpret mode — "
+              f"timings rank the interpreter, not the target; re-tune on "
+              f"TPU before trusting the table")
+    shapes = ([(s, dispatch.shape_class(s[0])) for s in QUICK_SHAPES]
+              if quick else
+              [(s, "gemv") for s in GEMV_SHAPES]
+              + [(s, "gemm") for s in GEMM_SHAPES])
+    entries: dict = {}
+    rows = []
+    class_votes: dict = {"gemv": {}, "gemm": {}}
+    for (m, k, n, g), kind in shapes:
+        result = _sweep_one(kind, m, k, n, g, verbose)
+        if result is None:
+            continue
+        us, cfg = result
+        entries[dispatch.shape_key(m, k, n, g)] = cfg
+        rows.append((f"autotune/{dispatch.shape_key(m, k, n, g)}", us,
+                     f"kind={kind}|bm={cfg['bm']}|bk={cfg['bk']}|bn={cfg['bn']}"))
+        key = json.dumps(cfg, sort_keys=True)
+        class_votes[kind][key] = class_votes[kind].get(key, 0) + 1
+    for kind, votes in class_votes.items():
+        if votes:
+            entries[kind] = json.loads(max(votes, key=votes.get))
+    return {backend: entries}, rows
+
+
+def main(verbose: bool = True, quick: bool = False):
+    table, rows = tune(quick=quick, verbose=verbose)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes only (CI smoke)")
+    ap.add_argument("--apply", action="store_true",
+                    help="merge winners into the checked-in table "
+                         "(src/repro/kernels/tuned_tiles.json)")
+    ap.add_argument("--out", default="",
+                    help="also write the table to this path")
+    args = ap.parse_args()
+    table, _ = tune(quick=args.quick)
+    if args.out:
+        print(f"wrote {dispatch.save_tuned_table(table, args.out)}")
+    if args.apply:
+        merged = dict(dispatch.load_tuned_table(dispatch.DEFAULT_TABLE_PATH))
+        for backend, entries in table.items():
+            merged.setdefault(backend, {}).update(entries)
+        print(f"updated {dispatch.save_tuned_table(merged, dispatch.DEFAULT_TABLE_PATH)}")
+    if not args.out and not args.apply:
+        print(json.dumps(table, indent=2, sort_keys=True))

@@ -1,12 +1,20 @@
 """Kernel microbenchmarks: fused QSQ dequant-matmul vs dense matmul.
 
-On this CPU container the Pallas kernel runs in interpret mode (correctness
+On this CPU container the Pallas kernels run in interpret mode (correctness
 only — interpret timing is meaningless), so the WALL numbers compare the
 jitted XLA reference paths; the DERIVED numbers are the structural win on the
 target TPU: HBM bytes for weight streaming (the paper's energy/bandwidth
 claim, Eq. 11/12, restated as the decode-shape memory-roofline term).
+
+Each case emits one ``BENCH {json}`` line (bench=kernels) carrying the
+wall times, the HBM ratio, and the route + tiles `kernels/dispatch.py`
+picked for the shape — including the decode-shape GEMV cases and a
+tile-ragged case that exercises the padded dispatch — so the perf
+trajectory captures kernel-level numbers alongside ``bench_serve``.
 """
 from __future__ import annotations
+
+import json
 
 import jax
 import jax.numpy as jnp
@@ -14,19 +22,24 @@ import jax.numpy as jnp
 from benchmarks.common import timeit_us
 from repro.core import codec
 from repro.core.energy import TPU_HBM_BW
-from repro.kernels import ops, ref
+from repro.kernels import dispatch, ops, ref
 
 CASES = [
-    # (M, K, N, G) — decode-ish GEMMs (small M = batch, big K/N = weights)
+    # (M, K, N, G) — decode GEMVs (M = batch slots x 1 token)
+    (1, 4096, 4096, 64),
     (8, 2048, 2048, 64),
     (8, 4096, 4096, 64),
+    # prefill/train GEMMs
     (128, 4096, 4096, 64),
+    # tile-ragged decode shape: goes through padded GEMV dispatch
+    (8, 2080, 300, 16),
 ]
+QUICK_CASES = [(8, 512, 512, 64), (64, 512, 512, 64), (8, 2080, 300, 16)]
 
 
-def main(verbose: bool = True):
+def main(verbose: bool = True, quick: bool = False):
     rows = []
-    for m, k, n, g in CASES:
+    for m, k, n, g in (QUICK_CASES if quick else CASES):
         key = jax.random.PRNGKey(0)
         w = jax.random.normal(key, (k, n), jnp.float32) * 0.05
         x = jax.random.normal(key, (m, k), jnp.bfloat16)
@@ -34,9 +47,21 @@ def main(verbose: bool = True):
         wq = ref.qsq_dequant_ref(planes, scales, g).astype(jnp.bfloat16)
 
         dense_us = timeit_us(jax.jit(lambda x, w: x @ w), x, wq)
-        fused_us = timeit_us(
-            jax.jit(lambda x, p, s: ref.qsq_matmul_ref(x, p, s, g)), x, planes, scales
-        )
+        # On TPU, time the actually-dispatched kernel (routed, padded);
+        # interpret-mode kernel timing is meaningless, so CPU times the
+        # jitted XLA packed reference instead — the BENCH line says which.
+        on_tpu = jax.default_backend() == "tpu"
+        if on_tpu:
+            fused_us = timeit_us(
+                jax.jit(lambda x, p, s: dispatch.packed_matmul(
+                    x, p, s, group_size=g)), x, planes, scales
+            )
+        else:
+            fused_us = timeit_us(
+                jax.jit(lambda x, p, s: ref.qsq_matmul_ref(x, p, s, g)),
+                x, planes, scales
+            )
+        plan = dispatch.plan(m, k, n, g)
 
         wbytes_dense = k * n * 2  # bf16
         wbytes_packed = planes.size * 4 + scales.size * 4
@@ -45,26 +70,48 @@ def main(verbose: bool = True):
         t_dense = wbytes_dense / TPU_HBM_BW * 1e6
         t_packed = wbytes_packed / TPU_HBM_BW * 1e6
 
+        case = dispatch.shape_key(m, k, n, g)
         name = f"kernels/qsq_matmul_{m}x{k}x{n}"
         rows.append((name, fused_us,
                      f"dense_us={dense_us:.0f}|hbm_ratio={ratio:.2f}x"
-                     f"|tpu_wstream_us={t_packed:.1f}_vs_{t_dense:.1f}"))
+                     f"|tpu_wstream_us={t_packed:.1f}_vs_{t_dense:.1f}"
+                     f"|route={plan.route}"))
+        print("BENCH " + json.dumps({
+            "bench": "kernels",
+            "case": case,
+            "route": plan.route,
+            "tiles": [plan.bm, plan.bk, plan.bn],
+            "padded": plan.padded,
+            "timed": "dispatch" if on_tpu else "xla_ref",
+            "fused_us": round(fused_us, 1),
+            "dense_us": round(dense_us, 1),
+            "hbm_ratio": round(ratio, 2),
+            "tpu_wstream_us": round(t_packed, 1),
+            "tpu_wstream_dense_us": round(t_dense, 1),
+        }))
         if verbose:
-            print(f"  {name}: xla_fused={fused_us:.0f}us dense={dense_us:.0f}us "
+            fl = "dispatch" if on_tpu else "xla_fused"
+            print(f"  {name}: {fl}={fused_us:.0f}us dense={dense_us:.0f}us "
                   f"| weight bytes {wbytes_packed / 1e6:.2f}MB vs "
                   f"{wbytes_dense / 1e6:.2f}MB ({ratio:.2f}x) "
-                  f"| TPU weight-stream {t_packed:.1f}us vs {t_dense:.1f}us")
+                  f"| TPU weight-stream {t_packed:.1f}us vs {t_dense:.1f}us "
+                  f"| route {plan.route} tiles {plan.bm}x{plan.bk}x{plan.bn}"
+                  f"{' (padded)' if plan.padded else ''}")
 
     # encode throughput (grad compression / checkpoint writer path)
-    k, n, g = 4096, 4096, 64
+    k, n, g = (512, 512, 64) if quick else (4096, 4096, 64)
     w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.05
     enc_us = timeit_us(
         jax.jit(lambda w: ref.qsq_quantize_ref(w, g, 4)), w
     )
-    rows.append(("kernels/qsq_quantize_4096x4096", enc_us,
-                 f"GBps={(k * n * 4) / (enc_us / 1e6) / 1e9:.2f}"))
+    gbps = (k * n * 4) / (enc_us / 1e6) / 1e9
+    rows.append((f"kernels/qsq_quantize_{k}x{n}", enc_us, f"GBps={gbps:.2f}"))
+    print("BENCH " + json.dumps({
+        "bench": "kernels", "case": f"quantize_{k}x{n}",
+        "us": round(enc_us, 1), "GBps": round(gbps, 2),
+    }))
     if verbose:
-        print(f"  encode 4096x4096: {enc_us:.0f}us")
+        print(f"  encode {k}x{n}: {enc_us:.0f}us")
     return rows
 
 

@@ -20,16 +20,20 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from benchmarks.common import timeit_us
 from repro import api
 from repro.configs.base import ArchConfig
 from repro.models.api import Model
 from repro.models.base import init_params
 from repro.quant import tree_bits_report
 from repro.serve import ServeConfig, ServeEngine
+from repro.train.step import make_cache_prefill_step
 
 PROMPTS = [[1, 2, 3], [9, 9], [100, 42, 7, 8]]
 MAX_NEW = 16
+PREFILL_LEN = 16  # acceptance: one-dispatch beats scan at prompt len >= 16
 
 
 def _model():
@@ -73,7 +77,40 @@ def _measure(name, eng, params, rows, stats, verbose):
     return stats[name]
 
 
-def main(verbose: bool = True):
+def _prefill_compare(model, params, plen: int = PREFILL_LEN, slots: int = 4):
+    """(fused_us, scan_us) per prompt batch at prompt length ``plen``.
+
+    Fused = the engine's ONE-DISPATCH full-sequence prefill (packed weights
+    stream once per prompt).  Scan = the legacy per-token lax.scan over
+    decode steps (weights stream once per TOKEN) — kept here only as the
+    baseline the tentpole replaced."""
+    cache = init_params(jax.random.PRNGKey(0), model.cache_descs(slots, plen + 2))
+    toks = jnp.asarray(
+        np.random.default_rng(0).integers(1, model.cfg.vocab, (slots, plen)),
+        jnp.int32,
+    )
+    lens = jnp.full((slots,), plen, jnp.int32)
+
+    fused = jax.jit(make_cache_prefill_step(model))
+
+    def scan_prefill(params, cache, tokens):
+        def body(cache, tok):
+            logits, cache = model.decode(params, cache, {"tokens": tok})
+            return cache, logits[:, -1, :]
+
+        cache, logits = jax.lax.scan(
+            body, cache, jnp.moveaxis(tokens, 1, 0)[:, :, None]
+        )
+        return cache, logits[-1]
+
+    scan = jax.jit(scan_prefill)
+    fused_us = timeit_us(fused, params, cache, toks, lens, warmup=1, iters=5)
+    scan_us = timeit_us(scan, params, cache, toks, warmup=1, iters=5)
+    return fused_us, scan_us
+
+
+def main(verbose: bool = True, quick: bool = False):
+    del quick  # the serve bench is already its own smallest configuration
     model, params = _model()
     artifact = api.compress(model, params)
 
@@ -94,9 +131,24 @@ def main(verbose: bool = True):
             (engines["wire_dense"], engines["wire_packed"])]
     assert outs[0] == outs[1], "packed engine diverged from dense decode"
 
+    # per-prompt prefill cost on the packed tree: the one-dispatch prefill
+    # streams every packed weight once per prompt; the scan streamed them
+    # once per token.
+    fused_us, scan_us = _prefill_compare(model, engines["wire_packed"].params)
+    rows.append(("serve/prefill_one_dispatch", fused_us,
+                 f"scan_us={scan_us:.0f}|len={PREFILL_LEN}"
+                 f"|speedup={scan_us / max(fused_us, 1e-9):.2f}x"))
+    if verbose:
+        print(f"  prefill(len={PREFILL_LEN}): one-dispatch {fused_us:.0f}us "
+              f"vs scan {scan_us:.0f}us "
+              f"({scan_us / max(fused_us, 1e-9):.2f}x)")
+
     print("BENCH " + json.dumps({"bench": "serve",
                                  "prompts": len(PROMPTS),
                                  "max_new": MAX_NEW,
+                                 "prefill_len": PREFILL_LEN,
+                                 "prefill_us": round(fused_us, 1),
+                                 "scan_prefill_us": round(scan_us, 1),
                                  **stats}))
 
     # quality-tier sweep: one engine per tier from the SAME artifact, lower

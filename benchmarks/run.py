@@ -2,7 +2,11 @@
 """Benchmark orchestrator: runs every paper-table/figure reproduction and
 prints one CSV row per measurement (name,us_per_call,derived).
 
-  PYTHONPATH=src python -m benchmarks.run [--only table3,fig9,...]
+  PYTHONPATH=src python -m benchmarks.run [--only table3,fig9,...] [--quick]
+
+``--quick`` is the CI smoke: the kernel/dispatch/autotune/serve benches on
+reduced cases, so a regression that only breaks benchmarks fails the
+pipeline pre-merge (a couple of minutes, no paper-figure training loops).
 """
 from __future__ import annotations
 
@@ -11,8 +15,8 @@ import sys
 import traceback
 
 from benchmarks import (
-    bench_compression, bench_fig7, bench_fig8, bench_fig9, bench_fig10,
-    bench_fig11, bench_kernels, bench_serve, bench_table3,
+    autotune, bench_compression, bench_fig7, bench_fig8, bench_fig9,
+    bench_fig10, bench_fig11, bench_kernels, bench_serve, bench_table3,
 )
 
 BENCHES = {
@@ -25,21 +29,42 @@ BENCHES = {
     "kernels": bench_kernels.main,
     "compression": bench_compression.main,
     "serve": bench_serve.main,
+    "autotune": autotune.main,
 }
+
+# benches with a reduced-case fast mode (main(verbose, quick=True))
+QUICK_BENCHES = ("kernels", "autotune", "serve")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="comma-separated bench names")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: kernel/dispatch/serve benches, small cases")
     args = ap.parse_args()
-    names = [n for n in args.only.split(",") if n] or list(BENCHES)
+    if args.quick:
+        names = [n for n in (args.only.split(",") if args.only else QUICK_BENCHES)
+                 if n]
+        skipped = [n for n in names if n not in QUICK_BENCHES]
+        if skipped:
+            print(f"--quick: skipping {skipped} (no fast mode; quick benches "
+                  f"are {list(QUICK_BENCHES)})", file=sys.stderr)
+        names = [n for n in names if n in QUICK_BENCHES]
+    else:
+        names = [n for n in args.only.split(",") if n] or [
+            n for n in BENCHES if n != "autotune"
+        ]
 
     rows = []
     failed = []
     for name in names:
         print(f"=== {name} ===", flush=True)
         try:
-            rows.extend(BENCHES[name](verbose=True))
+            fn = BENCHES[name]
+            if args.quick and name in QUICK_BENCHES:
+                rows.extend(fn(verbose=True, quick=True))
+            else:
+                rows.extend(fn(verbose=True))
         except Exception:  # noqa: BLE001 — report all benches even if one dies
             failed.append(name)
             traceback.print_exc()

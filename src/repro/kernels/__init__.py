@@ -1,12 +1,21 @@
 """Pallas TPU kernels for the QSQ hot spots.
 
 qsq_matmul   — fused 3-bit dequant + matmul (the Table-II decoder on-chip)
+qsq_matvec   — small-M (decode-shape) GEMV specialization of the above
 qsq_quantize — Eq. 9 + nearest-level encode (checkpoint/grad compression)
+dispatch     — shape-aware routing between the kernels and the XLA ref,
+               with tile padding for ragged shapes and a tuned-tile table
+               (benchmarks/autotune.py writes it)
 
-Each has a pure-jnp oracle in ref.py; tests sweep shapes/dtypes with
+Each kernel has a pure-jnp oracle in ref.py; tests sweep shapes/dtypes with
 interpret=True and assert_allclose against the oracle.
 """
-from repro.kernels.ops import qsq_matmul, qsq_quantize, pack_weight, auto_interpret
+from repro.kernels.ops import (
+    qsq_matmul, qsq_matvec, qsq_quantize, pack_weight, auto_interpret,
+)
 from repro.kernels import ref
 
-__all__ = ["qsq_matmul", "qsq_quantize", "pack_weight", "auto_interpret", "ref"]
+__all__ = [
+    "qsq_matmul", "qsq_matvec", "qsq_quantize", "pack_weight",
+    "auto_interpret", "ref",
+]

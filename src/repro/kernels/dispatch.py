@@ -1,0 +1,297 @@
+"""Shape-aware kernel dispatch for the packed QSQ matmul.
+
+Every ``PackedWeight.matmul`` lands here.  The dispatcher keys on
+(M, K, N, G, backend) and routes to the best available path:
+
+* ``pallas_gemv`` — the small-M decode kernel (`qsq_matvec.py`): one M
+  block, VMEM scratch accumulator, GEMV-proportioned tiles;
+* ``pallas_gemm`` — the tiled MXU kernel (`qsq_matmul.py`) for prefill /
+  train shapes;
+* ``xla_ref``     — the pure-XLA reference (`ref.qsq_matmul_ref`), used
+  when the kernel switch (`quant.store.set_packed_matmul_kernel(False)`)
+  is off.  It still consumes the packed representation — there is no
+  dense-weight fallback path anywhere in dispatch.
+
+Shapes that don't divide the chosen tile are **zero-padded** to it (M up
+to the sublane, N up to the lane/tile, K never — K is always a common
+multiple of the 32-code plane word and the scale group, so an exact
+K tile always exists).  Zero x rows and zero plane words contribute
+exact zeros, so padding changes no output value; the pad is sliced off
+after the kernel.  This eliminates the old behaviour where a tile-ragged
+shape silently materialized the whole dense weight inside jit.
+
+Tile configs resolve, in order, from:
+1. an exact (backend, M, K, N, G) entry in the tuned table,
+2. the backend's shape-class default ("gemv" / "gemm") in the table,
+3. built-in heuristics.
+
+The tuned table is a checked-in JSON (`kernels/tuned_tiles.json`) written
+by ``benchmarks/autotune.py``; point ``REPRO_TUNED_TABLE`` at another file
+(or call :func:`set_tuned_table`) for a data-driven override.
+
+Dispatch decisions are counted in :data:`counters` (trace-time, keyed by
+route and ``route:padded|exact``) so tests and benchmarks can assert which
+path a shape took.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import json
+import math
+import os
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codec
+from repro.kernels import ref
+
+PLANE = codec.PLANE_GROUP
+
+# M at or below this routes to the GEMV kernel (decode shapes: batch slots
+# x one token).  Above it the MXU GEMM tiling wins.
+GEMV_M_MAX = 16
+
+# TPU register tiling: f32 sublane x lane.  Padded tiles honor these so a
+# plan that validates in interpret mode is also Mosaic-legal.
+SUBLANE = 8
+LANE = 128
+
+ROUTE_GEMV = "pallas_gemv"
+ROUTE_GEMM = "pallas_gemm"
+ROUTE_XLA = "xla_ref"
+
+DEFAULT_TABLE_PATH = Path(__file__).parent / "tuned_tiles.json"
+TABLE_ENV = "REPRO_TUNED_TABLE"
+
+# trace-time dispatch counters: route name, plus "<route>:padded|exact"
+counters: collections.Counter = collections.Counter()
+
+
+def reset_counters() -> None:
+    counters.clear()
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """One kernel tiling: which kernel, and its (bm, bk, bn) preferences."""
+
+    kind: str  # "gemv" | "gemm"
+    bm: int
+    bk: int
+    bn: int
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A resolved dispatch: route + fitted tiles + padded problem shape."""
+
+    route: str
+    m: int
+    k: int
+    n: int
+    pm: int  # padded M (== m when exact)
+    pn: int  # padded N
+    bm: int = 0
+    bk: int = 0
+    bn: int = 0
+
+    @property
+    def padded(self) -> bool:
+        return (self.pm, self.pn) != (self.m, self.n)
+
+
+# --------------------------------------------------------------------------
+# Tuned-table IO
+# --------------------------------------------------------------------------
+_BUILTIN_CLASS_DEFAULTS = {
+    "gemv": TileConfig(kind="gemv", bm=SUBLANE, bk=1024, bn=256),
+    "gemm": TileConfig(kind="gemm", bm=256, bk=512, bn=256),
+}
+
+_TABLE: dict | None = None
+
+
+def shape_key(m: int, k: int, n: int, g: int) -> str:
+    return f"{m}x{k}x{n}g{g}"
+
+
+def shape_class(m: int) -> str:
+    return "gemv" if m <= GEMV_M_MAX else "gemm"
+
+
+def load_tuned_table(path: str | Path | None = None) -> dict:
+    """Read a dispatch table JSON: {backend: {key: {kind, bm, bk, bn}}}."""
+    path = Path(path or os.environ.get(TABLE_ENV) or DEFAULT_TABLE_PATH)
+    with open(path) as f:
+        table = json.load(f)
+    table.pop("version", None)
+    return table
+
+
+def save_tuned_table(table: dict, path: str | Path) -> Path:
+    """Write a dispatch table JSON (inverse of :func:`load_tuned_table`)."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    out = {"version": 1}
+    for backend, entries in table.items():
+        out[backend] = {
+            key: cfg.to_json() if isinstance(cfg, TileConfig) else dict(cfg)
+            for key, cfg in entries.items()
+        }
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def set_tuned_table(table: dict | str | Path | None) -> None:
+    """Install a table override (dict or path); None re-reads the default."""
+    global _TABLE
+    if table is None:
+        _TABLE = None
+        return
+    if isinstance(table, (str, Path)):
+        table = load_tuned_table(table)
+    _TABLE = dict(table)
+
+
+def _table() -> dict:
+    global _TABLE
+    if _TABLE is None:
+        try:
+            _TABLE = load_tuned_table()
+        except (OSError, json.JSONDecodeError):
+            if os.environ.get(TABLE_ENV):
+                # an explicit override that doesn't load is a config error,
+                # not something to silently paper over with builtin tiles
+                raise
+            _TABLE = {}
+    return _TABLE
+
+
+def _resolve_config(m: int, k: int, n: int, g: int, backend: str) -> TileConfig:
+    """(shape, backend) -> preferred TileConfig, deterministically."""
+    entries = _table().get(backend, {})
+    raw = entries.get(shape_key(m, k, n, g)) or entries.get(shape_class(m))
+    if raw is not None:
+        cfg = raw if isinstance(raw, TileConfig) else TileConfig(**raw)
+    else:
+        cfg = _BUILTIN_CLASS_DEFAULTS[shape_class(m)]
+    if cfg.kind == "gemv" and m > GEMV_M_MAX:
+        # a table can promote small-M shapes to GEMM, never the reverse:
+        # the GEMV kernel keeps all of M in one block.
+        cfg = dataclasses.replace(cfg, kind="gemm")
+    return cfg
+
+
+# --------------------------------------------------------------------------
+# Tile fitting (with padding for ragged shapes)
+# --------------------------------------------------------------------------
+def _fit_dim(dim: int, pref: int, align: int) -> tuple[int, int]:
+    """Fit a tile to ``dim``: returns (tile, padded_dim) with tile | padded.
+
+    A dim at most ``pref`` is one whole block (no padding; a single
+    unaligned block is masked by Mosaic).  Larger dims prefer an exact
+    ``align``-multiple divisor (no padding); failing that, the
+    ``align``-multiple tile at most ``pref`` that minimizes zero padding
+    (ties to the larger tile), with ``dim`` padded up to it.
+    """
+    pref = max(pref, align)
+    if dim <= pref:
+        return dim, dim
+    for t in range(pref, 0, -1):
+        if dim % t == 0 and t % align == 0:
+            return t, dim
+    cands = range(align, pref + 1, align)
+    tile = min(cands, key=lambda t: (-(-dim // t) * t, -t))
+    return tile, -(-dim // tile) * tile
+
+
+def _fit_k(k: int, pref: int, g: int) -> int:
+    """K tile: largest divisor of K <= pref that the plane word (32) and the
+    scale group both divide.  Always exists — K is a common multiple of 32
+    and G, hence of lcm(32, G) — so K is never padded (padding K would also
+    mean fabricating scale rows)."""
+    mult = (PLANE * g) // math.gcd(PLANE, g)
+    for t in range(min(pref, k), 0, -1):
+        if k % t == 0 and t % mult == 0:
+            return t
+    return mult  # mult divides k by construction
+
+
+def plan(m: int, k: int, n: int, g: int, *, backend: str | None = None,
+         use_kernel: bool = True) -> Plan:
+    """Resolve (M, K, N, G, backend) to a concrete kernel plan."""
+    if k % PLANE:
+        raise ValueError(f"K={k} is not a multiple of the {PLANE}-code plane word")
+    if k % g:
+        raise ValueError(f"group_size={g} does not divide K={k}")
+    if not use_kernel:
+        return Plan(route=ROUTE_XLA, m=m, k=k, n=n, pm=m, pn=n)
+    backend = backend or jax.default_backend()
+    cfg = _resolve_config(m, k, n, g, backend)
+    bk = _fit_k(k, cfg.bk, g)
+    if cfg.kind == "gemv":
+        pm = m if m % SUBLANE == 0 or m < SUBLANE else -(-m // SUBLANE) * SUBLANE
+        bn, pn = _fit_dim(n, cfg.bn, LANE)
+        return Plan(route=ROUTE_GEMV, m=m, k=k, n=n, pm=pm, pn=pn,
+                    bm=pm, bk=bk, bn=bn)
+    bm, pm = _fit_dim(m, cfg.bm, SUBLANE)
+    bn, pn = _fit_dim(n, cfg.bn, LANE)
+    return Plan(route=ROUTE_GEMM, m=m, k=k, n=n, pm=pm, pn=pn,
+                bm=bm, bk=bk, bn=bn)
+
+
+# --------------------------------------------------------------------------
+# Execution
+# --------------------------------------------------------------------------
+def _pad_axis(a: jax.Array, axis: int, to: int) -> jax.Array:
+    if a.shape[axis] == to:
+        return a
+    pads = [(0, 0)] * a.ndim
+    pads[axis] = (0, to - a.shape[axis])
+    return jnp.pad(a, pads)
+
+
+def packed_matmul(
+    x: jax.Array,
+    planes: jax.Array,
+    scales: jax.Array,
+    *,
+    group_size: int,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """x (M,K) @ decode(planes (K//32,3,N), scales (K//G,N)) -> (M,N) f32.
+
+    The one entry point every packed matmul goes through: plans on the
+    static shapes, zero-pads ragged M/N to the fitted tile, runs the
+    routed kernel, and slices the pad back off.  Never materializes the
+    dense weight."""
+    m, k = x.shape
+    n = planes.shape[-1]
+    p = plan(m, k, n, group_size, use_kernel=use_kernel)
+    counters[p.route] += 1
+    counters[f"{p.route}:{'padded' if p.padded else 'exact'}"] += 1
+
+    if p.route == ROUTE_XLA:
+        return ref.qsq_matmul_ref(x, planes, scales, group_size)
+
+    from repro.kernels import ops  # deferred: keeps pallas off cold paths
+
+    xp = _pad_axis(x, 0, p.pm)
+    pp = _pad_axis(planes, 2, p.pn)
+    sp = _pad_axis(scales, 1, p.pn)
+    if p.route == ROUTE_GEMV:
+        out = ops.qsq_matvec(xp, pp, sp, group_size=group_size,
+                             bk=p.bk, bn=p.bn, interpret=interpret)
+    else:
+        out = ops.qsq_matmul(xp, pp, sp, group_size=group_size,
+                             bm=p.bm, bk=p.bk, bn=p.bn, interpret=interpret)
+    return out[:m, :n] if p.padded else out

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 from repro.core import codec
 from repro.kernels import ref
 from repro.kernels.qsq_matmul import qsq_matmul as _qsq_matmul_pallas
+from repro.kernels.qsq_matvec import qsq_matvec as _qsq_matvec_pallas
 from repro.kernels.qsq_quantize import qsq_quantize as _qsq_quantize_pallas
 
 
@@ -38,6 +39,28 @@ def qsq_matmul(
         interpret = auto_interpret()
     return _qsq_matmul_pallas(
         x, planes, scales, group_size=group_size, bm=bm, bk=bk, bn=bn,
+        interpret=interpret,
+    )
+
+
+def qsq_matvec(
+    x: jax.Array,
+    planes: jax.Array,
+    scales: jax.Array,
+    *,
+    group_size: int,
+    bk: int = 1024,
+    bn: int = 256,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Small-M x @ dequant(planes, scales) — the decode-shape GEMV kernel."""
+    if not use_pallas:
+        return ref.qsq_matmul_ref(x, planes, scales, group_size)
+    if interpret is None:
+        interpret = auto_interpret()
+    return _qsq_matvec_pallas(
+        x, planes, scales, group_size=group_size, bk=bk, bn=bn,
         interpret=interpret,
     )
 

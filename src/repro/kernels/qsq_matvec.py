@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: fused QSQ dequant + small-M matmul (decode GEMV).
+
+``qsq_matmul`` tiles all three dims for the MXU, which is right for
+prefill/train GEMMs but wasteful at decode shapes: with M = 8 batch slots a
+256-row M tile is 97% padding, and the (i, j, k) grid re-reads the output
+block every K step.  This kernel is the GEMV specialization the dispatcher
+(`kernels/dispatch.py`) routes small-M matmuls to:
+
+* the whole (small) M extent lives in one block — no M grid dim, no M
+  padding beyond the 8-row sublane;
+* the grid is (N, K) with K innermost ("arbitrary"), accumulating into a
+  **VMEM scratch accumulator** that is written back to the output exactly
+  once, on the last K step — the output block is never re-streamed;
+* scales are folded into the plane unpack (one multiply on the decoded
+  levels while they are still in VREGs), so the weight tile goes bits ->
+  levels -> scaled f32 without a dense round-trip;
+* tiles default to GEMV proportions (deep K, modest N) instead of the
+  square 256x512x256 GEMM config — the weight stream, not the MXU, is the
+  roofline term at M <= 16.
+
+Layout matches qsq_matmul: x (M, K), planes (K//32, 3, N) int32,
+scales (K//G, N) f32 -> out (M, N) f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.qsq_matmul import (
+    _COMPILER_PARAMS, PLANE, _decode_codes, _unpack_planes,
+)
+
+
+def _qsq_matvec_kernel(
+    x_ref, planes_ref, scales_ref, o_ref, acc_ref, *, bk: int, group_size: int, nk: int
+):
+    bn = o_ref.shape[1]
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    codes = _unpack_planes(planes_ref[...], bk, bn)           # (bk, bn) int32
+    # scales folded into the unpack: levels scale while still in VREGs
+    levels = _decode_codes(codes).astype(jnp.float32)
+    ng = bk // group_size
+    w = (levels.reshape(ng, group_size, bn)
+         * scales_ref[...][:, None, :]).reshape(bk, bn)
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w.astype(x_ref.dtype), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("group_size", "bk", "bn", "interpret")
+)
+def qsq_matvec(
+    x: jax.Array,
+    planes: jax.Array,
+    scales: jax.Array,
+    *,
+    group_size: int,
+    bk: int = 1024,
+    bn: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Small-M fused 3-bit dequant matmul: x (M,K) @ decode(planes, scales).
+
+    The full M extent is one block; callers (the dispatcher) keep M small
+    (decode shapes) and pad/tile K, N so ``bk | K`` and ``bn | N``.
+    """
+    m, kdim = x.shape
+    n = planes.shape[-1]
+    if planes.shape != (kdim // PLANE, 3, n):
+        raise ValueError(f"planes shape {planes.shape} != {(kdim // PLANE, 3, n)}")
+    if scales.shape != (kdim // group_size, n):
+        raise ValueError(f"scales shape {scales.shape} != {(kdim // group_size, n)}")
+    bk, bn = min(bk, kdim), min(bn, n)
+    if kdim % bk or n % bn:
+        raise ValueError(f"shape ({m},{kdim},{n}) not divisible by tile (bk={bk},bn={bn})")
+    if bk % PLANE or bk % group_size:
+        raise ValueError(f"bk={bk} must be a multiple of 32 and group_size={group_size}")
+
+    nk = kdim // bk
+    grid = (n // bn, nk)
+    kernel = functools.partial(
+        _qsq_matvec_kernel, bk=bk, group_size=group_size, nk=nk
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, bk), lambda j, k: (0, k)),
+            pl.BlockSpec((bk // PLANE, 3, bn), lambda j, k: (k, 0, j)),
+            pl.BlockSpec((bk // group_size, bn), lambda j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda j, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((m, bn), jnp.float32)],
+        compiler_params=_COMPILER_PARAMS(dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, planes, scales)

@@ -95,15 +95,21 @@ class Model:
             return encdec.encdec_decode(params, self.cfg, cache, tokens)
         raise ValueError(f)
 
-    def prefill(self, params, cache, tokens):
-        """Prime a decode cache for whole (B, S) prompts in one scanned step.
+    def prefill(self, params, cache, tokens, lengths=None):
+        """Prime a decode cache for whole (B, S) left-padded prompts.
 
-        Returns (cache, last_logits).  Family-agnostic: every family that
-        can decode() can prefill.  ``params`` may be any WeightStore mix —
-        dense arrays, QSQ levels, or packed bit-planes."""
+        Attention families run ONE full-sequence causal forward (packed
+        weights stream once per prompt); recurrent/cross families scan per
+        token.  ``lengths`` (B,) is the real token count per slot — left
+        padding beyond it is masked out of the KV cache.  Defaults to
+        "no padding" (every slot length S).  Returns (cache, last_logits).
+        ``params`` may be any WeightStore mix — dense arrays, QSQ levels,
+        or packed bit-planes."""
         from repro.train.step import make_cache_prefill_step
 
-        return make_cache_prefill_step(self)(params, cache, tokens)
+        if lengths is None:
+            lengths = jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)
+        return make_cache_prefill_step(self)(params, cache, tokens, lengths)
 
     def serve_params(self, wire_tree, packed: bool = True, drop_map=None):
         """Wire artifact -> serving param tree (packed matmul weights when

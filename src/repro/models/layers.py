@@ -206,11 +206,20 @@ def attention(
 
 class KVCache(NamedTuple):
     """Decode-time cache.  For SWA the buffers are ring buffers of length
-    window; otherwise they are full-length."""
+    window; otherwise they are full-length.
+
+    ``pad`` is the per-slot left-pad count of the prompt that primed the
+    cache: entries at cache index < pad[b] hold projections of pad tokens
+    and are masked out of every attention (so one slot's padding can never
+    leak into another prompt's logits).  RoPE positions are pad-relative
+    (cache index - pad), so a prompt sees the same positions it would see
+    served alone.  A zero-initialized cache (pad == 0) reproduces the
+    legacy unpadded behaviour exactly."""
 
     k: jax.Array  # (B, T, Kv, hd)
     v: jax.Array
     pos: jax.Array  # () int32 — number of tokens already in the cache
+    pad: jax.Array  # (B,) int32 — per-slot left-pad count (see above)
 
 
 def kv_cache_descs(b: int, t: int, n_kv: int, head_dim: int, dtype) -> KVCache:
@@ -218,6 +227,7 @@ def kv_cache_descs(b: int, t: int, n_kv: int, head_dim: int, dtype) -> KVCache:
         k=ParamDesc((b, t, n_kv, head_dim), ("batch", "seq_kv", "kv_heads", None), dtype=dtype, init="zeros"),
         v=ParamDesc((b, t, n_kv, head_dim), ("batch", "seq_kv", "kv_heads", None), dtype=dtype, init="zeros"),
         pos=ParamDesc((), (), dtype=jnp.int32, init="zeros"),
+        pad=ParamDesc((b,), ("batch",), dtype=jnp.int32, init="zeros"),
     )
 
 
@@ -234,7 +244,8 @@ def decode_attention(
     b = x.shape[0]
     t = cache.k.shape[1]
     positions = (
-        jnp.full((b, 1), cache.pos, dtype=jnp.int32) if use_rope else None
+        jnp.broadcast_to(cache.pos, (b,))[:, None] - cache.pad[:, None]
+        if use_rope else None
     )
     q, k_new, v_new = _project_qkv(p, x, positions, theta)
 
@@ -247,13 +258,57 @@ def decode_attention(
         # ring buffer: valid entries are the last min(pos+1, window) writes
         age = (slot - idx) % t
         valid = age < jnp.minimum(cache.pos + 1, t)
+        # mask surviving left-pad entries (global index of an entry = pos - age)
+        valid = valid[None, :] & ((cache.pos - age)[None, :] >= cache.pad[:, None])
     else:
-        valid = idx <= cache.pos
-    mask = valid[None, None, None, None, :]  # (1,1,1,1,T)
+        valid = (idx[None, :] <= cache.pos) & (idx[None, :] >= cache.pad[:, None])
+    mask = valid[:, None, None, None, :]  # (B,1,1,1,T)
 
     out = _gqa_scores_apply(q, k.astype(q.dtype), v.astype(q.dtype), mask)
     y = jnp.einsum("bshk,hkd->bsd", out, W(p["wo"]).astype(x.dtype))
-    return y, KVCache(k=k, v=v, pos=cache.pos + 1)
+    return y, KVCache(k=k, v=v, pos=cache.pos + 1, pad=cache.pad)
+
+
+def prefill_attention(
+    p: dict,
+    x: jax.Array,
+    cache: KVCache,
+    *,
+    positions: jax.Array,  # (B, S) pad-relative positions
+    pad: jax.Array,  # (B,) per-slot left-pad count
+    theta: float = 10000.0,
+    window: int | None = None,
+) -> tuple[jax.Array, KVCache]:
+    """Full-sequence cache prefill: x (B, S, d) over the whole left-padded
+    prompt in ONE dispatch (vs one decode_attention call per token).
+
+    Causal + left-pad masked attention over the prompt, then the projected
+    k/v land in cache slots [0, S) (ring-wrapped for SWA).  Pad positions
+    are masked as keys everywhere, so they cannot pollute shorter prompts;
+    their own (garbage) outputs only feed their own masked positions.
+    Returns (y (B, S, d), primed cache with pos = S, pad recorded)."""
+    b, s, _ = x.shape
+    t = cache.k.shape[1]
+    q, k_new, v_new = _project_qkv(p, x, positions, theta)
+
+    kj = jnp.arange(s)[None, None, :]
+    mask = causal_mask(s, s, window=window)[None] & (kj >= pad[:, None, None])
+    out = _gqa_scores_apply(q, k_new, v_new, mask[:, None, None])
+    y = jnp.einsum("bshk,hkd->bsd", out, W(p["wo"]).astype(x.dtype))
+
+    if s <= t:
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k_new.astype(cache.k.dtype), 0, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v_new.astype(cache.v.dtype), 0, axis=1)
+    else:
+        # SWA ring with prompt longer than the window: keep the last t
+        # tokens at their ring slots (global index i lives at i % t).
+        keep = jnp.arange(s - t, s)
+        slots = keep % t
+        k = cache.k.at[:, slots].set(k_new[:, keep].astype(cache.k.dtype))
+        v = cache.v.at[:, slots].set(v_new[:, keep].astype(cache.v.dtype))
+    return y, KVCache(k=k, v=v, pos=jnp.int32(s), pad=pad)
 
 
 def cross_attention(p: dict, x: jax.Array, kv: tuple[jax.Array, jax.Array]) -> jax.Array:

@@ -211,6 +211,52 @@ def lm_decode(
     return L.lm_head(params["embed"], x), new_cache
 
 
+def lm_prefill(
+    params: dict,
+    cfg: ArchConfig,
+    cache: LMCache,
+    tokens: jax.Array,   # (B, S) left-padded prompts
+    lengths: jax.Array,  # (B,) real token count per slot
+) -> tuple[LMCache, jax.Array]:
+    """One-dispatch cache prefill: the whole left-padded prompt runs through
+    a single causal-masked forward, so packed weights stream ONCE per
+    prompt instead of once per token (the scanned per-token decode streamed
+    every bit-plane S times).  Left-pad positions are masked out of
+    attention and recorded in the cache, so pad tokens never pollute the
+    KV entries another prompt attends to — for dense FFNs that makes a
+    prompt's outputs exactly batch-invariant; MoE tokens (pads included)
+    still share expert capacity, the same cross-slot coupling the scanned
+    prefill had.  Returns (cache, last-position logits (B, V)) — same
+    contract as the scanned prefill."""
+    b, s = tokens.shape
+    pad = (s - lengths).astype(jnp.int32)
+    x = L.embed(params["embed"], tokens, cfg.dtype)
+    positions = jnp.maximum(
+        jnp.arange(s, dtype=jnp.int32)[None, :] - pad[:, None], 0
+    )
+
+    def body(x, inp):
+        bp, c = inp
+        h, c2 = L.prefill_attention(
+            bp["attn"], L.rmsnorm(x, bp["ln1"]), c,
+            positions=positions, pad=pad,
+            theta=cfg.rope_theta, window=cfg.window,
+        )
+        x = constrain(x + h, ("batch", "seq_act", None))
+        y = L.rmsnorm(x, bp["ln2"])
+        if cfg.moe is not None:
+            f, _ = L.moe(bp["moe"], y, top_k=cfg.moe.top_k,
+                         capacity_factor=cfg.moe.capacity_factor)
+        else:
+            f = L.mlp(bp["mlp"], y)
+        return x + f, c2
+
+    x, new_kv = xscan(body, x, (params["blocks"], cache.kv))
+    x = L.rmsnorm(x[:, -1:], params["final_norm"])  # only the last position
+    logits = L.lm_head(params["embed"], x)          # feeds the first sample
+    return LMCache(kv=new_kv), logits[:, 0]
+
+
 def vision_prefill_cross_kv(params: dict, cfg: ArchConfig, vision_embeds: jax.Array):
     """Precompute the (G, B, T_img, kv, hd) cross K/V for decode."""
     return jax.vmap(lambda cp: L.cross_kv(cp["attn"], vision_embeds))(

@@ -27,7 +27,6 @@ kernel-eligible weights packed end-to-end.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any
 
 import jax
@@ -76,14 +75,6 @@ def kernel_eligible(path: str, desc) -> bool:
     if any(a not in STACK_AXES for a in desc.axes[:idx]):
         return False
     return desc.shape[idx] % codec.PLANE_GROUP == 0
-
-
-def _largest_tile(n: int, pref: int, mult: int = 1) -> int | None:
-    """Largest divisor of n that is <= pref and a multiple of mult."""
-    for t in range(min(pref, n), 0, -1):
-        if n % t == 0 and t % mult == 0:
-            return t
-    return None
 
 
 def _conv_view(leaf):
@@ -281,9 +272,12 @@ class PackedWeight(WeightStore):
     """Bit-plane packed 3-bit codes + per-group scalars — the serving form.
 
     planes: (*stack, K//32, 3, *rest) int32, scales: (*stack, K//G, *rest)
-    f32.  ``matmul`` feeds the Pallas fused dequant-matmul (interpret mode
-    off-TPU) so dense weights never materialize in HBM; decode happens in
-    VREGs next to the MXU, per the paper's Table II shift-and-scale decoder.
+    f32.  ``matmul`` routes through the shape-aware kernel dispatcher
+    (``kernels/dispatch.py``): the GEMV kernel at decode shapes, the tiled
+    GEMM otherwise (interpret mode off-TPU), with ragged shapes zero-padded
+    to the fitted tile — dense weights never materialize in HBM; decode
+    happens in VREGs next to the MXU, per the paper's Table II
+    shift-and-scale decoder.
 
     ``n_planes`` counts the *significant* planes (3 = full quality).  A
     quality-tier truncation (:meth:`truncate`) zeroes the dropped LSB plane
@@ -370,19 +364,17 @@ class PackedWeight(WeightStore):
         lead = x.shape[:-1]
         m = int(np.prod(lead)) if lead else 1
 
-        bm = _largest_tile(m, 256)
-        bn = _largest_tile(n, 256)
-        bk = _largest_tile(k, 512, mult=(codec.PLANE_GROUP * g) // math.gcd(codec.PLANE_GROUP, g))
-        if not _PACKED_MATMUL_KERNEL or bk is None or bm is None or bn is None:
-            return jnp.tensordot(x, self.as_dense(x.dtype), axes=1)
+        # Shape-aware kernel routing (kernels/dispatch.py): GEMV kernel at
+        # decode shapes, tiled GEMM otherwise, zero-padded tiles for ragged
+        # shapes, and the packed-representation XLA ref when the kernel
+        # switch is off.  The dense weight is never materialized.
+        from repro.kernels import dispatch  # deferred: pallas off cold paths
 
-        from repro.kernels import ops  # deferred: keeps pallas off cold paths
-
-        out = ops.qsq_matmul(
+        out = dispatch.packed_matmul(
             x.reshape(m, k),
             self.planes.reshape(k // codec.PLANE_GROUP, 3, n),
             self.scales.reshape(ng, n),
-            group_size=g, bm=bm, bk=bk, bn=bn,
+            group_size=g, use_kernel=_PACKED_MATMUL_KERNEL,
         )
         return out.astype(x.dtype).reshape(*lead, *rest)
 

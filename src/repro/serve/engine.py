@@ -13,11 +13,19 @@ exclusions.  ``set_quality`` re-dials an artifact-built engine to another
 tier in place — LSB plane truncation on the already-loaded wire, never a
 re-quantize.
 
-Generation is two jitted programs: a scanned prefill that primes the cache
-for the whole prompt in one dispatch, and a multi-token decode scan
-(greedy, or temperature-sampled when ``ServeConfig.temperature > 0``) that
-syncs with the host exactly once per generate() call.  Requests of
-different lengths share one slot-based KV cache (continuous-batching-lite).
+Generation is two jitted programs: a ONE-DISPATCH prefill that primes the
+cache for the whole left-padded prompt batch in a single causal-masked
+forward — every packed weight streams once per prompt, not once per token
+(recurrent/cross families fall back to a scanned per-token prefill) — and
+a multi-token decode scan (greedy, or temperature-sampled when
+``ServeConfig.temperature > 0``) that syncs with the host exactly once per
+generate() call.  The decode steps route small-M packed matmuls through
+the GEMV kernel picked by ``kernels/dispatch.py``.  Requests of different
+lengths share one slot-based KV cache (continuous-batching-lite); each
+slot's left padding is masked out of attention, so a dense-family
+prompt's tokens are exactly invariant to its batch mates (MoE keeps the
+weaker guarantee the scan prefill had: batch mates — padded or not —
+share expert capacity and can shift routing under overflow).
 """
 from __future__ import annotations
 
@@ -124,10 +132,15 @@ class ServeEngine:
             jax.random.PRNGKey(0), self.model.cache_descs(slots, cache_len)
         )
         toks = np.zeros((slots, maxp), dtype=np.int32)
+        lens = np.zeros((slots,), dtype=np.int32)
         for i, p in enumerate(prompts):
             toks[i, maxp - len(p):] = p  # left-pad
-        # one jitted scan primes the cache for the whole prompt...
-        cache, logits = self._prefill(self.params, cache, jnp.asarray(toks))
+            lens[i] = len(p)
+        # one jitted dispatch primes the cache for the whole prompt batch
+        # (lens masks each slot's left padding out of the KV cache)...
+        cache, logits = self._prefill(
+            self.params, cache, jnp.asarray(toks), jnp.asarray(lens)
+        )
         temp = self.cfg.temperature
         # ...and one jitted scan emits all max_new tokens; the np.asarray
         # below is the only host sync of the generation.

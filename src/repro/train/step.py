@@ -64,14 +64,36 @@ def make_serve_step(model: Model) -> Callable:
     return serve_step
 
 
+def supports_fused_prefill(model: Model) -> bool:
+    """True if the family primes its cache with ONE full-sequence forward
+    (attention-only stacks).  Recurrent families (ssm/hybrid) and
+    cross-attending ones (vlm/encdec) keep the scanned per-token path."""
+    return model.cfg.family in ("dense", "moe") and not model.cfg.cross_every
+
+
 def make_cache_prefill_step(model: Model) -> Callable:
-    """(params, cache, tokens (B, S)) -> (cache, last_logits (B, V)).
+    """(params, cache, tokens (B, S), lengths (B,)) -> (cache, last_logits).
 
-    Primes the KV/SSM cache for a whole prompt in ONE jitted lax.scan over
-    positions instead of a per-token Python loop — a single device program
-    with no host round-trips, for every model family that can decode."""
+    Attention families take the ONE-DISPATCH path: the whole left-padded
+    prompt runs through a single causal-masked forward
+    (:func:`repro.models.transformer.lm_prefill`), streaming every packed
+    weight once per prompt, with left-pad positions masked out of the KV
+    cache so batch mates cannot pollute each other.  Other families fall
+    back to one jitted lax.scan over positions (still a single device
+    program, but weights stream once per token; ``lengths`` is unused
+    there — recurrent state offers no post-hoc pad masking)."""
+    if supports_fused_prefill(model):
+        from repro.models import transformer
 
-    def prefill_step(params, cache, tokens):
+        def prefill_step(params, cache, tokens, lengths):
+            return transformer.lm_prefill(params, model.cfg, cache, tokens,
+                                          lengths)
+
+        return prefill_step
+
+    def prefill_step(params, cache, tokens, lengths):
+        del lengths  # per-token scan: no pad isolation for recurrent state
+
         def body(cache, tok):  # tok (B, 1)
             logits, cache = model.decode(params, cache, {"tokens": tok})
             return cache, logits[:, -1, :]

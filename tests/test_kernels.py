@@ -57,6 +57,55 @@ def test_pack_weight_end_to_end():
                                rtol=2e-5, atol=2e-4)
 
 
+MATVEC_SHAPES = [
+    # (M, K, N, G, bk, bn) — decode shapes: tiny M, deep K
+    (1, 512, 64, 32, 256, 64),
+    (8, 1024, 256, 64, 512, 128),
+    (8, 2048, 512, 16, 1024, 256),
+    (3, 256, 128, 128, 256, 128),
+]
+
+
+@pytest.mark.parametrize("m,k,n,g,bk,bn", MATVEC_SHAPES)
+@pytest.mark.parametrize("xdtype", [jnp.float32, jnp.bfloat16])
+def test_qsq_matvec_vs_ref(m, k, n, g, bk, bn, xdtype):
+    key = jax.random.PRNGKey(m * 13 + k)
+    w = jax.random.normal(key, (k, n)) * 0.05
+    x = jax.random.normal(jax.random.PRNGKey(2), (m, k)).astype(xdtype)
+    codes, scales = ref.qsq_quantize_ref(w, g, 4)
+    planes = codec.pack_bitplane(codes)
+    out_k = ops.qsq_matvec(x, planes, scales, group_size=g,
+                           bk=bk, bn=bn, interpret=True)
+    out_r = ref.qsq_matmul_ref(x, planes, scales, g)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=2e-5, atol=2e-4)
+
+
+def test_qsq_matvec_matches_qsq_matmul():
+    """Both kernels decode the same planes to the same product."""
+    m, k, n, g = 8, 1024, 256, 64
+    w = jax.random.normal(jax.random.PRNGKey(9), (k, n)) * 0.05
+    x = jax.random.normal(jax.random.PRNGKey(10), (m, k))
+    codes, scales = ref.qsq_quantize_ref(w, g, 4)
+    planes = codec.pack_bitplane(codes)
+    a = ops.qsq_matvec(x, planes, scales, group_size=g, bk=512, bn=128,
+                       interpret=True)
+    b = ops.qsq_matmul(x, planes, scales, group_size=g, bm=8, bk=512, bn=128,
+                       interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_matvec_rejects_bad_tiles():
+    x = jnp.zeros((8, 96))
+    planes = jnp.zeros((3, 3, 32), jnp.int32)
+    scales = jnp.zeros((4, 32))  # group_size 24
+    with pytest.raises(ValueError):  # bk=32 divides K but not group_size=24
+        ops.qsq_matvec(x, planes, scales, group_size=24, bk=32, interpret=True)
+    with pytest.raises(ValueError):  # tile does not divide N
+        ops.qsq_matvec(x, planes, scales, group_size=24, bn=24, interpret=True)
+
+
 def test_kernel_rejects_bad_tiles():
     x = jnp.zeros((32, 64))
     planes = jnp.zeros((2, 3, 32), jnp.int32)
