@@ -25,8 +25,6 @@ from __future__ import annotations
 import argparse
 import itertools
 import json
-from pathlib import Path
-
 import jax
 import jax.numpy as jnp
 

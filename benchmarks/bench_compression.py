@@ -45,8 +45,8 @@ def main(verbose: bool = True):
     cfg = get_arch("smollm_135m", smoke=True)
     model = Model(cfg)
     params = init_params(jax.random.PRNGKey(0), model.param_descs())
-    raw_per_step = sum(l.size * 4 for l in jax.tree_util.tree_leaves(params)
-                       if l.ndim >= 2 and l.size >= 64)
+    raw_per_step = sum(a.size * 4 for a in jax.tree_util.tree_leaves(params)
+                       if a.ndim >= 2 and a.size >= 64)
     ratio = raw_per_step * STEPS / max(wire, 1.0)
 
     final_gap = np.mean(comp_losses[-5:]) - np.mean(base_losses[-5:])

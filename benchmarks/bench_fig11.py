@@ -18,8 +18,8 @@ def main(verbose: bool = True):
     t0 = time.time()
     params, *_ = train_cnn(LENET, steps=120)
     weights = np.concatenate([
-        np.asarray(l).reshape(-1)
-        for l in jax.tree_util.tree_leaves(params) if l.ndim >= 2
+        np.asarray(a).reshape(-1)
+        for a in jax.tree_util.tree_leaves(params) if a.ndim >= 2
     ])
     hist = np.asarray(csd_nonzero_histogram(weights))
     total = hist.sum()

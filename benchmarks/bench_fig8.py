@@ -3,7 +3,6 @@ varying vector lengths N (the paper quantizes the 1st/2nd/3rd/4th conv layer
 one at a time and reports accuracy)."""
 from __future__ import annotations
 
-import re
 import time
 
 from benchmarks.common import train_cnn

@@ -20,7 +20,6 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import timeit_us
-from repro.core import codec
 from repro.core.energy import TPU_HBM_BW
 from repro.kernels import dispatch, ops, ref
 

@@ -9,8 +9,18 @@ least-sensitive layers without re-quantizing.  On this CPU container the
 packed matmuls run the Pallas kernel in interpret mode, so WALL time is
 meaningless as a TPU prediction; the derived columns carry the structural
 serving win: bits held per weight (= HBM residency / weight-stream bytes
-on the target) and the packed-leaf count.  Emits one BENCH json line for
-the engine comparison and one per quality tier, plus the standard
+on the target) and the packed-leaf count.
+
+Also replays a deterministic Poisson-ish arrival schedule through BOTH
+serving disciplines on the same packed params: static batching (slot-
+capped batches served to completion) vs the continuous-batching scheduler
+(submit/step/poll; requests join the running decode as slots free).
+Latency/wait are counted in dispatch ticks — every decode iteration and
+every admission prefill costs one — so the reported win is scheduling,
+not accounting; tokens must match request-for-request.
+
+Emits one BENCH json line for the engine comparison, one for the
+continuous-vs-static stream, and one per quality tier, plus the standard
 (name, us_per_call, derived) rows for benchmarks.run.
 """
 from __future__ import annotations
@@ -35,6 +45,12 @@ PROMPTS = [[1, 2, 3], [9, 9], [100, 42, 7, 8]]
 MAX_NEW = 16
 PREFILL_LEN = 16  # acceptance: one-dispatch beats scan at prompt len >= 16
 
+# continuous-vs-static arrival schedule (deterministic Poisson-ish stream)
+STREAM_REQUESTS = 8
+STREAM_MAX_NEW = 8
+STREAM_MEAN_GAP = 2.0  # mean inter-arrival, in scheduler ticks
+STREAM_SLOTS = 2       # scarce slots: queueing pressure is the point
+
 
 def _model():
     cfg = ArchConfig(name="smollm-bench", family="dense", n_layers=2,
@@ -58,7 +74,7 @@ def _tok_per_s(engine) -> tuple[float, float]:
 def _measure(name, eng, params, rows, stats, verbose):
     tok_s, us_tok = _tok_per_s(eng)
     rep = tree_bits_report(eng.params)
-    n_w = sum(int(jnp.size(l)) for l in jax.tree_util.tree_leaves(params))
+    n_w = sum(int(jnp.size(a)) for a in jax.tree_util.tree_leaves(params))
     bits_per_weight = rep["bits"] / n_w
     rows.append((f"serve/{name}", us_tok,
                  f"tok_s={tok_s:.1f}|bits_per_weight={bits_per_weight:.2f}"
@@ -109,16 +125,102 @@ def _prefill_compare(model, params, plen: int = PREFILL_LEN, slots: int = 4):
     return fused_us, scan_us
 
 
+def _stream_workload(vocab: int, n: int = STREAM_REQUESTS, seed: int = 0):
+    """(prompts, arrival ticks): exponential inter-arrival times rounded to
+    integer scheduler ticks — a deterministic Poisson-ish request stream."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(scale=STREAM_MEAN_GAP, size=n)
+    arrivals = np.floor(np.cumsum(gaps)).astype(int)
+    arrivals[0] = 0
+    prompts = [rng.integers(1, vocab, size=int(rng.integers(2, 6))).tolist()
+               for _ in range(n)]
+    return prompts, arrivals.tolist()
+
+
+def _lat_stats(lat, wait):
+    return {
+        "mean_latency": round(float(np.mean(lat)), 2),
+        "p90_latency": round(float(np.percentile(lat, 90)), 2),
+        "mean_wait": round(float(np.mean(wait)), 2),
+    }
+
+
+def _run_static_stream(engine, prompts, arrivals, max_new, slots):
+    """Static batching under the arrival schedule: the engine takes up to
+    ``slots`` already-arrived requests, serves the batch to completion
+    (1 prefill tick + max_new decode ticks), and only then admits more —
+    late arrivals wait out the whole running batch.  Returns per-request
+    (latency, wait) in ticks, the token outputs, and the wall time."""
+    t0 = time.time()
+    tick, i = 0, 0
+    lat, wait = [], []
+    outs = [None] * len(prompts)
+    while i < len(prompts):
+        tick = max(tick, arrivals[i])  # idle until the next arrival
+        batch = []
+        while i < len(prompts) and arrivals[i] <= tick and len(batch) < slots:
+            batch.append(i)
+            i += 1
+        res = engine.generate([prompts[j] for j in batch], max_new=max_new)
+        start = tick
+        tick += 1 + max_new  # one prefill dispatch + max_new decode steps
+        for j, toks in zip(batch, res):
+            outs[j] = toks
+            wait.append(start - arrivals[j])
+            lat.append(tick - arrivals[j])
+    return lat, wait, outs, tick, time.time() - t0
+
+
+def _run_continuous_stream(engine, prompts, arrivals, max_new):
+    """The same schedule through submit()/step()/poll(): requests join the
+    running decode as slots free.  The tick clock charges every decode
+    dispatch 1 and every admission prefill 1 (the same dispatch the static
+    path pays once per batch), so the comparison is dispatch-honest."""
+    t0 = time.time()
+    engine.reset_stream()
+    tick, i = 0, 0
+    arrival_of, index_of, wait_of = {}, {}, {}
+    admitted_seen = set()
+    lat, wait = [], []
+    outs = [None] * len(prompts)
+    while i < len(prompts) or engine.has_work:
+        if i < len(prompts) and not engine.has_work:
+            tick = max(tick, arrivals[i])  # idle until the next arrival
+        while i < len(prompts) and arrivals[i] <= tick:
+            rid = engine.submit(prompts[i], max_new=max_new)
+            arrival_of[rid], index_of[rid] = arrivals[i], i
+            i += 1
+        engine.step()
+        admitted = engine.live_requests + list(
+            engine.completed_requests.values())
+        new_admits = [r for r in admitted
+                      if r.admitted is not None and r.rid not in admitted_seen]
+        for r in new_admits:
+            admitted_seen.add(r.rid)
+            wait_of[r.rid] = tick - arrival_of[r.rid]
+        tick += 1 + len(new_admits)
+        for rid, toks in engine.poll().items():
+            outs[index_of[rid]] = toks
+            lat.append(tick - arrival_of[rid])
+            wait.append(wait_of[rid])
+    return lat, wait, outs, tick, time.time() - t0
+
+
 def main(verbose: bool = True, quick: bool = False):
     del quick  # the serve bench is already its own smallest configuration
     model, params = _model()
     artifact = api.compress(model, params)
 
+    # static scan-path engines: isolates the weight-format comparison from
+    # scheduler dispatch overhead (the continuous stream is measured below)
     engines = {
-        "dense_exact": ServeEngine(model, params, ServeConfig(batch_slots=4)),
+        "dense_exact": ServeEngine(model, params,
+                                   ServeConfig(batch_slots=4,
+                                               continuous=False)),
         "wire_dense": artifact.engine(quality="hi", batch_slots=4,
-                                      packed=False),
-        "wire_packed": artifact.engine(quality="hi", batch_slots=4),
+                                      packed=False, continuous=False),
+        "wire_packed": artifact.engine(quality="hi", batch_slots=4,
+                                       continuous=False),
     }
 
     rows = []
@@ -151,6 +253,61 @@ def main(verbose: bool = True, quick: bool = False):
                                  "scan_prefill_us": round(scan_us, 1),
                                  **stats}))
 
+    # continuous vs static batching under a Poisson-ish arrival schedule:
+    # same packed params, same stream; the static engine serves
+    # slot-capped batches to completion while the scheduler admits each
+    # request into the first freed slot.  The tick clock charges every
+    # dispatch (admission prefills included), so lower continuous latency
+    # is a scheduling win, not an accounting artifact.
+    prompts, arrivals = _stream_workload(model.cfg.vocab)
+    eng_cont = ServeEngine(model, engines["wire_packed"].params, ServeConfig(
+        batch_slots=STREAM_SLOTS, max_prompt=8,
+        max_len=8 + STREAM_MAX_NEW + 1,
+    ))
+    eng_stat = ServeEngine(model, engines["wire_packed"].params, ServeConfig(
+        batch_slots=STREAM_SLOTS, continuous=False,
+    ))
+    # first replay warms every program (batch-shape retraces included), the
+    # second is the measured one — tick metrics are identical across both
+    _run_static_stream(eng_stat, prompts, arrivals, STREAM_MAX_NEW,
+                       STREAM_SLOTS)
+    _run_continuous_stream(eng_cont, prompts, arrivals, STREAM_MAX_NEW)
+    s_lat, s_wait, s_outs, s_ticks, s_wall = _run_static_stream(
+        eng_stat, prompts, arrivals, STREAM_MAX_NEW, STREAM_SLOTS)
+    c_lat, c_wait, c_outs, c_ticks, c_wall = _run_continuous_stream(
+        eng_cont, prompts, arrivals, STREAM_MAX_NEW)
+    assert c_outs == s_outs, \
+        "continuous stream diverged from static batching tokens"
+    assert float(np.mean(c_lat)) <= float(np.mean(s_lat)), \
+        f"continuous mean latency {np.mean(c_lat)} worse than static {np.mean(s_lat)}"
+    n_tok = len(prompts) * STREAM_MAX_NEW
+    stream_stats = {
+        "static": {**_lat_stats(s_lat, s_wait), "ticks": s_ticks,
+                   "tok_per_tick": round(n_tok / s_ticks, 3),
+                   "tok_s_wall": round(n_tok / s_wall, 1)},
+        "continuous": {**_lat_stats(c_lat, c_wait), "ticks": c_ticks,
+                       "tok_per_tick": round(n_tok / c_ticks, 3),
+                       "tok_s_wall": round(n_tok / c_wall, 1)},
+    }
+    ratio = np.mean(s_lat) / max(np.mean(c_lat), 1e-9)
+    rows.append(("serve/continuous_stream", c_wall / n_tok * 1e6,
+                 f"mean_latency={np.mean(c_lat):.1f}t"
+                 f"|static={np.mean(s_lat):.1f}t|x{ratio:.2f}"))
+    if verbose:
+        print(f"  stream({len(prompts)} reqs, {STREAM_SLOTS} slots): "
+              f"continuous mean latency {np.mean(c_lat):.1f} ticks vs "
+              f"static {np.mean(s_lat):.1f} ({ratio:.2f}x), tokens exact")
+    print("BENCH " + json.dumps({
+        "bench": "serve_continuous",
+        "requests": len(prompts),
+        "slots": STREAM_SLOTS,
+        "max_new": STREAM_MAX_NEW,
+        "mean_gap": STREAM_MEAN_GAP,
+        "tokens_match": c_outs == s_outs,
+        "latency_ratio": round(float(ratio), 2),
+        **stream_stats,
+    }))
+
     # quality-tier sweep: one engine per tier from the SAME artifact, lower
     # tiers realized by LSB plane truncation (never a re-quantize); one
     # BENCH line per tier so the perf trajectory captures the
@@ -159,7 +316,8 @@ def main(verbose: bool = True, quick: bool = False):
     for tier in artifact.quality_names():
         drop = artifact.drop_map(tier)
         eng = (engines["wire_packed"] if not drop
-               else artifact.engine(quality=tier, batch_slots=4))
+               else artifact.engine(quality=tier, batch_slots=4,
+                                    continuous=False))
         tier_stats = _measure(f"tier_{tier}", eng, params, rows, stats,
                               verbose)
         print("BENCH " + json.dumps({

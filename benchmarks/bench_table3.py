@@ -33,7 +33,6 @@ def main(verbose: bool = True):
     acc_ftl = cnn_accuracy(ft_long, LENET, ev_i, ev_l)
 
     # beyond-paper: least-squares alpha refit (same 3-bit wire format)
-    import dataclasses as _dc
 
     rpolicy = QuantPolicy(
         base=QSQConfig(phi=4, group_size=16, refit_alpha=True), min_numel=256

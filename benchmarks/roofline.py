@@ -15,7 +15,6 @@ def load_cells(mesh: str = "16x16", tag: str | None = None):
     cells = []
     for p in sorted(DRYRUN_DIR.glob("*.json")):
         d = json.loads(p.read_text())
-        name_tag = "__" in p.stem[len(f"{d['arch']}__{d['shape']}__{d['mesh']}"):]
         if d.get("mesh") != mesh:
             continue
         parts = p.stem.split("__")

@@ -48,8 +48,8 @@ def main():
         wire_path = artifact.save(Path(d) / "lenet.edge.npz")
         t_enc = time.time() - t0
 
-        raw_bytes = sum(l.size * l.dtype.itemsize
-                        for l in jax.tree_util.tree_leaves(params))
+        raw_bytes = sum(a.size * a.dtype.itemsize
+                        for a in jax.tree_util.tree_leaves(params))
         wire_bytes = wire_path.stat().st_size
         print(f"encoded in {t_enc * 1e3:.0f} ms -> channel payload "
               f"{wire_bytes / 1e3:.1f} kB (raw {raw_bytes / 1e3:.1f} kB, "

@@ -49,11 +49,11 @@ def main():
     w = jax.tree_util.tree_leaves(params)[0]
     from repro.core.qsq import QSQTensor
 
-    qleaves = [l for l in jax.tree_util.tree_leaves(
+    qleaves = [q for q in jax.tree_util.tree_leaves(
         qp.tree, is_leaf=lambda x: isinstance(x, QSQTensor))
-        if isinstance(l, QSQTensor)]
-    z_fp = np.mean([float(zeros_fraction(l)) for l in jax.tree_util.tree_leaves(params) if l.ndim >= 2])
-    z_q = np.mean([float(zeros_fraction(l.levels)) for l in qleaves])
+        if isinstance(q, QSQTensor)]
+    z_fp = np.mean([float(zeros_fraction(a)) for a in jax.tree_util.tree_leaves(params) if a.ndim >= 2])
+    z_q = np.mean([float(zeros_fraction(q.levels)) for q in qleaves])
     print(f"   zeros: {z_fp * 100:.2f}% -> {z_q * 100:.2f}%")
 
     print("4) CSD quality-scalable multiplier (weight-rounding view):")

@@ -39,7 +39,7 @@ def main():
     # one call replaces quantize -> pack -> export: the artifact carries the
     # wire tree plus the tier spec and per-layer sensitivity ranking.
     artifact = api.compress(model, params)
-    raw = sum(l.size * l.dtype.itemsize for l in jax.tree_util.tree_leaves(params))
+    raw = sum(a.size * a.dtype.itemsize for a in jax.tree_util.tree_leaves(params))
 
     with tempfile.TemporaryDirectory() as d:
         path = artifact.save(Path(d) / "model.edge.npz")

@@ -72,8 +72,8 @@ def main():
     )
     import os
 
-    full = sum(l.size * l.dtype.itemsize
-               for l in jax.tree_util.tree_leaves(state.params))
+    full = sum(a.size * a.dtype.itemsize
+               for a in jax.tree_util.tree_leaves(state.params))
     print(f"wire export: {wire_path} "
           f"({os.path.getsize(wire_path) / 1e6:.2f} MB vs {full / 1e6:.2f} MB raw)")
 

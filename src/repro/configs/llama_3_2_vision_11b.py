@@ -6,7 +6,7 @@ supplies precomputed patch embeddings (B, 1024, 4096).
 """
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, MoEConfig, HybridConfig
+from repro.configs.base import ArchConfig
 
 CONFIG = ArchConfig(
     name="llama-3.2-vision-11b",

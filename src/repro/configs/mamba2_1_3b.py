@@ -5,7 +5,7 @@ ssm_state=128, head_dim 64, d_inner = 2*d_model.
 """
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, MoEConfig, HybridConfig
+from repro.configs.base import ArchConfig
 
 CONFIG = ArchConfig(
     name="mamba2-1.3b",

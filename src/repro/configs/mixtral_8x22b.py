@@ -5,7 +5,7 @@ vocab=32768, MoE 8e top-2, SWA window 4096.
 """
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, MoEConfig, HybridConfig
+from repro.configs.base import ArchConfig, MoEConfig
 
 CONFIG = ArchConfig(
     name="mixtral-8x22b",

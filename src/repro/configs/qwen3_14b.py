@@ -4,7 +4,7 @@
 """
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, MoEConfig, HybridConfig
+from repro.configs.base import ArchConfig
 
 CONFIG = ArchConfig(
     name="qwen3-14b",

@@ -5,7 +5,7 @@ per-expert d_ff=768, vocab=151936, MoE 128e top-8.
 """
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, MoEConfig, HybridConfig
+from repro.configs.base import ArchConfig, MoEConfig
 
 CONFIG = ArchConfig(
     name="qwen3-moe-30b-a3b",

@@ -6,7 +6,7 @@ attention stays replicated under the divisibility fallback (DESIGN.md).
 """
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, MoEConfig, HybridConfig
+from repro.configs.base import ArchConfig
 
 CONFIG = ArchConfig(
     name="smollm-135m",

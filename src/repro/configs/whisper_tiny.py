@@ -7,7 +7,7 @@ positions) — recorded by the dry-run sweep; long_500k skipped (full attention)
 """
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, MoEConfig, HybridConfig
+from repro.configs.base import ArchConfig
 
 CONFIG = ArchConfig(
     name="whisper-tiny",

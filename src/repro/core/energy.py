@@ -86,8 +86,8 @@ def model_savings(
     layers: Sequence[LayerShape], group_size: int, bit_encoding: int = 3
 ) -> dict:
     """Aggregate Eq. 11/12 over a model's layers (Fig. 9 reproduction)."""
-    full_bits = sum(nbits_unquantized(l.numel) for l in layers)
-    q_bits = sum(nbits_quantized(l.numel, group_size, bit_encoding) for l in layers)
+    full_bits = sum(nbits_unquantized(ls.numel) for ls in layers)
+    q_bits = sum(nbits_quantized(ls.numel, group_size, bit_encoding) for ls in layers)
     return {
         "full_bits": full_bits,
         "quantized_bits": q_bits,

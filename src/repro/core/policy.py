@@ -111,7 +111,7 @@ def sensitivity_rank(
         if cfg is None:
             continue
         q = _qsq.quantize(leaf, cfg)
-        leaves = [l for (_, l) in flat]
+        leaves = [leaf2 for (_, leaf2) in flat]
         leaves[i] = q.dequantize(leaf.dtype)
         mutated = jax.tree_util.tree_unflatten(treedef, leaves)
         results.append((p, float(loss_fn(mutated, batch)) - base_loss))

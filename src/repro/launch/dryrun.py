@@ -28,7 +28,7 @@ from repro.launch.mesh import (  # noqa: E402
     make_production_mesh, mesh_axis_sizes, sharding_rules,
 )
 from repro.models.api import Model  # noqa: E402
-from repro.models.base import abstract_params, count_params, partition_specs  # noqa: E402
+from repro.models.base import abstract_params, partition_specs  # noqa: E402
 from repro.train.state import train_state_descs  # noqa: E402
 from repro.train.step import make_prefill_step, make_serve_step, make_train_step  # noqa: E402
 

@@ -1,4 +1,4 @@
-"""Serving launcher: --arch <id> [--wire [--quality T] [--dense]].
+"""Serving launcher: --arch <id> [--wire [--quality T] [--dense]] [--stream].
 
 Loads exact params (fresh init on this CPU container) or compresses the
 model into a quality-dialed EdgeArtifact and serves batched decoding
@@ -6,6 +6,14 @@ through the facade (`repro.api`).  With --wire the engine keeps matmul
 weights in 3-bit bit-plane form end-to-end; --quality picks the serving
 tier (lower tiers drop LSB bit-planes from the least-sensitive layers —
 no re-quantization); add --dense to decode everything at load and compare.
+
+``--stream`` drives the continuous-batching scheduler instead of one
+static generate(): synthetic prompts arrive staggered (every
+``--arrival-every`` engine steps), are submitted mid-decode, and tokens
+print as each request finishes — along with per-request waiting time and
+latency in steps, the numbers a static batch cannot hit because a new
+prompt would wait for the whole batch to drain.
+
 On a real pod the same entry point builds the production mesh and shards
 params/caches with launch/mesh.py rules (see launch/dryrun.py for the
 lowering path that proves those shardings compile).
@@ -45,15 +53,26 @@ def main():
     ap.add_argument("--prompts", type=int, default=None,
                     help="number of synthetic prompts to serve "
                          "(default: min(--slots, 3))")
+    ap.add_argument("--stream", action="store_true",
+                    help="continuous batching: submit prompts at staggered "
+                         "arrivals and admit them mid-decode (attention "
+                         "families, greedy)")
+    ap.add_argument("--arrival-every", type=int, default=2,
+                    help="with --stream: engine steps between arrivals")
     args = ap.parse_args()
 
     if args.slots < 1:
         ap.error("--slots must be >= 1")
     if args.prompts is None:
-        args.prompts = min(args.slots, 3)
-    elif not 1 <= args.prompts <= args.slots:
-        ap.error(f"--prompts must be in [1, --slots={args.slots}]; "
-                 f"got {args.prompts}")
+        # streams queue beyond the slot count — that's the point
+        args.prompts = args.slots + 2 if args.stream else min(args.slots, 3)
+    elif args.prompts < 1:
+        ap.error(f"--prompts must be >= 1; got {args.prompts}")
+    elif not args.stream and args.prompts > args.slots:
+        ap.error(f"--prompts must be in [1, --slots={args.slots}] without "
+                 f"--stream (a static batch cannot queue); got {args.prompts}")
+    if args.arrival_every < 1:
+        ap.error("--arrival-every must be >= 1")
     if not args.wire and (args.quality != "hi" or args.dense):
         ap.error("--quality/--dense only apply with --wire")
 
@@ -79,6 +98,9 @@ def main():
     rng = np.random.RandomState(0)
     prompts = [rng.randint(0, cfg.vocab, size=rng.randint(2, 6)).tolist()
                for _ in range(args.prompts)]
+    if args.stream:
+        _serve_stream(engine, prompts, args.max_new, args.arrival_every)
+        return
     t0 = time.time()
     outs = engine.generate(prompts, max_new=args.max_new)
     dt = time.time() - t0
@@ -86,6 +108,39 @@ def main():
         print(f"  {p} -> {o}")
     n = len(prompts) * args.max_new
     print(f"{n} tokens in {dt:.2f}s ({n / dt:.1f} tok/s)")
+
+
+def _serve_stream(engine, prompts, max_new: int, arrival_every: int) -> None:
+    """Feed staggered arrivals through submit()/step()/poll(): prompt i
+    arrives at step i * arrival_every and joins the running decode as soon
+    as a slot frees — no batch flush.  Prints each request as it finishes
+    with its waiting time (queued steps) and latency (arrival -> last
+    token, in steps)."""
+    t0 = time.time()
+    pending = list(enumerate(prompts))
+    rid_to_prompt = {}
+    while pending or engine.has_work:
+        step_idx = engine.step_count
+        while pending and pending[0][0] * arrival_every <= step_idx:
+            _, p = pending.pop(0)
+            rid = engine.submit(p, max_new=max_new)
+            rid_to_prompt[rid] = p
+            print(f"  step {step_idx:3d}  submit r{rid} {p}")
+        engine.step()
+        completed = engine.completed_requests
+        for rid, toks in engine.poll().items():
+            req = completed[rid]
+            print(f"  step {req.finished:3d}  done   r{rid} "
+                  f"{rid_to_prompt[rid]} -> {toks} "
+                  f"(waited {req.waiting}, latency {req.latency} steps)")
+    dt = time.time() - t0
+    done = engine.completed_requests.values()
+    n = sum(len(r.out) for r in done)
+    mean_wait = np.mean([r.waiting for r in done])
+    mean_lat = np.mean([r.latency for r in done])
+    print(f"{n} tokens / {len(rid_to_prompt)} requests in {dt:.2f}s "
+          f"({n / dt:.1f} tok/s; mean wait {mean_wait:.1f} steps, "
+          f"mean latency {mean_lat:.1f} steps)")
 
 
 if __name__ == "__main__":

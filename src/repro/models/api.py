@@ -13,7 +13,6 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax.numpy as jnp
 
@@ -85,8 +84,15 @@ class Model:
     def decode(self, params, cache, batch):
         f = self.cfg.family
         tokens = batch["tokens"]
+        active = batch.get("active")  # (B,) live-slot mask: continuous batching
         if f in ("dense", "moe", "vlm"):
-            return transformer.lm_decode(params, self.cfg, cache, tokens)
+            return transformer.lm_decode(params, self.cfg, cache, tokens,
+                                         active=active)
+        if active is not None:
+            raise ValueError(
+                f"per-slot active masks (continuous batching) are only "
+                f"supported by attention families, not {f!r}"
+            )
         if f == "ssm":
             return mamba_lm.mamba_decode(params, self.cfg, cache, tokens)
         if f == "hybrid":
@@ -110,6 +116,22 @@ class Model:
         if lengths is None:
             lengths = jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)
         return make_cache_prefill_step(self)(params, cache, tokens, lengths)
+
+    def cache_insert_slot(self, live, one, slot):
+        """Write a single-slot prefilled cache into lane ``slot`` of a live
+        multi-slot cache — the continuous-batching admission primitive.
+        Attention-family only (recurrent state has no per-lane isolation
+        the scheduler could rely on)."""
+        from repro.train.step import supports_fused_prefill
+
+        if not supports_fused_prefill(self):
+            raise ValueError(
+                f"single-slot cache admission needs an attention family "
+                f"with per-lane KV isolation; family {self.cfg.family!r} "
+                f"(cross_every={self.cfg.cross_every}) is served via the "
+                f"static batch path"
+            )
+        return transformer.lm_cache_insert_slot(live, one, slot)
 
     def serve_params(self, wire_tree, packed: bool = True, drop_map=None):
         """Wire artifact -> serving param tree (packed matmul weights when
@@ -135,7 +157,10 @@ class Model:
     def input_descs(self, shape: ShapeConfig):
         cfg = self.cfg
         b = shape.global_batch
-        tok = lambda s: ParamDesc((b, s), ("batch", None), dtype=jnp.int32, init="zeros")
+        def tok(s):
+            return ParamDesc((b, s), ("batch", None), dtype=jnp.int32,
+                             init="zeros")
+
         if shape.kind == "train":
             batch = {"tokens": tok(shape.seq_len), "labels": tok(shape.seq_len)}
         elif shape.kind == "prefill":

@@ -16,7 +16,7 @@ a 16-wide model axis without per-arch special cases.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Mapping, Sequence
+from typing import Any, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp

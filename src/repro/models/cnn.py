@@ -4,11 +4,8 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.base import ParamDesc
 

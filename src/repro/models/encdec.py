@@ -124,19 +124,18 @@ def encdec_prefill_cross(params: dict, cfg: ArchConfig, frames: jax.Array):
 
 
 def _sin_pos_at(pos, d: int, dtype):
-    """Sinusoidal position embedding row at a traced position index."""
+    """Sinusoidal position embedding rows at traced (B,) position indices."""
     i = jnp.arange(d // 2, dtype=jnp.float32)
-    ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2.0 * i / d)
-    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)]).astype(dtype)
+    ang = pos.astype(jnp.float32)[..., None] / jnp.power(10000.0, 2.0 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
 
 
 def encdec_decode(params: dict, cfg: ArchConfig, cache: EncDecCache, tokens: jax.Array):
     b = tokens.shape[0]
-    # current position = layer-0 self-attn cache counter
-    pos0 = jax.tree_util.tree_leaves(cache.kv.pos if hasattr(cache.kv, "pos") else cache.kv)[-1]
-    pos0 = cache.kv.pos[0] if hasattr(cache.kv, "pos") else pos0
-    pos = _sin_pos_at(pos0, cfg.d_model, cfg.dtype)
-    x = L.embed(params["embed"], tokens, cfg.dtype) + pos[None, None, :]
+    # current position = layer-0 self-attn per-slot cache counters (B,)
+    pos0 = cache.kv.pos[0]
+    pos = _sin_pos_at(pos0, cfg.d_model, cfg.dtype)  # (B, d)
+    x = L.embed(params["embed"], tokens, cfg.dtype) + pos[:, None, :]
 
     def body(x, inp):
         bp, kvc, ck, cv = inp

@@ -208,17 +208,20 @@ class KVCache(NamedTuple):
     """Decode-time cache.  For SWA the buffers are ring buffers of length
     window; otherwise they are full-length.
 
-    ``pad`` is the per-slot left-pad count of the prompt that primed the
-    cache: entries at cache index < pad[b] hold projections of pad tokens
-    and are masked out of every attention (so one slot's padding can never
-    leak into another prompt's logits).  RoPE positions are pad-relative
-    (cache index - pad), so a prompt sees the same positions it would see
-    served alone.  A zero-initialized cache (pad == 0) reproduces the
-    legacy unpadded behaviour exactly."""
+    ``pos`` is PER-SLOT: each batch lane counts its own tokens, so slots
+    admitted at different times (continuous batching) decode at different
+    depths inside one fixed-width program.  ``pad`` is the per-slot
+    left-pad count of the prompt that primed the cache: entries at cache
+    index < pad[b] hold projections of pad tokens and are masked out of
+    every attention (so one slot's padding can never leak into another
+    prompt's logits).  RoPE positions are pad-relative (cache index -
+    pad), so a prompt sees the same positions it would see served alone.
+    A zero-initialized cache (pos == pad == 0) reproduces the legacy
+    unpadded behaviour exactly."""
 
     k: jax.Array  # (B, T, Kv, hd)
     v: jax.Array
-    pos: jax.Array  # () int32 — number of tokens already in the cache
+    pos: jax.Array  # (B,) int32 — tokens already in each slot's lane
     pad: jax.Array  # (B,) int32 — per-slot left-pad count (see above)
 
 
@@ -226,7 +229,7 @@ def kv_cache_descs(b: int, t: int, n_kv: int, head_dim: int, dtype) -> KVCache:
     return KVCache(
         k=ParamDesc((b, t, n_kv, head_dim), ("batch", "seq_kv", "kv_heads", None), dtype=dtype, init="zeros"),
         v=ParamDesc((b, t, n_kv, head_dim), ("batch", "seq_kv", "kv_heads", None), dtype=dtype, init="zeros"),
-        pos=ParamDesc((), (), dtype=jnp.int32, init="zeros"),
+        pos=ParamDesc((b,), ("batch",), dtype=jnp.int32, init="zeros"),
         pad=ParamDesc((b,), ("batch",), dtype=jnp.int32, init="zeros"),
     )
 
@@ -239,34 +242,41 @@ def decode_attention(
     theta: float = 10000.0,
     window: int | None = None,
     use_rope: bool = True,
+    active: jax.Array | None = None,
 ) -> tuple[jax.Array, KVCache]:
-    """One-token decode: x (B, 1, d); cache holds T past positions."""
+    """One-token decode: x (B, 1, d); cache holds T past positions.
+
+    Each slot writes at its own ``pos[b]`` (continuous batching: lanes
+    decode at independent depths).  ``active`` (B,) marks live lanes: an
+    inactive (FREE / DONE) slot still flows through the fixed-width
+    program — same shapes, no recompile — but its ``pos`` does not
+    advance, so it is a dead lane whose writes land on a yet-unused index
+    of its own (dead) lane and whose output is discarded by the caller."""
     b = x.shape[0]
     t = cache.k.shape[1]
-    positions = (
-        jnp.broadcast_to(cache.pos, (b,))[:, None] - cache.pad[:, None]
-        if use_rope else None
-    )
+    positions = (cache.pos - cache.pad)[:, None] if use_rope else None
     q, k_new, v_new = _project_qkv(p, x, positions, theta)
 
-    slot = cache.pos % t if window is not None else cache.pos
-    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), slot, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), slot, axis=1)
+    slot = cache.pos % t if window is not None else jnp.minimum(cache.pos, t - 1)
+    bidx = jnp.arange(b)
+    k = cache.k.at[bidx, slot].set(k_new[:, 0].astype(cache.k.dtype))
+    v = cache.v.at[bidx, slot].set(v_new[:, 0].astype(cache.v.dtype))
 
     idx = jnp.arange(t)
     if window is not None:
         # ring buffer: valid entries are the last min(pos+1, window) writes
-        age = (slot - idx) % t
-        valid = age < jnp.minimum(cache.pos + 1, t)
+        age = (slot[:, None] - idx[None, :]) % t  # (B, T)
+        valid = age < jnp.minimum(cache.pos + 1, t)[:, None]
         # mask surviving left-pad entries (global index of an entry = pos - age)
-        valid = valid[None, :] & ((cache.pos - age)[None, :] >= cache.pad[:, None])
+        valid = valid & ((cache.pos[:, None] - age) >= cache.pad[:, None])
     else:
-        valid = (idx[None, :] <= cache.pos) & (idx[None, :] >= cache.pad[:, None])
+        valid = (idx[None, :] <= cache.pos[:, None]) & (idx[None, :] >= cache.pad[:, None])
     mask = valid[:, None, None, None, :]  # (B,1,1,1,T)
 
     out = _gqa_scores_apply(q, k.astype(q.dtype), v.astype(q.dtype), mask)
     y = jnp.einsum("bshk,hkd->bsd", out, W(p["wo"]).astype(x.dtype))
-    return y, KVCache(k=k, v=v, pos=cache.pos + 1, pad=cache.pad)
+    step = jnp.ones((b,), jnp.int32) if active is None else active.astype(jnp.int32)
+    return y, KVCache(k=k, v=v, pos=cache.pos + step, pad=cache.pad)
 
 
 def prefill_attention(
@@ -286,7 +296,8 @@ def prefill_attention(
     k/v land in cache slots [0, S) (ring-wrapped for SWA).  Pad positions
     are masked as keys everywhere, so they cannot pollute shorter prompts;
     their own (garbage) outputs only feed their own masked positions.
-    Returns (y (B, S, d), primed cache with pos = S, pad recorded)."""
+    Returns (y (B, S, d), primed cache with per-slot pos = S, pad
+    recorded)."""
     b, s, _ = x.shape
     t = cache.k.shape[1]
     q, k_new, v_new = _project_qkv(p, x, positions, theta)
@@ -308,7 +319,7 @@ def prefill_attention(
         slots = keep % t
         k = cache.k.at[:, slots].set(k_new[:, keep].astype(cache.k.dtype))
         v = cache.v.at[:, slots].set(v_new[:, keep].astype(cache.v.dtype))
-    return y, KVCache(k=k, v=v, pos=jnp.int32(s), pad=pad)
+    return y, KVCache(k=k, v=v, pos=jnp.full((b,), s, jnp.int32), pad=pad)
 
 
 def cross_attention(p: dict, x: jax.Array, kv: tuple[jax.Array, jax.Array]) -> jax.Array:

@@ -16,7 +16,6 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.base import ParamDesc, constrain, dense, xscan
 from repro.models.layers import W as L_W, rmsnorm, rmsnorm_desc

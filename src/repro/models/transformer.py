@@ -162,6 +162,7 @@ def lm_decode(
     cfg: ArchConfig,
     cache: LMCache,
     tokens: jax.Array,  # (B, 1)
+    active: jax.Array | None = None,  # (B,) live-slot mask (continuous batching)
 ) -> tuple[jax.Array, LMCache]:
     x = L.embed(params["embed"], tokens, cfg.dtype)
 
@@ -169,7 +170,7 @@ def lm_decode(
         bp, c = inp
         h, c2 = L.decode_attention(
             bp["attn"], L.rmsnorm(x, bp["ln1"]), c,
-            theta=cfg.rope_theta, window=cfg.window,
+            theta=cfg.rope_theta, window=cfg.window, active=active,
         )
         x = x + h
         y = L.rmsnorm(x, bp["ln2"])
@@ -255,6 +256,23 @@ def lm_prefill(
     x = L.rmsnorm(x[:, -1:], params["final_norm"])  # only the last position
     logits = L.lm_head(params["embed"], x)          # feeds the first sample
     return LMCache(kv=new_kv), logits[:, 0]
+
+
+def lm_cache_insert_slot(live: LMCache, one: LMCache, slot: jax.Array) -> LMCache:
+    """Admit a request: write a freshly prefilled single-slot cache (batch-1
+    leaves from :func:`lm_prefill` on a zeroed cache) into lane ``slot`` of
+    a live multi-slot cache.  Every ``LMCache.kv`` leaf carries batch at
+    axis 1 (axis 0 is the stacked layer axis), so one traced
+    dynamic-update-slice per leaf replaces the whole lane — k/v entries,
+    per-slot ``pos`` and ``pad`` — without touching the other lanes, and
+    ``slot`` stays a traced scalar (admission never recompiles)."""
+    kv = jax.tree_util.tree_map(
+        lambda a, b: jax.lax.dynamic_update_slice_in_dim(
+            a, b.astype(a.dtype), slot, axis=1
+        ),
+        live.kv, one.kv,
+    )
+    return LMCache(kv=kv, cross_kv=live.cross_kv)
 
 
 def vision_prefill_cross_kv(params: dict, cfg: ArchConfig, vision_embeds: jax.Array):

@@ -41,7 +41,7 @@ def adamw_init_descs(param_descs) -> OptState:
 def global_norm(tree) -> jax.Array:
     leaves = jax.tree_util.tree_leaves(tree)
     return jnp.sqrt(
-        sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves)
+        sum(jnp.sum(a.astype(jnp.float32) ** 2) for a in leaves)
     )
 
 

@@ -36,7 +36,7 @@ import numpy as np
 from repro.core import codec
 from repro.core.policy import QuantPolicy, path_str
 from repro.core.qsq import (
-    LEVEL_TABLE, QSQTensor, _quantize_impl, bits_per_code, codes_to_levels,
+    LEVEL_TABLE, QSQTensor, _quantize_impl, codes_to_levels,
     levels_to_codes, quantize,
 )
 
@@ -440,7 +440,7 @@ def quantize_tree(params, policy: QuantPolicy, descs=None):
 
     if descs is None:
         return jax.tree_util.tree_map_with_path(
-            lambda p, l: _legacy_leaf(path_str(p), l), params
+            lambda p, a: _legacy_leaf(path_str(p), a), params
         )
 
     def _leaf(path, leaf, desc):

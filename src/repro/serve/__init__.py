@@ -1,3 +1,4 @@
 from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.scheduler import Request, Scheduler, SlotState
 
-__all__ = ["ServeConfig", "ServeEngine"]
+__all__ = ["Request", "Scheduler", "ServeConfig", "ServeEngine", "SlotState"]

@@ -13,19 +13,35 @@ exclusions.  ``set_quality`` re-dials an artifact-built engine to another
 tier in place — LSB plane truncation on the already-loaded wire, never a
 re-quantize.
 
-Generation is two jitted programs: a ONE-DISPATCH prefill that primes the
-cache for the whole left-padded prompt batch in a single causal-masked
-forward — every packed weight streams once per prompt, not once per token
-(recurrent/cross families fall back to a scanned per-token prefill) — and
-a multi-token decode scan (greedy, or temperature-sampled when
-``ServeConfig.temperature > 0``) that syncs with the host exactly once per
-generate() call.  The decode steps route small-M packed matmuls through
-the GEMV kernel picked by ``kernels/dispatch.py``.  Requests of different
-lengths share one slot-based KV cache (continuous-batching-lite); each
-slot's left padding is masked out of attention, so a dense-family
-prompt's tokens are exactly invariant to its batch mates (MoE keeps the
-weaker guarantee the scan prefill had: batch mates — padded or not —
-share expert capacity and can shift routing under overflow).
+Serving is REQUEST-LEVEL continuously batched (attention families):
+``submit()`` enqueues a prompt, each ``step()`` admits queued requests
+into FREE slots — one single-slot prefill (the one-dispatch causal
+forward on a zeroed batch-1 cache) plus a traced cache-lane insert per
+admission — then runs ONE fixed-width greedy decode iteration over all
+lanes.  Per-slot cache positions and an ``active`` mask make finished and
+empty slots dead lanes rather than shape changes, so admissions and
+evictions never retrace, and a new prompt starts decoding next step
+instead of waiting for the whole batch to drain.  Finished requests are
+evicted in the same step and surface through ``poll()`` /
+``run_until_drained()``.
+
+``generate()`` is a thin submit-all/drain wrapper over that scheduler for
+greedy attention-family engines, and otherwise falls back to the static
+two-program path (one-dispatch prefill + multi-token decode scan, or the
+temperature-sampled scan when ``ServeConfig.temperature > 0``).  The
+wrapper trades the static scan's single host sync for one sync per
+step() — the cost of a schedulable decode loop; throughput-bound batch
+decoding with no arrival stream can set ``ServeConfig(continuous=False)``
+to keep the one-scan path (tokens are identical either way).
+
+Dense families keep the exactness guarantee: per-slot left padding and
+active masking mean a prompt's tokens are invariant to its batch mates
+AND to when they were admitted.  MoE keeps the weaker guarantee the
+static batch had — all lanes share expert capacity, and under the
+scheduler that includes DEAD lanes (a FREE/DONE slot's frozen token
+still routes through the experts), so an MoE request's tokens can shift
+with slot history under capacity overflow, exactly as they could with
+live batch mates.
 """
 from __future__ import annotations
 
@@ -39,18 +55,50 @@ import numpy as np
 
 from repro.models.api import Model
 from repro.models.base import init_params
+from repro.serve.scheduler import Request, Scheduler
 from repro.train.step import (
-    make_cache_prefill_step, make_decode_loop, make_sample_decode_loop,
-    make_serve_step,
+    make_admit_step, make_cache_prefill_step, make_cont_decode_step,
+    make_decode_loop, make_sample_decode_loop, make_serve_step,
+    supports_fused_prefill,
 )
 
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     batch_slots: int = 8
-    max_len: int = 256
+    max_len: int = 256    # continuous sessions: KV cache length per slot
     temperature: float = 0.0  # 0 => greedy; > 0 => categorical sampling
     packed: bool = True  # wire loads: keep matmul weights in bit-plane form
+    continuous: bool = True  # greedy attention-family generate() -> scheduler
+    max_prompt: int = 64  # continuous sessions: fixed prefill width
+
+
+class _Session:
+    """Device-side state of one continuous-batching stream: the live
+    multi-slot cache, the per-slot current tokens / active mask, and the
+    host-side :class:`Scheduler`.  All shapes are fixed at construction
+    ((slots, cache_len) cache, (1, prefill_len) admission prompts), so
+    every jitted program traces once per session shape."""
+
+    def __init__(self, model: Model, slots: int, prefill_len: int,
+                 cache_len: int):
+        if prefill_len < 1:
+            raise ValueError(f"prefill width must be >= 1, got {prefill_len}")
+        if prefill_len >= cache_len:
+            raise ValueError(
+                f"cache_len {cache_len} leaves no decode room after the "
+                f"{prefill_len}-token prefill window"
+            )
+        self.prefill_len = prefill_len
+        self.cache_len = cache_len
+        self.sched = Scheduler(slots)
+        key = jax.random.PRNGKey(0)
+        self.cache = init_params(key, model.cache_descs(slots, cache_len))
+        # zeroed batch-1 cache reused (never donated) by every admission
+        self.zero_slot_cache = init_params(key, model.cache_descs(1, cache_len))
+        self.cur = np.zeros((slots, 1), np.int32)
+        self.active = np.zeros((slots,), np.int32)
+        self.step_idx = 0
 
 
 class ServeEngine:
@@ -65,6 +113,10 @@ class ServeEngine:
         self._prefill = jax.jit(make_cache_prefill_step(model))
         self._decode_loop = jax.jit(make_decode_loop(model))
         self._sample_loop = None  # jitted lazily; most engines stay greedy
+        # continuous-batching programs (attention families; traced lazily)
+        self._cont_step = jax.jit(make_cont_decode_step(model))
+        self._admit = jax.jit(make_admit_step(model))
+        self._session: _Session | None = None
 
     # -- loading -----------------------------------------------------------
     @classmethod
@@ -92,27 +144,187 @@ class ServeEngine:
         """Re-resolve the param tree at another tier of this engine's
         artifact, in place — plane truncation on the loaded wire, no reload
         and no re-quantization.  The jitted programs take params as
-        arguments, so the dial costs one retrace, not a rebuild."""
+        arguments, so the dial costs one retrace, not a rebuild.  A live
+        continuous stream must drain first (its KV entries were computed
+        at the old tier); an idle session is dropped."""
         if self.artifact is None:
             raise ValueError(
                 "this engine was not built from an EdgeArtifact; construct "
                 "it via repro.api.compress(...).engine(quality=...) to dial "
                 "quality"
             )
+        if self.has_work:
+            raise RuntimeError(
+                "cannot re-dial quality while a continuous stream has live "
+                "requests; run_until_drained() (or poll results) first"
+            )
+        self._session = None
         self.params, self.n_packed_leaves = self.artifact.serve_params(
             quality, packed=self.cfg.packed
         )
         self.quality = quality
         return self
 
+    # -- continuous batching ------------------------------------------------
+    def _continuous_capable(self) -> bool:
+        return supports_fused_prefill(self.model)
+
+    def _require_continuous(self):
+        if self.cfg.temperature > 0:
+            raise ValueError(
+                "the continuous scheduler is greedy-only; build the engine "
+                "with temperature=0 (generate() still samples via the "
+                "static path)"
+            )
+        if not self._continuous_capable():
+            raise ValueError(
+                f"continuous batching needs an attention family with "
+                f"per-lane KV isolation; {self.model.cfg.family!r} "
+                f"(cross_every={self.model.cfg.cross_every}) serves via "
+                f"generate()"
+            )
+
+    def _ensure_session(self) -> _Session:
+        if self._session is None:
+            self._session = _Session(
+                self.model, self.cfg.batch_slots,
+                prefill_len=self.cfg.max_prompt, cache_len=self.cfg.max_len,
+            )
+        return self._session
+
+    def submit(self, prompt: Sequence[int], max_new: int = 32) -> int:
+        """Enqueue one prompt on the engine's continuous stream; returns a
+        request id for :meth:`poll`.  The request is admitted into the
+        first slot that frees up — immediately on the next :meth:`step`
+        if one is FREE — without flushing the requests already decoding."""
+        self._require_continuous()
+        s = self._ensure_session()
+        if len(prompt) > s.prefill_len:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens exceeds the stream's "
+                f"fixed {s.prefill_len}-token prefill window; raise "
+                f"ServeConfig.max_prompt"
+            )
+        if s.prefill_len + max_new > s.cache_len:
+            raise ValueError(
+                f"prefill window {s.prefill_len} + max_new {max_new} "
+                f"exceeds the {s.cache_len}-entry slot cache; raise "
+                f"ServeConfig.max_len"
+            )
+        return s.sched.submit(prompt, max_new, arrival=s.step_idx)
+
+    def step(self) -> None:
+        """One scheduler iteration: admit queued requests into FREE slots
+        (single-slot prefill + cache lane insert each, emitting the
+        request's first token from the prefill logits), then ONE decode
+        dispatch over all lanes at fixed width.  Requests that reach
+        ``max_new`` are evicted — their slot is FREE for the next step's
+        admissions — and surface via :meth:`poll`."""
+        s = self._ensure_session()
+        for slot, req in s.sched.admissible():
+            s.sched.activate(slot, req, s.step_idx)
+            toks = np.zeros((1, s.prefill_len), np.int32)
+            toks[0, s.prefill_len - len(req.tokens):] = req.tokens
+            # one dispatch: prefill + lane insert + on-device argmax; the
+            # host syncs on a single int32, not a (vocab,) logits row
+            s.cache, first = self._admit(
+                self.params, s.zero_slot_cache, s.cache, jnp.asarray(toks),
+                jnp.asarray([len(req.tokens)], jnp.int32), jnp.int32(slot),
+            )
+            first = int(first)
+            s.sched.start_decoding(slot)
+            s.cur[slot, 0] = first
+            if s.sched.record(slot, first, s.step_idx):
+                s.sched.evict(slot)  # max_new == 1: done at admission
+            else:
+                s.active[slot] = 1
+        live = s.sched.decoding_slots()
+        if live:
+            nxt, s.cache = self._cont_step(
+                self.params, s.cache, jnp.asarray(s.cur),
+                jnp.asarray(s.active),
+            )
+            nxt = np.asarray(nxt)  # the step's one host sync
+            for slot in live:
+                s.cur[slot, 0] = nxt[slot]
+                if s.sched.record(slot, int(nxt[slot]), s.step_idx):
+                    s.sched.evict(slot)
+                    s.active[slot] = 0
+        s.step_idx += 1
+
+    def poll(self, rid: int | None = None):
+        """Results finished since the last poll: ``poll()`` -> {rid:
+        tokens}; ``poll(rid)`` -> that request's tokens, or None while it
+        is still queued/decoding.  Each result is handed out once: an
+        already-claimed or never-issued rid raises KeyError (None never
+        means "lost" — claimed results stay readable via
+        :attr:`completed_requests`)."""
+        if self._session is None:
+            if rid is None:
+                return {}
+            raise KeyError(f"unknown request id {rid} (no active stream)")
+        return self._session.sched.poll(rid)
+
+    # -- stream introspection (the public view of the session state) -------
+    @property
+    def has_work(self) -> bool:
+        """True while the stream has queued, prefilling or decoding
+        requests."""
+        return self._session is not None and self._session.sched.has_work
+
+    @property
+    def step_count(self) -> int:
+        """Number of step() iterations the current stream has run."""
+        return 0 if self._session is None else self._session.step_idx
+
+    @property
+    def completed_requests(self) -> dict[int, Request]:
+        """Every finished Request of the current stream (rid -> Request,
+        with arrival/admitted/finished step indices for latency stats);
+        unlike poll(), repeated reads see the same map."""
+        return {} if self._session is None else dict(self._session.sched.completed)
+
+    @property
+    def live_requests(self) -> list[Request]:
+        """Requests currently occupying slots (PREFILLING/DECODING)."""
+        if self._session is None:
+            return []
+        return [r for r in self._session.sched.slot_req if r is not None]
+
+    def reset_stream(self) -> None:
+        """Drop the continuous stream unconditionally — queued and live
+        requests are abandoned, the next submit() starts a fresh session."""
+        self._session = None
+
+    def run_until_drained(self, max_steps: int | None = None):
+        """step() until the queue and every slot are empty; returns
+        everything :meth:`poll` would (results finished since the last
+        poll, keyed by request id)."""
+        s = self._ensure_session()
+        n = 0
+        while s.sched.has_work:
+            self.step()
+            n += 1
+            if max_steps is not None and n >= max_steps and s.sched.has_work:
+                raise RuntimeError(
+                    f"stream not drained after {max_steps} steps "
+                    f"({len(s.sched.queue)} queued)"
+                )
+        return self.poll()
+
     # -- generation ----------------------------------------------------------
     def generate(self, prompts: Sequence[Sequence[int]], max_new: int = 32,
                  seed: int = 0):
         """Decode a batch of token-id prompts.  Returns lists of ids.
 
-        Greedy when ``cfg.temperature == 0``; otherwise samples from
-        ``softmax(logits / temperature)`` with a PRNG derived from ``seed``
-        (same seed + prompts => same tokens).
+        Greedy attention-family engines route through the continuous
+        scheduler (submit all, drain) — a pure wrapper, token-identical to
+        the static program for dense families.  Sampling engines
+        (``cfg.temperature > 0``), recurrent/cross families, and
+        ``cfg.continuous=False`` take the static two-program path:
+        one-dispatch prefill + one decode scan, sampling from
+        ``softmax(logits / temperature)`` with a PRNG derived from
+        ``seed`` (same seed + prompts => same tokens).
         """
         if len(prompts) == 0:
             return []
@@ -122,9 +334,40 @@ class ServeEngine:
         slots = self.cfg.batch_slots
         if b > slots:
             raise ValueError(
-                f"{b} prompts exceed the engine's {slots} batch slots; "
-                f"raise ServeConfig.batch_slots or split the batch"
+                f"{b} prompts exceed the engine's {slots} batch_slots; "
+                f"raise ServeConfig.batch_slots, split the batch, or "
+                f"submit() to the continuous stream (which queues)"
             )
+        if max_new < 1:
+            # legacy contract on every path: zero-length decode is a no-op
+            return [[] for _ in prompts]
+        if (self.cfg.continuous and self.cfg.temperature == 0
+                and self._continuous_capable()):
+            return self._generate_continuous(prompts, max_new)
+        return self._generate_static(prompts, max_new, seed)
+
+    def _generate_continuous(self, prompts, max_new: int):
+        """Submit-all/drain on a throwaway session sized to this batch
+        (prefill width = longest prompt, cache = prompt + max_new), so the
+        traced shapes match the call exactly like the static path's."""
+        maxp = max(len(p) for p in prompts)
+        saved = self._session
+        self._session = _Session(
+            self.model, self.cfg.batch_slots,
+            prefill_len=maxp, cache_len=maxp + max_new + 1,
+        )
+        try:
+            rids = [self.submit(p, max_new=max_new) for p in prompts]
+            done = self.run_until_drained()
+            return [done[r] for r in rids]
+        finally:
+            self._session = saved
+
+    def _generate_static(self, prompts, max_new: int, seed: int):
+        """The one-static-batch path: every slot prefills and decodes in
+        lockstep, and the whole batch drains before the call returns."""
+        b = len(prompts)
+        slots = self.cfg.batch_slots
         maxp = max(len(p) for p in prompts)
         cache_len = maxp + max_new + 1
 

@@ -1,0 +1,165 @@
+"""Request-level continuous batching: the admit/evict loop over slots.
+
+The paper's 3-bit artifacts only pay off when the dialed-down hardware is
+kept busy: a static batch ties every slot to the slowest request, so a
+new prompt waits for the whole batch to drain before its first token.
+This module is the host-side half of the fix — pure bookkeeping, no jax:
+
+* :class:`Request` — one submitted prompt with its arrival/admission/
+  finish step indices and the tokens emitted so far;
+* :class:`Scheduler` — a FIFO admission queue plus a per-slot state
+  machine ``FREE -> PREFILLING -> DECODING -> DONE (-> FREE)``.
+
+The device half lives in :class:`~repro.serve.engine.ServeEngine`: each
+``engine.step()`` first admits queued requests into FREE slots (one
+single-slot prefill + cache lane insert per admission, both jitted once)
+and then runs ONE fixed-width decode iteration over all lanes, with the
+per-slot ``active`` mask making finished/empty slots dead lanes instead
+of shape changes.  A request that reaches ``max_new`` goes DONE and is
+evicted in the same step, freeing its slot for the next admission —
+batch mates never flush.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import enum
+from typing import Iterator, Sequence
+
+
+class SlotState(enum.Enum):
+    FREE = "free"            # no request; a dead lane in the decode program
+    PREFILLING = "prefilling"  # admission in flight: prompt -> cache lane
+    DECODING = "decoding"    # live lane: one token per engine.step()
+    DONE = "done"            # reached max_new; evicted before step() returns
+
+
+@dataclasses.dataclass
+class Request:
+    """One prompt's life in the scheduler (all times are step indices)."""
+
+    rid: int
+    tokens: tuple[int, ...]  # prompt token ids
+    max_new: int
+    arrival: int
+    admitted: int | None = None
+    finished: int | None = None
+    out: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def waiting(self) -> int | None:
+        """Steps spent queued before a slot opened (None until admitted)."""
+        return None if self.admitted is None else self.admitted - self.arrival
+
+    @property
+    def latency(self) -> int | None:
+        """Arrival -> last token, in steps (None until finished)."""
+        return None if self.finished is None else self.finished - self.arrival
+
+
+class Scheduler:
+    """Admission queue + slot state machine (host-side, deterministic).
+
+    The engine drives it: ``submit`` enqueues, ``admissible`` pairs queued
+    requests with FREE slots (FIFO), ``activate``/``start_decoding``
+    transition an admission, ``record`` appends a decoded token, and
+    ``evict`` returns a DONE slot to FREE.  ``completed`` keeps every
+    finished Request for latency accounting; ``poll`` hands each result
+    out exactly once.
+    """
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError(f"need at least one slot, got {n_slots}")
+        self.n_slots = n_slots
+        self.states: list[SlotState] = [SlotState.FREE] * n_slots
+        self.slot_req: list[Request | None] = [None] * n_slots
+        self.queue: collections.deque[Request] = collections.deque()
+        self.completed: dict[int, Request] = {}
+        self._unclaimed: dict[int, Request] = {}
+        self._next_rid = 0
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, tokens: Sequence[int], max_new: int, arrival: int) -> int:
+        if len(tokens) == 0:
+            raise ValueError("every prompt must contain at least one token")
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid=rid, tokens=tuple(tokens),
+                                  max_new=max_new, arrival=arrival))
+        return rid
+
+    def admissible(self) -> Iterator[tuple[int, Request]]:
+        """Pair queued requests with FREE slots, FIFO, popping both."""
+        for slot in range(self.n_slots):
+            if not self.queue:
+                return
+            if self.states[slot] is SlotState.FREE:
+                yield slot, self.queue.popleft()
+
+    def activate(self, slot: int, req: Request, step: int) -> None:
+        assert self.states[slot] is SlotState.FREE
+        self.states[slot] = SlotState.PREFILLING
+        self.slot_req[slot] = req
+        req.admitted = step
+
+    def start_decoding(self, slot: int) -> None:
+        assert self.states[slot] is SlotState.PREFILLING
+        self.states[slot] = SlotState.DECODING
+
+    # -- decode / eviction -------------------------------------------------
+    def decoding_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.states) if s is SlotState.DECODING]
+
+    def record(self, slot: int, token: int, step: int) -> bool:
+        """Append one emitted token; True when the request just finished."""
+        req = self.slot_req[slot]
+        req.out.append(int(token))
+        if len(req.out) >= req.max_new:
+            self.states[slot] = SlotState.DONE
+            req.finished = step
+            return True
+        return False
+
+    def evict(self, slot: int) -> Request:
+        """Return a DONE slot to FREE; the Request moves to ``completed``."""
+        assert self.states[slot] is SlotState.DONE
+        req = self.slot_req[slot]
+        self.states[slot] = SlotState.FREE
+        self.slot_req[slot] = None
+        self.completed[req.rid] = req
+        self._unclaimed[req.rid] = req
+        return req
+
+    # -- results -----------------------------------------------------------
+    def poll(self, rid: int | None = None):
+        """Finished tokens, handed out once.  ``poll()`` pops everything
+        finished since the last poll as {rid: tokens}; ``poll(rid)`` pops
+        that request's tokens, or None if it hasn't finished YET.  A rid
+        that was never issued, or whose result was already claimed (by a
+        bare ``poll()`` / ``run_until_drained()`` or an earlier
+        ``poll(rid)``), raises KeyError — so ``None`` always means "keep
+        stepping", never a silently lost result."""
+        if rid is not None:
+            if rid in self._unclaimed:
+                return list(self._unclaimed.pop(rid).out)
+            if rid in self.completed:
+                raise KeyError(
+                    f"request {rid} already claimed (poll()/run_until_"
+                    f"drained() hands each result out once); its tokens "
+                    f"remain readable via completed[{rid}].out"
+                )
+            if not 0 <= rid < self._next_rid:
+                raise KeyError(f"unknown request id {rid}")
+            return None  # still queued / prefilling / decoding
+        out = {r: list(q.out) for r, q in self._unclaimed.items()}
+        self._unclaimed.clear()
+        return out
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(
+            s in (SlotState.PREFILLING, SlotState.DECODING) for s in self.states
+        )

@@ -5,7 +5,7 @@ from typing import Any, NamedTuple
 
 from repro.models.api import Model
 from repro.optim import (
-    AdamWConfig, GradCompressionConfig, OptState,
+    GradCompressionConfig, OptState,
     adamw_init_descs, compression_state_descs,
 )
 

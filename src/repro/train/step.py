@@ -106,6 +106,50 @@ def make_cache_prefill_step(model: Model) -> Callable:
     return prefill_step
 
 
+def make_admit_step(model: Model) -> Callable:
+    """(params, zero_cache (batch-1), live_cache, toks (1, P), lens (1,),
+    slot ()) -> (live_cache, first_token ()).
+
+    One jitted dispatch per continuous-batching admission: single-slot
+    prefill on the zeroed batch-1 cache, lane insert into the live cache,
+    and the request's first greedy token argmaxed ON DEVICE — the host
+    syncs on one int32, never on a (vocab,)-sized logits row."""
+    prefill = make_cache_prefill_step(model)
+
+    def admit(params, zero_cache, live_cache, toks, lens, slot):
+        one_cache, logits = prefill(params, zero_cache, toks, lens)
+        cache = model.cache_insert_slot(live_cache, one_cache, slot)
+        first = jnp.argmax(logits[0]).astype(jnp.int32)
+        return cache, first
+
+    return admit
+
+
+def make_cont_decode_step(model: Model) -> Callable:
+    """(params, cache, cur (B,1), active (B,) int32) -> (next (B,), cache).
+
+    One greedy decode iteration over ALL slots of a continuous-batching
+    engine, at a fixed batch width: ``active`` marks the live (DECODING)
+    lanes.  Inactive lanes run the same fixed-shape program — dead lanes,
+    not shape changes, so admissions and evictions never retrace — but
+    their per-slot cache ``pos`` does not advance and their emitted token
+    is held at ``cur``, so a FREE/DONE slot is bit-frozen until the
+    scheduler re-admits it via a single-slot prefill insert.  (Dense
+    lanes are fully isolated; MoE dead lanes still route their frozen
+    token through shared expert capacity — the same cross-lane coupling
+    live batch mates have.)"""
+
+    def cont_step(params, cache, cur, active):
+        logits, cache = model.decode(
+            params, cache, {"tokens": cur, "active": active}
+        )
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        nxt = jnp.where(active > 0, nxt, cur[:, 0])
+        return nxt, cache
+
+    return cont_step
+
+
 def make_decode_loop(model: Model) -> Callable:
     """(params, cache, first (B,1), xs (T,)) -> (tokens (T, B), cache).
 

@@ -23,7 +23,6 @@ import jax
 import numpy as np
 
 from repro.checkpoint import CheckpointConfig, CheckpointManager
-from repro.data.pipeline import DataIteratorState
 from repro.models.api import Model
 from repro.models.base import init_params
 from repro.optim import AdamWConfig, GradCompressionConfig

@@ -4,7 +4,6 @@ Property tests run under hypothesis when it is installed; on a clean
 interpreter they fall back to a fixed seed sweep of the same checks so the
 suite still collects and covers the codec.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

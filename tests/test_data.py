@@ -2,7 +2,7 @@
 import numpy as np
 
 from repro.data.pipeline import (
-    DataIteratorState, LMDataConfig, image_batches, lm_batch,
+    LMDataConfig, image_batches, lm_batch,
     lm_batch_iterator, synthetic_image_dataset,
 )
 

@@ -1,5 +1,4 @@
 """Eq. 11/12 memory & energy model + roofline terms."""
-import numpy as np
 
 from repro.core import energy
 from repro.models.cnn import LENET, conv_layer_shapes

@@ -116,8 +116,8 @@ def test_serve_from_wire_close_to_exact():
     assert len(outs[0]) == 4
     # decoded params give finite loss in-family
     tok = jnp.zeros((2, 8), jnp.int32)
-    l = float(model.loss(eng.params, {"tokens": tok, "labels": tok}))
-    assert np.isfinite(l)
+    loss = float(model.loss(eng.params, {"tokens": tok, "labels": tok}))
+    assert np.isfinite(loss)
 
 
 def test_mamba_engine():
@@ -131,8 +131,6 @@ def _smollm_class_model():
     """smollm_135m-class dense config with 32-aligned dims so the qsq_matmul
     kernel can serve every matmul weight packed (the smoke config's d=48 is
     not plane-aligned)."""
-    import dataclasses
-
     from repro.configs.base import ArchConfig
 
     cfg = ArchConfig(name="smollm-like", family="dense", n_layers=2,

@@ -8,7 +8,7 @@ from repro.configs import get_arch
 from repro.launch.mesh import make_debug_mesh, mesh_axis_sizes, sharding_rules
 from repro.models import Model
 from repro.models.base import (
-    ParamDesc, abstract_params, init_params, partition_specs, spec_for_shape,
+    ParamDesc, init_params, partition_specs, spec_for_shape,
 )
 
 

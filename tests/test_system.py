@@ -3,7 +3,6 @@
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_arch
 from repro.core.policy import QuantPolicy

@@ -5,7 +5,6 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import CheckpointConfig, CheckpointManager
 from repro.configs import get_arch
