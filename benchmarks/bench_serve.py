@@ -19,9 +19,15 @@ Latency/wait are counted in dispatch ticks — every decode iteration and
 every admission prefill costs one — so the reported win is scheduling,
 not accounting; tokens must match request-for-request.
 
+The same arrival schedule then replays as a MIXED-TIER stream: each
+request cycles through the artifact's quality tiers and is served at its
+own tier inside the one shared decode dispatch (per-request quality),
+with every request's tokens verified against a solo single-tier engine.
+
 Emits one BENCH json line for the engine comparison, one for the
-continuous-vs-static stream, and one per quality tier, plus the standard
-(name, us_per_call, derived) rows for benchmarks.run.
+continuous-vs-static stream, one for the mixed-tier stream, and one per
+quality tier, plus the standard (name, us_per_call, derived) rows for
+benchmarks.run.
 """
 from __future__ import annotations
 
@@ -171,11 +177,13 @@ def _run_static_stream(engine, prompts, arrivals, max_new, slots):
     return lat, wait, outs, tick, time.time() - t0
 
 
-def _run_continuous_stream(engine, prompts, arrivals, max_new):
+def _run_continuous_stream(engine, prompts, arrivals, max_new, tiers=None):
     """The same schedule through submit()/step()/poll(): requests join the
     running decode as slots free.  The tick clock charges every decode
     dispatch 1 and every admission prefill 1 (the same dispatch the static
-    path pays once per batch), so the comparison is dispatch-honest."""
+    path pays once per batch), so the comparison is dispatch-honest.
+    ``tiers`` (one quality name per request) submits a MIXED-TIER stream —
+    per-request quality inside the shared decode dispatch."""
     t0 = time.time()
     engine.reset_stream()
     tick, i = 0, 0
@@ -187,7 +195,8 @@ def _run_continuous_stream(engine, prompts, arrivals, max_new):
         if i < len(prompts) and not engine.has_work:
             tick = max(tick, arrivals[i])  # idle until the next arrival
         while i < len(prompts) and arrivals[i] <= tick:
-            rid = engine.submit(prompts[i], max_new=max_new)
+            rid = engine.submit(prompts[i], max_new=max_new,
+                                quality=None if tiers is None else tiers[i])
             arrival_of[rid], index_of[rid] = arrivals[i], i
             i += 1
         engine.step()
@@ -306,6 +315,48 @@ def main(verbose: bool = True, quick: bool = False):
         "tokens_match": c_outs == s_outs,
         "latency_ratio": round(float(ratio), 2),
         **stream_stats,
+    }))
+
+    # MIXED-TIER continuous stream: the same Poisson-ish arrival schedule,
+    # each request cycled through the artifact's tiers (hi/mid/lo...) and
+    # served at ITS tier inside the one shared decode dispatch (per-row
+    # plane masks — no retrace, no param swap).  Every request's tokens
+    # must match a single-tier engine serving it alone at that tier.
+    tier_names = artifact.quality_names()
+    mix = [tier_names[i % len(tier_names)] for i in range(len(prompts))]
+    eng_mix = artifact.engine(quality="hi", batch_slots=STREAM_SLOTS,
+                              max_prompt=8, max_len=8 + STREAM_MAX_NEW + 1)
+    assert eng_mix.per_request_quality
+    _run_continuous_stream(eng_mix, prompts, arrivals, STREAM_MAX_NEW,
+                           tiers=mix)  # warm every program
+    m_lat, m_wait, m_outs, m_ticks, m_wall = _run_continuous_stream(
+        eng_mix, prompts, arrivals, STREAM_MAX_NEW, tiers=mix)
+    solo = {}
+    for q in tier_names:
+        solo[q] = artifact.engine(quality=q, per_request=False,
+                                  batch_slots=1, continuous=False)
+    mix_exact = all(
+        m_outs[i] == solo[mix[i]].generate([prompts[i]],
+                                           max_new=STREAM_MAX_NEW)[0]
+        for i in range(len(prompts))
+    )
+    assert mix_exact, "mixed-tier stream diverged from solo-tier engines"
+    rows.append(("serve/mixed_tier_stream", m_wall / n_tok * 1e6,
+                 f"mean_latency={np.mean(m_lat):.1f}t"
+                 f"|tok_per_tick={n_tok / m_ticks:.3f}|tiers={len(tier_names)}"))
+    if verbose:
+        print(f"  mixed-tier stream ({'/'.join(tier_names)}): "
+              f"mean latency {np.mean(m_lat):.1f} ticks, "
+              f"{n_tok / m_ticks:.3f} tok/tick, per-request tokens exact")
+    print("BENCH " + json.dumps({
+        "bench": "serve_mixed_tier",
+        "requests": len(prompts),
+        "slots": STREAM_SLOTS,
+        "max_new": STREAM_MAX_NEW,
+        "tier_mix": {q: mix.count(q) for q in tier_names},
+        "tokens_match_solo_tier": mix_exact,
+        "tok_per_tick": round(n_tok / m_ticks, 3),
+        **_lat_stats(m_lat, m_wait),
     }))
 
     # quality-tier sweep: one engine per tier from the SAME artifact, lower

@@ -47,6 +47,7 @@ import jax.numpy as jnp
 
 from repro.core import codec
 from repro.kernels import ref
+from repro.kernels.ref import MASK_VARIANTS
 
 PLANE = codec.PLANE_GROUP
 
@@ -267,27 +268,56 @@ def packed_matmul(
     group_size: int,
     use_kernel: bool = True,
     interpret: bool | None = None,
+    plane_mask: jax.Array | None = None,
 ) -> jax.Array:
     """x (M,K) @ decode(planes (K//32,3,N), scales (K//G,N)) -> (M,N) f32.
 
     The one entry point every packed matmul goes through: plans on the
     static shapes, zero-pads ragged M/N to the fitted tile, runs the
     routed kernel, and slices the pad back off.  Never materializes the
-    dense weight."""
+    dense weight.
+
+    ``plane_mask`` (M,) int32 — one 3-bit code mask per x row, values from
+    :data:`MASK_VARIANTS` — makes the matmul quality-tiered PER ROW: row m
+    contracts against the weight decoded under its own mask, bit-identical
+    to the unmasked matmul on ``truncate(drop_m)`` planes.  The mask is a
+    traced operand split into a fixed 3-variant activation stack, so a
+    tier change is a data change (mask flip), never a retrace; plan/route
+    and tile fitting are identical to the unmasked call."""
     m, k = x.shape
     n = planes.shape[-1]
     p = plan(m, k, n, group_size, use_kernel=use_kernel)
     counters[p.route] += 1
     counters[f"{p.route}:{'padded' if p.padded else 'exact'}"] += 1
+    if plane_mask is not None:
+        counters[f"{p.route}:masked"] += 1
+        # variant split: xs[i] keeps exactly the rows masked MASK_VARIANTS[i]
+        # (a row matches one variant; others contribute exact zeros).  Pad
+        # rows carry mask 0 -> no variant -> exact zero rows, as before.
+        sel = jnp.stack([plane_mask == v for v in MASK_VARIANTS])
+        xs = jnp.where(sel[:, :, None], x[None], 0).astype(x.dtype)
 
     if p.route == ROUTE_XLA:
+        if plane_mask is not None:
+            return ref.qsq_matmul_masked_ref(xs, planes, scales, group_size)
         return ref.qsq_matmul_ref(x, planes, scales, group_size)
 
     from repro.kernels import ops  # deferred: keeps pallas off cold paths
 
-    xp = _pad_axis(x, 0, p.pm)
     pp = _pad_axis(planes, 2, p.pn)
     sp = _pad_axis(scales, 1, p.pn)
+    if plane_mask is not None:
+        xsp = _pad_axis(xs, 1, p.pm)
+        if p.route == ROUTE_GEMV:
+            out = ops.qsq_matvec_masked(xsp, pp, sp, group_size=group_size,
+                                        bk=p.bk, bn=p.bn, interpret=interpret)
+        else:
+            out = ops.qsq_matmul_masked(xsp, pp, sp, group_size=group_size,
+                                        bm=p.bm, bk=p.bk, bn=p.bn,
+                                        interpret=interpret)
+        return out[:m, :n] if p.padded else out
+
+    xp = _pad_axis(x, 0, p.pm)
     if p.route == ROUTE_GEMV:
         out = ops.qsq_matvec(xp, pp, sp, group_size=group_size,
                              bk=p.bk, bn=p.bn, interpret=interpret)

@@ -12,7 +12,9 @@ import jax.numpy as jnp
 from repro.core import codec
 from repro.kernels import ref
 from repro.kernels.qsq_matmul import qsq_matmul as _qsq_matmul_pallas
+from repro.kernels.qsq_matmul import qsq_matmul_masked as _qsq_matmul_masked_pallas
 from repro.kernels.qsq_matvec import qsq_matvec as _qsq_matvec_pallas
+from repro.kernels.qsq_matvec import qsq_matvec_masked as _qsq_matvec_masked_pallas
 from repro.kernels.qsq_quantize import qsq_quantize as _qsq_quantize_pallas
 
 
@@ -61,6 +63,51 @@ def qsq_matvec(
         interpret = auto_interpret()
     return _qsq_matvec_pallas(
         x, planes, scales, group_size=group_size, bk=bk, bn=bn,
+        interpret=interpret,
+    )
+
+
+def qsq_matmul_masked(
+    xs: jax.Array,
+    planes: jax.Array,
+    scales: jax.Array,
+    *,
+    group_size: int,
+    bm: int = 256,
+    bk: int = 512,
+    bn: int = 256,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Per-row plane-masked GEMM: xs (3, M, K) variant-split activations."""
+    if not use_pallas:
+        return ref.qsq_matmul_masked_ref(xs, planes, scales, group_size)
+    if interpret is None:
+        interpret = auto_interpret()
+    return _qsq_matmul_masked_pallas(
+        xs, planes, scales, group_size=group_size, bm=bm, bk=bk, bn=bn,
+        interpret=interpret,
+    )
+
+
+def qsq_matvec_masked(
+    xs: jax.Array,
+    planes: jax.Array,
+    scales: jax.Array,
+    *,
+    group_size: int,
+    bk: int = 1024,
+    bn: int = 256,
+    interpret: bool | None = None,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Per-row plane-masked GEMV: xs (3, M, K) variant-split activations."""
+    if not use_pallas:
+        return ref.qsq_matmul_masked_ref(xs, planes, scales, group_size)
+    if interpret is None:
+        interpret = auto_interpret()
+    return _qsq_matvec_masked_pallas(
+        xs, planes, scales, group_size=group_size, bk=bk, bn=bn,
         interpret=interpret,
     )
 

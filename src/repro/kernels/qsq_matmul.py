@@ -35,6 +35,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.ref import MASK_VARIANTS
+
 # jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x.
 _COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
@@ -87,6 +89,83 @@ def _qsq_matmul_kernel(x_ref, planes_ref, scales_ref, o_ref, *, bk: int, group_s
     o_ref[...] += jnp.dot(
         x_ref[...], w, preferred_element_type=jnp.float32
     )
+
+
+def _qsq_matmul_masked_kernel(
+    xs_ref, planes_ref, scales_ref, o_ref, *, bk: int, group_size: int
+):
+    """Per-row plane-masked GEMM tile (see qsq_matvec._qsq_matvec_masked_kernel
+    for the variant-split contract): one weight-tile stream, three static
+    mask decodes in VREGs, one dot per variant into the shared output."""
+    bn = o_ref.shape[1]
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    codes = _unpack_planes(planes_ref[...], bk, bn)          # (bk, bn) int32
+    ng = bk // group_size
+    sc = scales_ref[...]
+    acc = None
+    for i, mask in enumerate(MASK_VARIANTS):
+        levels = _decode_codes(codes & mask).astype(jnp.float32)
+        w = (levels.reshape(ng, group_size, bn) * sc[:, None, :]).reshape(bk, bn)
+        d = jnp.dot(
+            xs_ref[i], w.astype(xs_ref.dtype), preferred_element_type=jnp.float32
+        )
+        acc = d if acc is None else acc + d
+    o_ref[...] += acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("group_size", "bm", "bk", "bn", "interpret"),
+)
+def qsq_matmul_masked(
+    xs: jax.Array,
+    planes: jax.Array,
+    scales: jax.Array,
+    *,
+    group_size: int,
+    bm: int = 256,
+    bk: int = 512,
+    bn: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Plane-masked sibling of :func:`qsq_matmul`: xs (3, M, K) -> (M, N) f32.
+
+    xs[i] holds the x rows whose plane mask is ``ref.MASK_VARIANTS[i]``
+    (other rows zero).  Same tiling contract as the unmasked kernel."""
+    nv, m, kdim = xs.shape
+    n = planes.shape[-1]
+    if nv != len(MASK_VARIANTS):
+        raise ValueError(f"xs leading dim {nv} != {len(MASK_VARIANTS)} mask variants")
+    if planes.shape != (kdim // PLANE, 3, n):
+        raise ValueError(f"planes shape {planes.shape} != {(kdim // PLANE, 3, n)}")
+    if scales.shape != (kdim // group_size, n):
+        raise ValueError(f"scales shape {scales.shape} != {(kdim // group_size, n)}")
+    bm, bk, bn = min(bm, m), min(bk, kdim), min(bn, n)
+    if m % bm or kdim % bk or n % bn:
+        raise ValueError(f"shape ({m},{kdim},{n}) not divisible by tile ({bm},{bk},{bn})")
+    if bk % PLANE or bk % group_size:
+        raise ValueError(f"bk={bk} must be a multiple of 32 and group_size={group_size}")
+
+    grid = (m // bm, n // bn, kdim // bk)
+    kernel = functools.partial(_qsq_matmul_masked_kernel, bk=bk, group_size=group_size)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nv, bm, bk), lambda i, j, k: (0, i, k)),
+            pl.BlockSpec((bk // PLANE, 3, bn), lambda i, j, k: (k, 0, j)),
+            pl.BlockSpec((bk // group_size, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        compiler_params=_COMPILER_PARAMS(dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(xs, planes, scales)
 
 
 @functools.partial(

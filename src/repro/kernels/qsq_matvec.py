@@ -33,6 +33,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.qsq_matmul import (
     _COMPILER_PARAMS, PLANE, _decode_codes, _unpack_planes,
 )
+from repro.kernels.ref import MASK_VARIANTS
 
 
 def _qsq_matvec_kernel(
@@ -58,6 +59,94 @@ def _qsq_matvec_kernel(
     @pl.when(k == nk - 1)
     def _flush():
         o_ref[...] = acc_ref[...]
+
+
+def _qsq_matvec_masked_kernel(
+    xs_ref, planes_ref, scales_ref, o_ref, acc_ref, *, bk: int, group_size: int, nk: int
+):
+    """Per-row plane-masked GEMV: xs_ref (3, M, bk) carries x pre-split by
+    mask variant (rows of other variants zeroed).  The weight tile streams
+    ONCE; it is decoded under each of the three static plane masks in VREGs
+    (``codes & mask`` — a dropped plane is a masked term of the unpack) and
+    each variant contracts its own x rows.  A row's accumulator only ever
+    receives its variant's product plus exact zeros, so per-row output is
+    bit-identical to the unmasked kernel on plane-truncated weights."""
+    bn = o_ref.shape[1]
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    codes = _unpack_planes(planes_ref[...], bk, bn)           # (bk, bn) int32
+    ng = bk // group_size
+    sc = scales_ref[...]
+    acc = None
+    for i, mask in enumerate(MASK_VARIANTS):
+        levels = _decode_codes(codes & mask).astype(jnp.float32)
+        w = (levels.reshape(ng, group_size, bn) * sc[:, None, :]).reshape(bk, bn)
+        d = jnp.dot(
+            xs_ref[i], w.astype(xs_ref.dtype), preferred_element_type=jnp.float32
+        )
+        acc = d if acc is None else acc + d
+    acc_ref[...] += acc
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("group_size", "bk", "bn", "interpret")
+)
+def qsq_matvec_masked(
+    xs: jax.Array,
+    planes: jax.Array,
+    scales: jax.Array,
+    *,
+    group_size: int,
+    bk: int = 1024,
+    bn: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Plane-masked sibling of :func:`qsq_matvec`: xs (3, M, K) -> (M, N).
+
+    xs[i] holds the x rows whose plane mask is ``MASK_VARIANTS[i]`` (other
+    rows zero); the dispatcher builds it from the per-row plane_mask
+    operand.  Same tiling contract as the unmasked kernel."""
+    nv, m, kdim = xs.shape
+    n = planes.shape[-1]
+    if nv != len(MASK_VARIANTS):
+        raise ValueError(f"xs leading dim {nv} != {len(MASK_VARIANTS)} mask variants")
+    if planes.shape != (kdim // PLANE, 3, n):
+        raise ValueError(f"planes shape {planes.shape} != {(kdim // PLANE, 3, n)}")
+    if scales.shape != (kdim // group_size, n):
+        raise ValueError(f"scales shape {scales.shape} != {(kdim // group_size, n)}")
+    bk, bn = min(bk, kdim), min(bn, n)
+    if kdim % bk or n % bn:
+        raise ValueError(f"shape ({m},{kdim},{n}) not divisible by tile (bk={bk},bn={bn})")
+    if bk % PLANE or bk % group_size:
+        raise ValueError(f"bk={bk} must be a multiple of 32 and group_size={group_size}")
+
+    nk = kdim // bk
+    grid = (n // bn, nk)
+    kernel = functools.partial(
+        _qsq_matvec_masked_kernel, bk=bk, group_size=group_size, nk=nk
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((len(MASK_VARIANTS), m, bk), lambda j, k: (0, 0, k)),
+            pl.BlockSpec((bk // PLANE, 3, bn), lambda j, k: (k, 0, j)),
+            pl.BlockSpec((bk // group_size, bn), lambda j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda j, k: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((m, bn), jnp.float32)],
+        compiler_params=_COMPILER_PARAMS(dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(xs, planes, scales)
 
 
 @functools.partial(

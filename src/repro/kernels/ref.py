@@ -12,6 +12,12 @@ import jax.numpy as jnp
 from repro.core import codec
 from repro.core.qsq import codes_to_levels, levels_to_codes
 
+# The three plane masks a quality tier can put on a row: keep all 3 code
+# planes, drop the LSB plane, drop the two LSB planes (drop = 0, 1, 2).
+# Fixed and ordered, so masked kernels unroll over them statically — a
+# per-row tier change is a data change, never a retrace.
+MASK_VARIANTS = (0b111, 0b110, 0b100)
+
 
 def qsq_dequant_ref(planes: jax.Array, scales: jax.Array, group_size: int) -> jax.Array:
     """Bit-plane packed codes + per-group scales -> dense f32 weights.
@@ -32,6 +38,43 @@ def qsq_matmul_ref(
     """x (M,K) @ dequant(planes, scales) (K,N) -> (M,N) f32."""
     w = qsq_dequant_ref(planes, scales, group_size).astype(x.dtype)
     return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def qsq_dequant_masked_ref(
+    planes: jax.Array, scales: jax.Array, group_size: int, code_mask: int
+) -> jax.Array:
+    """Dequant with ``code_mask`` ANDed onto every 3-bit code first.
+
+    ``decode(codes & mask)`` on full-quality planes is bit-identical to a
+    plain decode of planes whose dropped LSB words were zeroed
+    (``PackedWeight.truncate``): zeroing a plane word and masking the
+    corresponding code bit are the same operation on the code stream.
+    """
+    codes = codec.unpack_bitplane(planes)  # (K, N) uint8
+    levels = codes_to_levels(codes & code_mask).astype(jnp.float32)
+    k = levels.shape[0]
+    lev_g = levels.reshape(k // group_size, group_size, *levels.shape[1:])
+    w = lev_g * scales[:, None]
+    return w.reshape(levels.shape)
+
+
+def qsq_matmul_masked_ref(
+    xs: jax.Array, planes: jax.Array, scales: jax.Array, group_size: int
+) -> jax.Array:
+    """Per-row plane-masked matmul: xs (3, M, K) -> (M, N) f32.
+
+    ``xs[i]`` holds the rows of x whose plane mask is ``MASK_VARIANTS[i]``
+    (all other rows zeroed).  Each variant contracts against the weight
+    decoded under that mask; a row's result is exactly its variant's term
+    because the other variants contribute exact zeros — so row m equals
+    ``x[m] @ dequant(truncate(drop_m))`` bit for bit.
+    """
+    out = None
+    for i, mask in enumerate(MASK_VARIANTS):
+        w = qsq_dequant_masked_ref(planes, scales, group_size, mask)
+        d = jnp.dot(xs[i], w.astype(xs.dtype), preferred_element_type=jnp.float32)
+        out = d if out is None else out + d
+    return out
 
 
 def qsq_quantize_ref(

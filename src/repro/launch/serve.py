@@ -12,7 +12,11 @@ static generate(): synthetic prompts arrive staggered (every
 ``--arrival-every`` engine steps), are submitted mid-decode, and tokens
 print as each request finishes — along with per-request waiting time and
 latency in steps, the numbers a static batch cannot hit because a new
-prompt would wait for the whole batch to drain.
+prompt would wait for the whole batch to drain.  With ``--wire`` add
+``--mixed-tiers`` to cycle each arrival through the artifact's quality
+tiers (hi/mid/lo/...): every request is prefilled and decoded at its OWN
+tier inside the one shared dispatch — per-request quality, no retrace,
+no param-tree swap.
 
 On a real pod the same entry point builds the production mesh and shards
 params/caches with launch/mesh.py rules (see launch/dryrun.py for the
@@ -59,6 +63,10 @@ def main():
                          "families, greedy)")
     ap.add_argument("--arrival-every", type=int, default=2,
                     help="with --stream: engine steps between arrivals")
+    ap.add_argument("--mixed-tiers", action="store_true",
+                    help="with --wire --stream: cycle arrivals through the "
+                         "artifact's quality tiers — each request served "
+                         "at its own tier in the one shared dispatch")
     args = ap.parse_args()
 
     if args.slots < 1:
@@ -75,6 +83,11 @@ def main():
         ap.error("--arrival-every must be >= 1")
     if not args.wire and (args.quality != "hi" or args.dense):
         ap.error("--quality/--dense only apply with --wire")
+    if args.mixed_tiers and not (args.wire and args.stream):
+        ap.error("--mixed-tiers needs --wire --stream (per-request quality "
+                 "rides the continuous scheduler on the packed artifact)")
+    if args.mixed_tiers and args.dense:
+        ap.error("--mixed-tiers needs packed serving (drop --dense)")
 
     cfg = get_arch(args.arch, smoke=args.smoke)
     model = Model(cfg)
@@ -99,7 +112,17 @@ def main():
     prompts = [rng.randint(0, cfg.vocab, size=rng.randint(2, 6)).tolist()
                for _ in range(args.prompts)]
     if args.stream:
-        _serve_stream(engine, prompts, args.max_new, args.arrival_every)
+        tiers = None
+        if args.mixed_tiers:
+            if not engine.per_request_quality:
+                ap.error("this artifact/config cannot serve per-request "
+                         "tiers (needs a greedy attention family AND an "
+                         "artifact with a sensitivity ranking — rebuild a "
+                         "bare wire with repro.api.compress)")
+            names = engine.tier_names
+            tiers = [names[i % len(names)] for i in range(len(prompts))]
+        _serve_stream(engine, prompts, args.max_new, args.arrival_every,
+                      tiers=tiers)
         return
     t0 = time.time()
     outs = engine.generate(prompts, max_new=args.max_new)
@@ -110,27 +133,32 @@ def main():
     print(f"{n} tokens in {dt:.2f}s ({n / dt:.1f} tok/s)")
 
 
-def _serve_stream(engine, prompts, max_new: int, arrival_every: int) -> None:
+def _serve_stream(engine, prompts, max_new: int, arrival_every: int,
+                  tiers=None) -> None:
     """Feed staggered arrivals through submit()/step()/poll(): prompt i
     arrives at step i * arrival_every and joins the running decode as soon
-    as a slot frees — no batch flush.  Prints each request as it finishes
-    with its waiting time (queued steps) and latency (arrival -> last
-    token, in steps)."""
+    as a slot frees — no batch flush.  ``tiers`` (one name per prompt)
+    submits each request at its own quality tier into the shared dispatch.
+    Prints each request as it finishes with its tier, waiting time (queued
+    steps) and latency (arrival -> last token, in steps)."""
     t0 = time.time()
     pending = list(enumerate(prompts))
     rid_to_prompt = {}
     while pending or engine.has_work:
         step_idx = engine.step_count
         while pending and pending[0][0] * arrival_every <= step_idx:
-            _, p = pending.pop(0)
-            rid = engine.submit(p, max_new=max_new)
+            i, p = pending.pop(0)
+            tier = tiers[i] if tiers is not None else None
+            rid = engine.submit(p, max_new=max_new, quality=tier)
             rid_to_prompt[rid] = p
-            print(f"  step {step_idx:3d}  submit r{rid} {p}")
+            tag = f" @{tier}" if tier is not None else ""
+            print(f"  step {step_idx:3d}  submit r{rid}{tag} {p}")
         engine.step()
         completed = engine.completed_requests
         for rid, toks in engine.poll().items():
             req = completed[rid]
-            print(f"  step {req.finished:3d}  done   r{rid} "
+            tag = f" @{req.quality}" if req.quality is not None else ""
+            print(f"  step {req.finished:3d}  done   r{rid}{tag} "
                   f"{rid_to_prompt[rid]} -> {toks} "
                   f"(waited {req.waiting}, latency {req.latency} steps)")
     dt = time.time() - t0

@@ -85,13 +85,15 @@ class Model:
         f = self.cfg.family
         tokens = batch["tokens"]
         active = batch.get("active")  # (B,) live-slot mask: continuous batching
+        tiers = batch.get("tiers")    # (B,) per-slot quality-tier indices
         if f in ("dense", "moe", "vlm"):
             return transformer.lm_decode(params, self.cfg, cache, tokens,
-                                         active=active)
-        if active is not None:
+                                         active=active, tiers=tiers)
+        if active is not None or tiers is not None:
             raise ValueError(
-                f"per-slot active masks (continuous batching) are only "
-                f"supported by attention families, not {f!r}"
+                f"per-slot active masks / quality tiers (continuous "
+                f"batching) are only supported by attention families, "
+                f"not {f!r}"
             )
         if f == "ssm":
             return mamba_lm.mamba_decode(params, self.cfg, cache, tokens)
@@ -101,21 +103,24 @@ class Model:
             return encdec.encdec_decode(params, self.cfg, cache, tokens)
         raise ValueError(f)
 
-    def prefill(self, params, cache, tokens, lengths=None):
+    def prefill(self, params, cache, tokens, lengths=None, tiers=None):
         """Prime a decode cache for whole (B, S) left-padded prompts.
 
         Attention families run ONE full-sequence causal forward (packed
         weights stream once per prompt); recurrent/cross families scan per
         token.  ``lengths`` (B,) is the real token count per slot — left
         padding beyond it is masked out of the KV cache.  Defaults to
-        "no padding" (every slot length S).  Returns (cache, last_logits).
+        "no padding" (every slot length S).  ``tiers`` (B,) primes each
+        slot at its own quality tier (per-row plane masks on packed
+        weights; attention families only).  Returns (cache, last_logits).
         ``params`` may be any WeightStore mix — dense arrays, QSQ levels,
         or packed bit-planes."""
         from repro.train.step import make_cache_prefill_step
 
         if lengths is None:
             lengths = jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)
-        return make_cache_prefill_step(self)(params, cache, tokens, lengths)
+        return make_cache_prefill_step(self)(params, cache, tokens, lengths,
+                                             tiers)
 
     def cache_insert_slot(self, live, one, slot):
         """Write a single-slot prefilled cache into lane ``slot`` of a live
@@ -133,13 +138,17 @@ class Model:
             )
         return transformer.lm_cache_insert_slot(live, one, slot)
 
-    def serve_params(self, wire_tree, packed: bool = True, drop_map=None):
+    def serve_params(self, wire_tree, packed: bool = True, drop_map=None,
+                     tier_drop_map=None):
         """Wire artifact -> serving param tree (packed matmul weights when
         ``packed``, full dense decode otherwise).  Returns (params, n_packed).
 
         ``drop_map`` (path -> LSB planes to drop) realizes a quality tier on
         the already-quantized codes — the EdgeArtifact dial — without ever
-        re-quantizing."""
+        re-quantizing.  ``tier_drop_map`` (path -> per-tier drop vector)
+        instead keeps full-quality planes and stamps the vector on each
+        packed leaf for PER-REQUEST tier masking at matmul time (packed
+        serving only)."""
         from repro.models.base import abstract_params
         from repro.quant.store import (
             dense_tree, serve_tree, tree_from_wire, truncate_tree,
@@ -148,7 +157,13 @@ class Model:
         store = tree_from_wire(wire_tree)
         descs = self.param_descs()
         if packed:
-            return serve_tree(store, descs, drop_map=drop_map)
+            return serve_tree(store, descs, drop_map=drop_map,
+                              tier_drop_map=tier_drop_map)
+        if tier_drop_map:
+            raise ValueError(
+                "per-request tier vectors need packed serving (the masks "
+                "apply inside the fused kernel's unpack)"
+            )
         if drop_map:
             store = truncate_tree(store, drop_map)
         return dense_tree(store, like=abstract_params(descs)), 0

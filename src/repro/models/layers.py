@@ -37,13 +37,24 @@ def W(p):
     return p
 
 
-def matvec(p, x: jax.Array) -> jax.Array:
+def matvec(p, x: jax.Array, tiers: jax.Array | None = None) -> jax.Array:
     """x (..., K) contracted with weight p (K, *rest) -> (..., *rest).
 
     WeightStore leaves dispatch their own matmul (fused dequant-matmul for
     PackedWeight); dense arrays take the plain tensordot.  Output dtype
-    follows x."""
+    follows x.
+
+    ``tiers`` (B,) int32 — per-slot quality-tier indices (continuous
+    batching) — engages per-row plane masking on packed leaves that carry a
+    ``tier_drops`` vector: each batch row contracts against the weight at
+    ITS tier, bit-identical to serving that row from plane-truncated
+    params.  Leaves without a tier vector (never truncated by any tier, or
+    dense) ignore ``tiers`` entirely."""
     if is_store(p):
+        if tiers is not None:
+            masks = getattr(p, "tier_plane_masks", lambda: None)()
+            if masks is not None:
+                return p.matmul(x, plane_mask=masks[tiers])
         return p.matmul(x)
     return jnp.tensordot(x, p.astype(x.dtype), axes=1)
 
@@ -104,10 +115,11 @@ def attn_descs(d: int, n_heads: int, n_kv: int, head_dim: int,
     return descs
 
 
-def _project_qkv(p: dict, x: jax.Array, positions, theta: float):
-    q = matvec(p["wq"], x)  # (b, s, h, hd)
-    k = matvec(p["wk"], x)
-    v = matvec(p["wv"], x)
+def _project_qkv(p: dict, x: jax.Array, positions, theta: float,
+                 tiers: jax.Array | None = None):
+    q = matvec(p["wq"], x, tiers)  # (b, s, h, hd)
+    k = matvec(p["wk"], x, tiers)
+    v = matvec(p["wv"], x, tiers)
     if "q_norm" in p:
         q = rmsnorm(q, p["q_norm"])
         k = rmsnorm(k, p["k_norm"])
@@ -243,6 +255,7 @@ def decode_attention(
     window: int | None = None,
     use_rope: bool = True,
     active: jax.Array | None = None,
+    tiers: jax.Array | None = None,
 ) -> tuple[jax.Array, KVCache]:
     """One-token decode: x (B, 1, d); cache holds T past positions.
 
@@ -251,11 +264,13 @@ def decode_attention(
     inactive (FREE / DONE) slot still flows through the fixed-width
     program — same shapes, no recompile — but its ``pos`` does not
     advance, so it is a dead lane whose writes land on a yet-unused index
-    of its own (dead) lane and whose output is discarded by the caller."""
+    of its own (dead) lane and whose output is discarded by the caller.
+    ``tiers`` (B,) selects each slot's quality tier inside the packed
+    projections (per-row plane masks — see :func:`matvec`)."""
     b = x.shape[0]
     t = cache.k.shape[1]
     positions = (cache.pos - cache.pad)[:, None] if use_rope else None
-    q, k_new, v_new = _project_qkv(p, x, positions, theta)
+    q, k_new, v_new = _project_qkv(p, x, positions, theta, tiers)
 
     slot = cache.pos % t if window is not None else jnp.minimum(cache.pos, t - 1)
     bidx = jnp.arange(b)
@@ -288,6 +303,7 @@ def prefill_attention(
     pad: jax.Array,  # (B,) per-slot left-pad count
     theta: float = 10000.0,
     window: int | None = None,
+    tiers: jax.Array | None = None,
 ) -> tuple[jax.Array, KVCache]:
     """Full-sequence cache prefill: x (B, S, d) over the whole left-padded
     prompt in ONE dispatch (vs one decode_attention call per token).
@@ -296,11 +312,12 @@ def prefill_attention(
     k/v land in cache slots [0, S) (ring-wrapped for SWA).  Pad positions
     are masked as keys everywhere, so they cannot pollute shorter prompts;
     their own (garbage) outputs only feed their own masked positions.
-    Returns (y (B, S, d), primed cache with per-slot pos = S, pad
-    recorded)."""
+    ``tiers`` (B,) primes each slot's cache at its own quality tier (the
+    masks broadcast over the sequence dim).  Returns (y (B, S, d), primed
+    cache with per-slot pos = S, pad recorded)."""
     b, s, _ = x.shape
     t = cache.k.shape[1]
-    q, k_new, v_new = _project_qkv(p, x, positions, theta)
+    q, k_new, v_new = _project_qkv(p, x, positions, theta, tiers)
 
     kj = jnp.arange(s)[None, None, :]
     mask = causal_mask(s, s, window=window)[None] & (kj >= pad[:, None, None])
@@ -353,11 +370,11 @@ def mlp_descs(d: int, ff: int, dtype=jnp.float32) -> dict:
     }
 
 
-def mlp(p: dict, x: jax.Array) -> jax.Array:
-    g = jax.nn.silu(matvec(p["wg"], x))
-    u = matvec(p["wu"], x)
+def mlp(p: dict, x: jax.Array, tiers: jax.Array | None = None) -> jax.Array:
+    g = jax.nn.silu(matvec(p["wg"], x, tiers))
+    u = matvec(p["wu"], x, tiers)
     g = constrain(g, ("batch", "seq_act", "mlp"))
-    return constrain(matvec(p["wd"], g * u), ("batch", "seq_act", None))
+    return constrain(matvec(p["wd"], g * u, tiers), ("batch", "seq_act", None))
 
 
 # --------------------------------------------------------------------------
@@ -378,6 +395,7 @@ def moe(
     *,
     top_k: int,
     capacity_factor: float = 1.25,
+    active: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Top-k token-choice MoE with SHARD-LOCAL capacity routing.
 
@@ -392,6 +410,14 @@ def moe(
     true expert compute: per shard, E buffers of C = ceil(T_local * k * cf
     / E) tokens, batched-matmul'd through their expert FFN.  Overflowing
     tokens are dropped (capacity routing); dropped slots contribute zero.
+
+    ``active`` (B,) int32/bool marks live batch lanes (continuous
+    batching).  A dead (FREE/DONE) slot's frozen token is routed to a
+    sentinel expert id ``e``: it sorts AFTER every real assignment, so it
+    neither claims a capacity slot nor displaces a live token's position —
+    dead lanes drop out of expert competition entirely, giving MoE decode
+    the dense families' slot-history invariance.  Live batch mates still
+    share capacity, exactly as a static batch would.
     """
     from repro.models.base import data_shard_count
 
@@ -425,6 +451,16 @@ def moe(
     flat_w = topw.reshape(shards, tl * top_k)
     tok_of = jnp.repeat(jnp.arange(tl), top_k)  # (TL*k,) same for each shard
 
+    if active is not None:
+        # (B,) lane mask -> per-assignment mask in the same (shards, TL*k)
+        # layout the routing tensors use
+        act = jnp.broadcast_to(
+            active.astype(bool)[:, None], (b, s)
+        ).reshape(shards, tl)
+        act_a = jnp.take(act, tok_of, axis=1)  # (S, TL*k)
+        flat_e = jnp.where(act_a, flat_e, e)  # sentinel: out of competition
+        flat_w = flat_w * act_a.astype(flat_w.dtype)
+
     # position of each assignment within its (shard-local) expert buffer,
     # via a per-shard stable sort instead of a (tokens, E) cumsum: the sort
     # runs along the UNSHARDED axis (per dp shard), so no collective, and
@@ -435,9 +471,10 @@ def moe(
     starts = jax.vmap(
         lambda se: jnp.searchsorted(se, jnp.arange(e), side="left")
     )(sorted_e)  # (S, E) — first sorted index of each expert
-    pos = rank - jnp.take_along_axis(starts, flat_e, axis=1)
-    keep = pos < cap
-    pos_c = jnp.where(keep, pos, cap)  # dropped -> trash slot
+    flat_e_c = jnp.minimum(flat_e, e - 1)  # sentinel clamped for gathers
+    pos = rank - jnp.take_along_axis(starts, flat_e_c, axis=1)
+    keep = (pos < cap) & (flat_e < e)
+    pos_c = jnp.where(keep, pos, cap)  # dropped/dead -> trash slot
 
     xg = xt[:, tok_of, :]  # (S, TL*k, d)
     # Two-stage dispatch: a vmapped (per-shard, batched) scatter into a
@@ -451,7 +488,7 @@ def moe(
     buf = jnp.zeros((shards, e, cap + 1, d), xt.dtype)
     buf = constrain(buf, ("batch", None, None, None))
     buf = jax.vmap(lambda b0, ei, pi, xi: b0.at[ei, pi].add(xi))(
-        buf, flat_e, pos_c, xg
+        buf, flat_e_c, pos_c, xg
     )
     buf = constrain(buf[:, :, :cap], ("batch", "experts", None, None))
 
@@ -466,7 +503,7 @@ def moe(
     # the (vmapped, per-shard) index-gather is shard-local.
     yb = constrain(yb, ("batch", None, None, None))
     ya = jax.vmap(lambda yi, ei, pi: yi[ei, pi])(
-        yb, flat_e, jnp.minimum(pos_c, cap - 1)
+        yb, flat_e_c, jnp.minimum(pos_c, cap - 1)
     )  # (S, TL*k, d)
     ya = ya * (flat_w * keep.astype(flat_w.dtype))[..., None].astype(ya.dtype)
     y = jnp.zeros((shards, tl, d), xt.dtype)
@@ -490,8 +527,8 @@ def embed(p: dict, tokens: jax.Array, dtype) -> jax.Array:
     return constrain(x, ("batch", "seq_act", None))
 
 
-def lm_head(p: dict, x: jax.Array) -> jax.Array:
-    logits = matvec(p["head"], x).astype(jnp.float32)
+def lm_head(p: dict, x: jax.Array, tiers: jax.Array | None = None) -> jax.Array:
+    logits = matvec(p["head"], x, tiers).astype(jnp.float32)
     return constrain(logits, ("batch", "seq_act", "vocab"))
 
 

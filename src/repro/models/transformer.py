@@ -163,6 +163,7 @@ def lm_decode(
     cache: LMCache,
     tokens: jax.Array,  # (B, 1)
     active: jax.Array | None = None,  # (B,) live-slot mask (continuous batching)
+    tiers: jax.Array | None = None,  # (B,) per-slot quality-tier indices
 ) -> tuple[jax.Array, LMCache]:
     x = L.embed(params["embed"], tokens, cfg.dtype)
 
@@ -171,14 +172,16 @@ def lm_decode(
         h, c2 = L.decode_attention(
             bp["attn"], L.rmsnorm(x, bp["ln1"]), c,
             theta=cfg.rope_theta, window=cfg.window, active=active,
+            tiers=tiers,
         )
         x = x + h
         y = L.rmsnorm(x, bp["ln2"])
         if cfg.moe is not None:
             f, _ = L.moe(bp["moe"], y, top_k=cfg.moe.top_k,
-                         capacity_factor=cfg.moe.capacity_factor)
+                         capacity_factor=cfg.moe.capacity_factor,
+                         active=active)
         else:
-            f = L.mlp(bp["mlp"], y)
+            f = L.mlp(bp["mlp"], y, tiers=tiers)
         return x + f, c2
 
     if not cfg.cross_every:
@@ -209,7 +212,7 @@ def lm_decode(
         new_cache = LMCache(kv=new_kv, cross_kv=cache.cross_kv)
 
     x = L.rmsnorm(x, params["final_norm"])
-    return L.lm_head(params["embed"], x), new_cache
+    return L.lm_head(params["embed"], x, tiers=tiers), new_cache
 
 
 def lm_prefill(
@@ -218,6 +221,7 @@ def lm_prefill(
     cache: LMCache,
     tokens: jax.Array,   # (B, S) left-padded prompts
     lengths: jax.Array,  # (B,) real token count per slot
+    tiers: jax.Array | None = None,  # (B,) per-slot quality-tier indices
 ) -> tuple[LMCache, jax.Array]:
     """One-dispatch cache prefill: the whole left-padded prompt runs through
     a single causal-masked forward, so packed weights stream ONCE per
@@ -241,7 +245,7 @@ def lm_prefill(
         h, c2 = L.prefill_attention(
             bp["attn"], L.rmsnorm(x, bp["ln1"]), c,
             positions=positions, pad=pad,
-            theta=cfg.rope_theta, window=cfg.window,
+            theta=cfg.rope_theta, window=cfg.window, tiers=tiers,
         )
         x = constrain(x + h, ("batch", "seq_act", None))
         y = L.rmsnorm(x, bp["ln2"])
@@ -249,12 +253,12 @@ def lm_prefill(
             f, _ = L.moe(bp["moe"], y, top_k=cfg.moe.top_k,
                          capacity_factor=cfg.moe.capacity_factor)
         else:
-            f = L.mlp(bp["mlp"], y)
+            f = L.mlp(bp["mlp"], y, tiers=tiers)
         return x + f, c2
 
     x, new_kv = xscan(body, x, (params["blocks"], cache.kv))
     x = L.rmsnorm(x[:, -1:], params["final_norm"])  # only the last position
-    logits = L.lm_head(params["embed"], x)          # feeds the first sample
+    logits = L.lm_head(params["embed"], x, tiers=tiers)  # feeds the first sample
     return LMCache(kv=new_kv), logits[:, 0]
 
 

@@ -25,6 +25,7 @@ from repro.quant.store import (
     dense_tree,
     is_store,
     max_level_delta,
+    plane_mask_for_drop,
     quantize_tree,
     serve_tree,
     set_packed_matmul_kernel,
@@ -38,7 +39,7 @@ __all__ += [
     "WeightStore", "DenseWeight", "QSQWeight", "PackedWeight", "is_store",
     "quantize_tree", "dense_tree", "serve_tree", "tree_bits_report",
     "tree_to_wire", "tree_from_wire", "set_packed_matmul_kernel",
-    "truncate_tree", "max_level_delta",
+    "truncate_tree", "max_level_delta", "plane_mask_for_drop",
 ]
 
 from repro.quant.artifact import (

@@ -241,13 +241,40 @@ class EdgeArtifact:
         n_aff = min(len(paths), max(1, math.ceil(tier.drop_frac * len(paths))))
         return {p: tier.drop_planes for p in paths[len(paths) - n_aff:]}
 
+    def tier_drop_vectors(self) -> dict[str, tuple[int, ...]]:
+        """Path -> per-tier plane-drop vector (entry t = planes tier index
+        t drops from that weight), over every path any tier truncates.
+
+        This is what per-request quality serves from: one full-quality
+        packed tree where each affected leaf knows how many LSB planes
+        each tier masks off — the tier dial becomes a per-row plane mask
+        inside the kernel instead of a param-tree swap."""
+        n = len(self.tiers.tiers)
+        out: dict[str, list[int]] = {}
+        for i, tier in enumerate(self.tiers.tiers):
+            for p, d in self.drop_map(tier.name).items():
+                out.setdefault(p, [0] * n)[i] = int(d)
+        return {p: tuple(v) for p, v in out.items()}
+
     # -- realization ------------------------------------------------------
     def tree(self):
         """Decode the wire to a WeightStore tree (QSQWeight leaves)."""
         return tree_from_wire(self.wire)
 
-    def serve_params(self, quality: str = "hi", packed: bool = True):
-        """(params, n_packed) at a tier — matmul weights stay bit-planes."""
+    def serve_params(self, quality: str = "hi", packed: bool = True,
+                     per_request: bool = False):
+        """(params, n_packed) at a tier — matmul weights stay bit-planes.
+
+        With ``per_request`` the planes stay FULL quality and every
+        tier-affected leaf carries its :meth:`tier_drop_vectors` entry, so
+        one tree serves any tier per matmul row; ``quality`` then only
+        names the default tier (validated here)."""
+        if per_request:
+            self.tiers.get(quality)  # validate the default tier name
+            return self.model().serve_params(
+                self.wire, packed=True,
+                tier_drop_map=self.tier_drop_vectors(),
+            )
         return self.model().serve_params(
             self.wire, packed=packed, drop_map=self.drop_map(quality)
         )
@@ -257,7 +284,24 @@ class EdgeArtifact:
         store = truncate_tree(self.tree(), self.drop_map(quality))
         return dense_tree(store, like=like)
 
-    def engine(self, quality: str = "hi", serve_cfg=None, **serve_kw):
+    def _per_request_capable(self, cfg) -> bool:
+        """True when an engine under ``cfg`` can serve per-request tiers:
+        packed continuous greedy serving on an attention family, with a
+        sensitivity ranking to resolve the tier drop maps against (or a
+        tier spec that never drops — then every tier is the full wire)."""
+        from repro.train.step import supports_fused_prefill
+
+        if not (cfg.packed and cfg.continuous and cfg.temperature == 0):
+            return False
+        if self.arch_config is None or not supports_fused_prefill(self.model()):
+            return False
+        drops_any = any(
+            t.drop_planes > 0 and t.drop_frac > 0 for t in self.tiers.tiers
+        )
+        return bool(self.rank) or not drops_any
+
+    def engine(self, quality: str = "hi", serve_cfg=None,
+               per_request: bool | None = None, **serve_kw):
         """Build a ServeEngine at a named tier.
 
         ``serve_kw`` forwards to ``ServeConfig`` (batch_slots, max_len,
@@ -265,7 +309,18 @@ class EdgeArtifact:
         config (mutually exclusive with ``serve_kw``).  The engine keeps a
         handle to this artifact, so ``engine.set_quality(q)`` re-dials the
         tier in place without reloading or re-quantizing.
-        """
+
+        ``per_request`` controls PER-REQUEST quality.  Default (None):
+        enabled whenever the engine can serve it (packed continuous greedy
+        attention-family serving with a sensitivity ranking) — the packed
+        tree then stays at full quality with per-tier drop vectors on each
+        leaf, ``quality`` is just the default tier, and
+        ``submit(..., quality=...)`` admits each request at its own tier
+        into the one mixed-tier decode dispatch.  ``False`` forces the
+        single-tier layout (physically plane-truncated params — what an
+        edge receiver of the truncated wire would hold, and what
+        ``nbits()`` savings are measured on).  ``True`` raises if the
+        config cannot serve per-request tiers."""
         from repro.serve.engine import ServeConfig, ServeEngine
 
         if serve_cfg is not None and serve_kw:
@@ -274,11 +329,22 @@ class EdgeArtifact:
                 f"(got serve_cfg and {sorted(serve_kw)})"
             )
         cfg = serve_cfg if serve_cfg is not None else ServeConfig(**serve_kw)
-        params, n_packed = self.serve_params(quality, packed=cfg.packed)
+        if per_request is None:
+            per_request = self._per_request_capable(cfg)
+        elif per_request and not self._per_request_capable(cfg):
+            raise ValueError(
+                "per-request quality needs packed continuous greedy "
+                "serving of an attention family, from an artifact with a "
+                "sensitivity ranking (repro.api.compress)"
+            )
+        params, n_packed = self.serve_params(quality, packed=cfg.packed,
+                                             per_request=per_request)
         eng = ServeEngine(self.model(), params, cfg)
         eng.n_packed_leaves = n_packed
         eng.artifact = self
         eng.quality = quality
+        if per_request:
+            eng.tier_names = self.quality_names()
         return eng
 
     # -- persistence ------------------------------------------------------

@@ -101,6 +101,15 @@ def _trunc_code_mask(drop: int) -> int:
     return (~((1 << drop) - 1)) & 0x7
 
 
+def plane_mask_for_drop(drop: int) -> int:
+    """Public alias of the tier code mask: ``drop`` LSB planes -> 3-bit mask.
+
+    These are the per-row mask values :meth:`PackedWeight.matmul` accepts
+    (0b111 / 0b110 / 0b100 for drop 0 / 1 / 2 — ``kernels.ref.MASK_VARIANTS``).
+    """
+    return _trunc_code_mask(drop)
+
+
 def max_level_delta(drop: int) -> int:
     """Worst-case |level change| from dropping ``drop`` LSB code planes.
 
@@ -284,6 +293,15 @@ class PackedWeight(WeightStore):
     words in place of removing them — the physical 3-slot layout is what the
     fused kernel consumes — and ``nbits()`` accounts only the kept planes,
     which is what an edge receiver of the truncated wire would store.
+
+    ``tier_drops`` (optional, static aux) is the leaf's per-quality-tier
+    plane-drop vector — entry t = LSB planes a request at tier index t
+    drops from THIS weight.  It powers per-request quality: the planes stay
+    at full quality and :meth:`matmul` takes a per-row ``plane_mask``
+    operand instead (``tier_plane_masks()[tiers]``), so one mixed-tier
+    batch serves every row at its own tier with no param-tree swap and no
+    retrace.  Being aux (not data), it is stack-invariant under layer
+    scans, exactly like the grouping metadata.
     """
 
     planes: jax.Array
@@ -292,18 +310,21 @@ class PackedWeight(WeightStore):
     phi: int
     rest_ndim: int = 0
     n_planes: int = 3
+    tier_drops: tuple[int, ...] | None = None
     kind = "packed"
 
     def tree_flatten(self):
         return (self.planes, self.scales), (
             self.group_size, self.phi, self.rest_ndim, self.n_planes,
+            self.tier_drops,
         )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         planes, scales = children
         return cls(planes=planes, scales=scales, group_size=aux[0], phi=aux[1],
-                   rest_ndim=aux[2], n_planes=aux[3] if len(aux) > 3 else 3)
+                   rest_ndim=aux[2], n_planes=aux[3] if len(aux) > 3 else 3,
+                   tier_drops=aux[4] if len(aux) > 4 else None)
 
     def _stack(self) -> int:
         return self.planes.ndim - 2 - self.rest_ndim
@@ -348,7 +369,26 @@ class PackedWeight(WeightStore):
     def as_dense(self, dtype=jnp.float32):
         return self.unpack().as_dense(dtype)
 
-    def matmul(self, x):
+    def tier_plane_masks(self) -> jax.Array | None:
+        """Per-tier 3-bit code masks from ``tier_drops`` (None when the leaf
+        has no tier vector or no tier ever drops a plane from it).  Index
+        with a per-slot tier array to get the per-row ``plane_mask``
+        operand :meth:`matmul` takes."""
+        if not self.tier_drops or not any(self.tier_drops):
+            return None
+        return jnp.asarray(
+            [_trunc_code_mask(d) for d in self.tier_drops], jnp.int32
+        )
+
+    def matmul(self, x, plane_mask: jax.Array | None = None):
+        """Contract x (..., K) with this weight; optionally quality-tiered
+        PER ROW.
+
+        ``plane_mask`` holds one 3-bit code mask per leading-batch row of x
+        (shape broadcastable over x's remaining lead dims, e.g. (B,) for a
+        (B, S, K) x): row b's output is bit-identical to
+        ``self.truncate(drop_b).matmul(x[b])`` — the tier dial as a masked
+        term of the kernel's unpack, not a param swap."""
         if self._stack():
             raise ValueError(
                 "matmul on a stacked PackedWeight — slice the stack axis "
@@ -363,6 +403,15 @@ class PackedWeight(WeightStore):
         g = k // ng
         lead = x.shape[:-1]
         m = int(np.prod(lead)) if lead else 1
+        if plane_mask is not None:
+            pm = jnp.asarray(plane_mask, jnp.int32)
+            if pm.ndim > len(lead) or pm.shape != lead[: pm.ndim]:
+                raise ValueError(
+                    f"plane_mask shape {pm.shape} is not a leading prefix "
+                    f"of x lead dims {lead}"
+                )
+            pm = pm.reshape(pm.shape + (1,) * (len(lead) - pm.ndim))
+            plane_mask = jnp.broadcast_to(pm, lead if lead else (1,)).reshape(m)
 
         # Shape-aware kernel routing (kernels/dispatch.py): GEMV kernel at
         # decode shapes, tiled GEMM otherwise, zero-padded tiles for ragged
@@ -375,6 +424,7 @@ class PackedWeight(WeightStore):
             self.planes.reshape(k // codec.PLANE_GROUP, 3, n),
             self.scales.reshape(ng, n),
             group_size=g, use_kernel=_PACKED_MATMUL_KERNEL,
+            plane_mask=plane_mask,
         )
         return out.astype(x.dtype).reshape(*lead, *rest)
 
@@ -495,7 +545,7 @@ def packable_leaf(path: str, leaf, desc) -> bool:
     )
 
 
-def serve_tree(tree, descs, dtype=None, drop_map=None):
+def serve_tree(tree, descs, dtype=None, drop_map=None, tier_drop_map=None):
     """Serving layout: pack kernel-eligible QSQ leaves, decode the rest.
 
     This is what a quality-tiered engine holds: matmul weights stay in
@@ -504,10 +554,15 @@ def serve_tree(tree, descs, dtype=None, drop_map=None):
     are decoded once at load.  ``drop_map`` (path -> LSB planes to drop)
     applies a quality-tier truncation to the packed leaves it names —
     realized on the already-quantized codes, never by re-quantizing.
-    Returns (params_tree, n_packed).
+    ``tier_drop_map`` (path -> per-tier drop vector) instead KEEPS the
+    planes at full quality and stamps the vector on the packed leaf as
+    ``tier_drops``, enabling per-request tier masking at matmul time
+    (see :meth:`PackedWeight.matmul`); leaves it does not name serve full
+    quality at every tier.  Returns (params_tree, n_packed).
     """
     n_packed = 0
     drop_map = drop_map or {}
+    tier_drop_map = tier_drop_map or {}
 
     def _leaf(path, leaf, desc):
         nonlocal n_packed
@@ -516,7 +571,12 @@ def serve_tree(tree, descs, dtype=None, drop_map=None):
         p = path_str(path)
         if packable_leaf(p, leaf, desc):
             n_packed += 1
-            return leaf.pack().truncate(drop_map.get(p, 0))
+            pw = leaf.pack().truncate(drop_map.get(p, 0))
+            if p in tier_drop_map:
+                pw = dataclasses.replace(
+                    pw, tier_drops=tuple(int(d) for d in tier_drop_map[p])
+                )
+            return pw
         want = dtype if dtype is not None else getattr(desc, "dtype", jnp.float32)
         if p in drop_map:
             leaf = leaf.truncate(drop_map[p]) if isinstance(leaf, QSQWeight) else leaf

@@ -25,6 +25,16 @@ instead of waiting for the whole batch to drain.  Finished requests are
 evicted in the same step and surface through ``poll()`` /
 ``run_until_drained()``.
 
+Quality is PER-REQUEST on artifact-built packed continuous engines:
+``submit(prompt, max_new, quality="lo")`` admits the request at its own
+tier, and the mixed-tier batch shares the one decode dispatch — each
+packed matmul takes a per-row plane mask derived from the per-slot tier
+indices (``PackedWeight.tier_drops``), so every lane's tokens are
+bit-identical to a single-tier engine serving that prompt alone at that
+tier, and tier changes are mask flips (no retrace, no param-tree swap).
+``set_quality`` then only moves the default tier for quality-less
+submissions.
+
 ``generate()`` is a thin submit-all/drain wrapper over that scheduler for
 greedy attention-family engines, and otherwise falls back to the static
 two-program path (one-dispatch prefill + multi-token decode scan, or the
@@ -98,6 +108,10 @@ class _Session:
         self.zero_slot_cache = init_params(key, model.cache_descs(1, cache_len))
         self.cur = np.zeros((slots, 1), np.int32)
         self.active = np.zeros((slots,), np.int32)
+        # per-slot quality-tier index (per-request quality): set at
+        # admission, a traced operand of the decode dispatch — tier
+        # changes are data changes, never retraces
+        self.tiers = np.zeros((slots,), np.int32)
         self.step_idx = 0
 
 
@@ -109,6 +123,10 @@ class ServeEngine:
         self.n_packed_leaves = 0  # overwritten by the artifact/wire loaders
         self.artifact = None      # set by EdgeArtifact.engine (quality dial)
         self.quality: str | None = None
+        # per-request quality: tier-name order matching the tier_drops
+        # vectors stamped on the packed leaves (set by EdgeArtifact.engine
+        # when the engine serves per-request tiers); None = single-tier
+        self.tier_names: list[str] | None = None
         self.serve_step = jax.jit(make_serve_step(model))
         self._prefill = jax.jit(make_cache_prefill_step(model))
         self._decode_loop = jax.jit(make_decode_loop(model))
@@ -140,19 +158,61 @@ class ServeEngine:
         return art.engine(quality="hi", serve_cfg=cfg)
 
     # -- quality dial ------------------------------------------------------
+    @property
+    def per_request_quality(self) -> bool:
+        """True when this engine serves quality PER REQUEST: packed leaves
+        carry per-tier plane-drop vectors, ``submit(..., quality=...)``
+        admits each request at its own tier inside the one continuous
+        decode dispatch, and :meth:`set_quality` is just the default for
+        quality-less submissions (no drain, no param rebuild)."""
+        return self.tier_names is not None
+
+    def _resolve_quality(self, quality: str | None) -> str | None:
+        """Validate a submit-time tier name (None -> the engine default)."""
+        if quality is None:
+            return self.quality
+        if self.tier_names is None:
+            raise ValueError(
+                "per-request quality needs an engine with per-tier packed "
+                "weights; build it via repro.api.compress(...).engine() "
+                "(this engine serves a single tier)"
+            )
+        if quality not in self.tier_names:
+            raise KeyError(
+                f"unknown quality tier {quality!r}; this engine has "
+                f"{self.tier_names}"
+            )
+        return quality
+
+    def _tier_index(self, quality: str | None) -> int:
+        if self.tier_names is None or quality is None:
+            return 0
+        return self.tier_names.index(quality)
+
     def set_quality(self, quality: str) -> "ServeEngine":
-        """Re-resolve the param tree at another tier of this engine's
-        artifact, in place — plane truncation on the loaded wire, no reload
-        and no re-quantization.  The jitted programs take params as
-        arguments, so the dial costs one retrace, not a rebuild.  A live
-        continuous stream must drain first (its KV entries were computed
-        at the old tier); an idle session is dropped."""
+        """Dial the engine's quality tier.
+
+        Per-request engines (built by ``EdgeArtifact.engine`` with packed
+        continuous serving): the params already carry every tier — this
+        just changes the DEFAULT tier for future quality-less
+        ``submit``/``generate`` calls.  No drain, no reload, no retrace;
+        live requests keep the tier they were admitted at.
+
+        Single-tier engines re-resolve the param tree at the new tier of
+        this engine's artifact, in place — plane truncation on the loaded
+        wire, no reload and no re-quantization.  The jitted programs take
+        params as arguments, so the dial costs one retrace, not a rebuild.
+        A live continuous stream must drain first (its KV entries were
+        computed at the old tier); an idle session is dropped."""
         if self.artifact is None:
             raise ValueError(
                 "this engine was not built from an EdgeArtifact; construct "
                 "it via repro.api.compress(...).engine(quality=...) to dial "
                 "quality"
             )
+        if self.per_request_quality:
+            self.quality = self._resolve_quality(quality)
+            return self
         if self.has_work:
             raise RuntimeError(
                 "cannot re-dial quality while a continuous stream has live "
@@ -192,12 +252,20 @@ class ServeEngine:
             )
         return self._session
 
-    def submit(self, prompt: Sequence[int], max_new: int = 32) -> int:
+    def submit(self, prompt: Sequence[int], max_new: int = 32,
+               quality: str | None = None) -> int:
         """Enqueue one prompt on the engine's continuous stream; returns a
         request id for :meth:`poll`.  The request is admitted into the
         first slot that frees up — immediately on the next :meth:`step`
-        if one is FREE — without flushing the requests already decoding."""
+        if one is FREE — without flushing the requests already decoding.
+
+        ``quality`` names the request's OWN tier (per-request engines): it
+        is prefilled AND decoded at that tier inside the shared fixed-width
+        dispatches, sharing the batch with requests at other tiers.  None
+        takes the engine default (``set_quality``), resolved at submission
+        time."""
         self._require_continuous()
+        quality = self._resolve_quality(quality)
         s = self._ensure_session()
         if len(prompt) > s.prefill_len:
             raise ValueError(
@@ -211,7 +279,8 @@ class ServeEngine:
                 f"exceeds the {s.cache_len}-entry slot cache; raise "
                 f"ServeConfig.max_len"
             )
-        return s.sched.submit(prompt, max_new, arrival=s.step_idx)
+        return s.sched.submit(prompt, max_new, arrival=s.step_idx,
+                              quality=quality)
 
     def step(self) -> None:
         """One scheduler iteration: admit queued requests into FREE slots
@@ -223,13 +292,16 @@ class ServeEngine:
         s = self._ensure_session()
         for slot, req in s.sched.admissible():
             s.sched.activate(slot, req, s.step_idx)
+            s.tiers[slot] = self._tier_index(req.quality)
             toks = np.zeros((1, s.prefill_len), np.int32)
             toks[0, s.prefill_len - len(req.tokens):] = req.tokens
             # one dispatch: prefill + lane insert + on-device argmax; the
-            # host syncs on a single int32, not a (vocab,) logits row
+            # host syncs on a single int32, not a (vocab,) logits row.
+            # The prefill runs at the REQUEST's tier (per-row plane masks)
             s.cache, first = self._admit(
                 self.params, s.zero_slot_cache, s.cache, jnp.asarray(toks),
                 jnp.asarray([len(req.tokens)], jnp.int32), jnp.int32(slot),
+                jnp.asarray(s.tiers[slot:slot + 1]),
             )
             first = int(first)
             s.sched.start_decoding(slot)
@@ -242,7 +314,7 @@ class ServeEngine:
         if live:
             nxt, s.cache = self._cont_step(
                 self.params, s.cache, jnp.asarray(s.cur),
-                jnp.asarray(s.active),
+                jnp.asarray(s.active), jnp.asarray(s.tiers),
             )
             nxt = np.asarray(nxt)  # the step's one host sync
             for slot in live:
@@ -314,7 +386,7 @@ class ServeEngine:
 
     # -- generation ----------------------------------------------------------
     def generate(self, prompts: Sequence[Sequence[int]], max_new: int = 32,
-                 seed: int = 0):
+                 seed: int = 0, qualities=None):
         """Decode a batch of token-id prompts.  Returns lists of ids.
 
         Greedy attention-family engines route through the continuous
@@ -325,6 +397,10 @@ class ServeEngine:
         one-dispatch prefill + one decode scan, sampling from
         ``softmax(logits / temperature)`` with a PRNG derived from
         ``seed`` (same seed + prompts => same tokens).
+
+        ``qualities`` (per-request engines, continuous path only) assigns
+        each prompt its own tier: a name applied to all, or one name per
+        prompt — the whole mixed-tier batch shares the one decode dispatch.
         """
         if len(prompts) == 0:
             return []
@@ -341,12 +417,25 @@ class ServeEngine:
         if max_new < 1:
             # legacy contract on every path: zero-length decode is a no-op
             return [[] for _ in prompts]
+        if isinstance(qualities, str):
+            qualities = [qualities] * b
+        if qualities is not None and len(qualities) != b:
+            raise ValueError(
+                f"{len(qualities)} qualities for {b} prompts; pass one tier "
+                f"name per prompt (or a single name for all)"
+            )
         if (self.cfg.continuous and self.cfg.temperature == 0
                 and self._continuous_capable()):
-            return self._generate_continuous(prompts, max_new)
+            return self._generate_continuous(prompts, max_new, qualities)
+        if qualities is not None:
+            raise ValueError(
+                "per-request qualities need the continuous scheduler path "
+                "(greedy attention family, ServeConfig(continuous=True)); "
+                "use set_quality() to dial this engine as a whole"
+            )
         return self._generate_static(prompts, max_new, seed)
 
-    def _generate_continuous(self, prompts, max_new: int):
+    def _generate_continuous(self, prompts, max_new: int, qualities=None):
         """Submit-all/drain on a throwaway session sized to this batch
         (prefill width = longest prompt, cache = prompt + max_new), so the
         traced shapes match the call exactly like the static path's."""
@@ -357,7 +446,9 @@ class ServeEngine:
             prefill_len=maxp, cache_len=maxp + max_new + 1,
         )
         try:
-            rids = [self.submit(p, max_new=max_new) for p in prompts]
+            rids = [self.submit(p, max_new=max_new,
+                                quality=None if qualities is None else qualities[i])
+                    for i, p in enumerate(prompts)]
             done = self.run_until_drained()
             return [done[r] for r in rids]
         finally:

@@ -36,12 +36,17 @@ class SlotState(enum.Enum):
 
 @dataclasses.dataclass
 class Request:
-    """One prompt's life in the scheduler (all times are step indices)."""
+    """One prompt's life in the scheduler (all times are step indices).
+
+    ``quality`` is the request's OWN tier name (per-request quality dial),
+    resolved by the engine at submission time — None on engines that serve
+    a single tier.  The scheduler treats it as opaque payload."""
 
     rid: int
     tokens: tuple[int, ...]  # prompt token ids
     max_new: int
     arrival: int
+    quality: str | None = None
     admitted: int | None = None
     finished: int | None = None
     out: list[int] = dataclasses.field(default_factory=list)
@@ -80,7 +85,8 @@ class Scheduler:
         self._next_rid = 0
 
     # -- admission ---------------------------------------------------------
-    def submit(self, tokens: Sequence[int], max_new: int, arrival: int) -> int:
+    def submit(self, tokens: Sequence[int], max_new: int, arrival: int,
+               quality: str | None = None) -> int:
         if len(tokens) == 0:
             raise ValueError("every prompt must contain at least one token")
         if max_new < 1:
@@ -88,7 +94,8 @@ class Scheduler:
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(Request(rid=rid, tokens=tuple(tokens),
-                                  max_new=max_new, arrival=arrival))
+                                  max_new=max_new, arrival=arrival,
+                                  quality=quality))
         return rid
 
     def admissible(self) -> Iterator[tuple[int, Request]]:

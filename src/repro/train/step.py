@@ -85,14 +85,19 @@ def make_cache_prefill_step(model: Model) -> Callable:
     if supports_fused_prefill(model):
         from repro.models import transformer
 
-        def prefill_step(params, cache, tokens, lengths):
+        def prefill_step(params, cache, tokens, lengths, tiers=None):
             return transformer.lm_prefill(params, model.cfg, cache, tokens,
-                                          lengths)
+                                          lengths, tiers=tiers)
 
         return prefill_step
 
-    def prefill_step(params, cache, tokens, lengths):
+    def prefill_step(params, cache, tokens, lengths, tiers=None):
         del lengths  # per-token scan: no pad isolation for recurrent state
+        if tiers is not None:
+            raise ValueError(
+                f"per-slot quality tiers need the fused attention prefill; "
+                f"family {model.cfg.family!r} serves one tier per engine"
+            )
 
         def body(cache, tok):  # tok (B, 1)
             logits, cache = model.decode(params, cache, {"tokens": tok})
@@ -108,16 +113,18 @@ def make_cache_prefill_step(model: Model) -> Callable:
 
 def make_admit_step(model: Model) -> Callable:
     """(params, zero_cache (batch-1), live_cache, toks (1, P), lens (1,),
-    slot ()) -> (live_cache, first_token ()).
+    slot (), tier (1,)) -> (live_cache, first_token ()).
 
     One jitted dispatch per continuous-batching admission: single-slot
-    prefill on the zeroed batch-1 cache, lane insert into the live cache,
-    and the request's first greedy token argmaxed ON DEVICE — the host
-    syncs on one int32, never on a (vocab,)-sized logits row."""
+    prefill on the zeroed batch-1 cache — at the request's OWN quality
+    tier (``tier`` indexes each packed weight's tier-drop vector) — lane
+    insert into the live cache, and the request's first greedy token
+    argmaxed ON DEVICE: the host syncs on one int32, never on a
+    (vocab,)-sized logits row."""
     prefill = make_cache_prefill_step(model)
 
-    def admit(params, zero_cache, live_cache, toks, lens, slot):
-        one_cache, logits = prefill(params, zero_cache, toks, lens)
+    def admit(params, zero_cache, live_cache, toks, lens, slot, tier):
+        one_cache, logits = prefill(params, zero_cache, toks, lens, tier)
         cache = model.cache_insert_slot(live_cache, one_cache, slot)
         first = jnp.argmax(logits[0]).astype(jnp.int32)
         return cache, first
@@ -126,7 +133,8 @@ def make_admit_step(model: Model) -> Callable:
 
 
 def make_cont_decode_step(model: Model) -> Callable:
-    """(params, cache, cur (B,1), active (B,) int32) -> (next (B,), cache).
+    """(params, cache, cur (B,1), active (B,) int32, tiers (B,) int32) ->
+    (next (B,), cache).
 
     One greedy decode iteration over ALL slots of a continuous-batching
     engine, at a fixed batch width: ``active`` marks the live (DECODING)
@@ -134,14 +142,16 @@ def make_cont_decode_step(model: Model) -> Callable:
     not shape changes, so admissions and evictions never retrace — but
     their per-slot cache ``pos`` does not advance and their emitted token
     is held at ``cur``, so a FREE/DONE slot is bit-frozen until the
-    scheduler re-admits it via a single-slot prefill insert.  (Dense
-    lanes are fully isolated; MoE dead lanes still route their frozen
-    token through shared expert capacity — the same cross-lane coupling
-    live batch mates have.)"""
+    scheduler re-admits it via a single-slot prefill insert.  ``tiers``
+    dials each slot's quality inside the ONE dispatch: packed weights
+    apply per-row plane masks, so a mixed-tier batch decodes every lane
+    at its own tier with no retrace across tier changes.  (Dense lanes
+    are fully isolated; MoE dead lanes are masked out of expert-capacity
+    competition by ``active``, so only LIVE batch mates couple.)"""
 
-    def cont_step(params, cache, cur, active):
+    def cont_step(params, cache, cur, active, tiers):
         logits, cache = model.decode(
-            params, cache, {"tokens": cur, "active": active}
+            params, cache, {"tokens": cur, "active": active, "tiers": tiers}
         )
         nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
         nxt = jnp.where(active > 0, nxt, cur[:, 0])

@@ -139,15 +139,23 @@ def test_save_load_engine_tokens_identical(artifact, tmp_path):
 
 def test_saved_artifact_lower_tier_fewer_bits(artifact, tmp_path):
     """Acceptance: one saved artifact serves a lower tier with strictly
-    fewer nbits, without re-quantizing."""
+    fewer nbits, without re-quantizing.  per_request=False pins the
+    single-tier layout (physically truncated planes — what an edge
+    receiver of the truncated wire stores); the per-request default keeps
+    full planes so one tree can serve every tier per slot."""
     art, _, _ = artifact
     art2 = api.load(art.save(tmp_path / "m.edge.npz"))
-    hi = art2.engine(quality="hi", batch_slots=2)
-    lo = art2.engine(quality="lo", batch_slots=2)
+    hi = art2.engine(quality="hi", batch_slots=2, per_request=False)
+    lo = art2.engine(quality="lo", batch_slots=2, per_request=False)
     assert (tree_bits_report(lo.params)["bits"]
             < tree_bits_report(hi.params)["bits"])
     assert lo.n_packed_leaves == hi.n_packed_leaves > 0
     assert len(lo.generate([[1, 2]], max_new=4)[0]) == 4
+    # the per-request default serves the same lo tokens from full planes
+    pr = art2.engine(quality="lo", batch_slots=2)
+    assert pr.per_request_quality
+    assert (pr.generate([[1, 2]], max_new=4)
+            == lo.generate([[1, 2]], max_new=4))
 
 
 def test_legacy_from_wire_matches_artifact_hi(artifact):

@@ -1,0 +1,229 @@
+"""Per-request quality: mixed-tier continuous batching invariants.
+
+The tentpole contract under test —
+
+* ``submit(prompt, max_new, quality=t)`` serves THAT request at tier t:
+  its tokens are identical to a single-tier engine (physically
+  plane-truncated params) serving the prompt alone at t, even while batch
+  mates decode at other tiers in the same fixed-width dispatch;
+* a randomized submit/step/poll schedule with mixed tiers stays
+  request-for-request identical to the per-request static-path oracle
+  (scheduler fuzz);
+* tier changes are mask flips: the dispatch counters (trace-time only)
+  stay frozen across mixed-tier admissions, evictions and ``set_quality``;
+* ``set_quality`` on a per-request engine is just the default for
+  quality-less submissions — no drain, live requests keep their tier.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs.base import ArchConfig
+from repro.kernels import dispatch
+from repro.models.api import Model
+from repro.models.base import init_params
+from repro.quant import tree_bits_report
+from repro.serve import ServeConfig, ServeEngine
+
+
+def _model_and_params():
+    cfg = ArchConfig(name="smollm-like", family="dense", n_layers=2,
+                     d_model=64, n_heads=4, n_kv=2, d_ff=128, vocab=256,
+                     dtype=jnp.float32, remat=False)
+    model = Model(cfg)
+    params = init_params(jax.random.PRNGKey(0), model.param_descs())
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def artifact():
+    model, params = _model_and_params()
+    return api.compress(model, params), model, params
+
+
+@pytest.fixture(scope="module")
+def solo_oracle(artifact):
+    """(prompt, max_new, tier) -> solo tokens from a SINGLE-TIER engine:
+    per_request=False forces the physically plane-truncated param layout,
+    so the oracle shares nothing with the per-slot mask path but the
+    wire."""
+    art, _, _ = artifact
+    engines = {}
+    memo = {}
+
+    def run(prompt, max_new, tier):
+        key = (tuple(prompt), max_new, tier)
+        if key not in memo:
+            if tier not in engines:
+                engines[tier] = art.engine(quality=tier, per_request=False,
+                                           batch_slots=1, continuous=False)
+            memo[key] = engines[tier].generate([list(prompt)],
+                                               max_new=max_new)[0]
+        return memo[key]
+
+    return run
+
+
+def test_engine_is_per_request_by_default(artifact):
+    art, _, _ = artifact
+    eng = art.engine(quality="hi", batch_slots=2, max_prompt=8, max_len=24)
+    assert eng.per_request_quality
+    assert eng.tier_names == art.quality_names()
+    # forcing the single-tier layout still works, and actually truncates
+    lo = art.engine(quality="lo", per_request=False, batch_slots=2)
+    assert not lo.per_request_quality
+    assert (tree_bits_report(lo.params)["bits"]
+            < tree_bits_report(eng.params)["bits"])
+
+
+def test_mixed_tier_tokens_match_solo_single_tier(artifact, solo_oracle):
+    """ACCEPTANCE: one mixed-tier continuous batch emits, per request,
+    tokens identical to a single-tier engine serving that prompt alone at
+    that tier."""
+    art, _, _ = artifact
+    eng = art.engine(quality="hi", batch_slots=3, max_prompt=8, max_len=24)
+    prompts = [[1, 2, 3], [9, 9], [100, 42, 7]]
+    tiers = ["hi", "mid", "lo"]
+    rids = [eng.submit(p, max_new=6, quality=q)
+            for p, q in zip(prompts, tiers)]
+    out = eng.run_until_drained()
+    for p, q, r in zip(prompts, tiers, rids):
+        assert out[r] == solo_oracle(p, 6, q), q
+    # tiers must actually disagree somewhere, or the assertion is vacuous
+    assert len({tuple(solo_oracle([1, 2, 3], 6, q))
+                for q in art.quality_names()}) > 1
+
+
+def test_mid_stream_admission_at_other_tier(artifact, solo_oracle):
+    """A lo request admitted MID-DECODE of a hi request: both exact, and
+    the hi slot's tokens are unperturbed by the tier mix."""
+    art, _, _ = artifact
+    eng = art.engine(quality="hi", batch_slots=2, max_prompt=8, max_len=32)
+    r_hi = eng.submit([1, 2, 3], max_new=10, quality="hi")
+    for _ in range(4):
+        eng.step()
+    r_lo = eng.submit([9, 9], max_new=6, quality="lo")
+    out = eng.run_until_drained()
+    assert out[r_hi] == solo_oracle([1, 2, 3], 10, "hi")
+    assert out[r_lo] == solo_oracle([9, 9], 6, "lo")
+
+
+def test_scheduler_fuzz_mixed_tiers_vs_solo_oracle(artifact, solo_oracle):
+    """Randomized submit/step/poll schedules with mixed tiers: every
+    result token-identical to its solo single-tier oracle, across slot
+    reuse, queueing and interleaved polls — and the whole schedule traces
+    once (counters frozen after warmup)."""
+    art, _, _ = artifact
+    rng = np.random.RandomState(1234)
+    tier_names = art.quality_names()
+    eng = art.engine(quality="mid", batch_slots=2, max_prompt=6, max_len=16)
+
+    # warmup: trace admit + decode programs once
+    eng.submit([7, 7], max_new=2, quality="hi")
+    eng.run_until_drained()
+    dispatch.reset_counters()
+
+    expected, results, live = {}, {}, []
+    for _ in range(40):
+        op = rng.choice(["submit", "step", "poll"], p=[0.4, 0.45, 0.15])
+        if op == "submit":
+            prompt = rng.randint(1, 256, size=rng.randint(1, 5)).tolist()
+            max_new = int(rng.choice([2, 4]))
+            quality = (None if rng.rand() < 0.25
+                       else str(rng.choice(tier_names)))
+            rid = eng.submit(prompt, max_new=max_new, quality=quality)
+            expected[rid] = (prompt, max_new, quality or eng.quality)
+            live.append(rid)
+        elif op == "step":
+            eng.step()
+        else:
+            if live and rng.rand() < 0.5:
+                rid = live[int(rng.randint(len(live)))]
+                toks = eng.poll(rid)
+                if toks is not None:
+                    results[rid] = toks
+                    live.remove(rid)
+            else:
+                got = eng.poll()
+                results.update(got)
+                live = [r for r in live if r not in got]
+    results.update(eng.run_until_drained())
+    assert sum(dispatch.counters.values()) == 0, dict(dispatch.counters)
+    assert eng._cont_step._cache_size() == 1
+    assert eng._admit._cache_size() == 1
+    assert len(results) == len(expected) > 10
+    for rid, (prompt, max_new, tier) in expected.items():
+        assert results[rid] == solo_oracle(prompt, max_new, tier), \
+            (rid, tier, prompt)
+    # the fuzz must actually have mixed tiers
+    assert len({t for _, _, t in expected.values()}) == len(tier_names)
+
+
+def test_set_quality_mid_stream_changes_default_only(artifact, solo_oracle):
+    """Per-request engines re-dial WITHOUT draining: live requests keep
+    the tier they were admitted at; only future submissions see the new
+    default."""
+    art, _, _ = artifact
+    eng = art.engine(quality="hi", batch_slots=2, max_prompt=8, max_len=24)
+    r_before = eng.submit([5, 6], max_new=4)       # default: hi
+    eng.step()                                     # r_before is decoding
+    eng.set_quality("lo")                          # no drain required
+    r_after = eng.submit([5, 6], max_new=4)        # default: lo
+    out = eng.run_until_drained()
+    assert out[r_before] == solo_oracle([5, 6], 4, "hi")
+    assert out[r_after] == solo_oracle([5, 6], 4, "lo")
+    with pytest.raises(KeyError, match="unknown quality tier"):
+        eng.set_quality("ultra")
+
+
+def test_generate_qualities_kwarg(artifact, solo_oracle):
+    art, _, _ = artifact
+    eng = art.engine(quality="hi", batch_slots=3)
+    prompts = [[1, 2, 3], [9, 9], [100, 42, 7]]
+    outs = eng.generate(prompts, max_new=5, qualities=["lo", "hi", "mid"])
+    for p, q, o in zip(prompts, ["lo", "hi", "mid"], outs):
+        assert o == solo_oracle(p, 5, q)
+    # one name applies to all
+    outs = eng.generate(prompts[:2], max_new=5, qualities="mid")
+    assert outs == [solo_oracle(p, 5, "mid") for p in prompts[:2]]
+    with pytest.raises(ValueError, match="one tier name per prompt"):
+        eng.generate(prompts, max_new=5, qualities=["hi"])
+
+
+def test_submit_quality_validation(artifact):
+    art, model, params = artifact
+    eng = art.engine(quality="hi", batch_slots=2, max_prompt=8, max_len=24)
+    with pytest.raises(KeyError, match="unknown quality tier"):
+        eng.submit([1, 2], quality="ultra")
+    # single-tier engines reject per-request tiers outright
+    plain = ServeEngine(model, params,
+                        ServeConfig(batch_slots=2, max_prompt=8, max_len=24))
+    with pytest.raises(ValueError, match="per-request quality"):
+        plain.submit([1, 2], quality="hi")
+    with pytest.raises(ValueError, match="per-request"):
+        art.engine(quality="hi", per_request=True, continuous=False)
+
+
+def test_static_path_rejects_qualities(artifact):
+    art, _, _ = artifact
+    stat = art.engine(quality="hi", per_request=False, batch_slots=2,
+                      continuous=False)
+    with pytest.raises(ValueError, match="continuous"):
+        stat.generate([[1, 2]], max_new=4, qualities="lo")
+
+
+def test_rankless_artifact_not_per_request(artifact):
+    """A bare wire (no sensitivity ranking) cannot resolve tier drop maps;
+    the engine must fall back to the single-tier layout, not silently
+    serve full quality under every tier name."""
+    from repro.quant.artifact import EdgeArtifact
+
+    art, model, _ = artifact
+    bare = EdgeArtifact(wire=art.wire, arch_config=model.cfg)
+    eng = bare.engine(quality="hi", batch_slots=2, max_prompt=8, max_len=24)
+    assert not eng.per_request_quality
+    with pytest.raises(ValueError, match="per-request quality"):
+        bare.engine(quality="hi", per_request=True,
+                    batch_slots=2, max_prompt=8, max_len=24)

@@ -242,6 +242,73 @@ def test_step_traces_once_across_admissions():
     assert eng._admit._cache_size() == 1
 
 
+# --------------------------------------------------------------------------
+# MoE dead-lane routing: FREE/DONE slots drop out of expert competition
+# --------------------------------------------------------------------------
+def _moe_model():
+    import dataclasses
+
+    from repro.configs.base import MoEConfig
+
+    cfg = get_arch("mixtral_8x22b", smoke=True)
+    # tight capacity so expert competition actually bites at decode width
+    cfg = dataclasses.replace(
+        cfg, moe=MoEConfig(n_experts=4, top_k=2, capacity_factor=0.3),
+        window=None)
+    model = Model(cfg)
+    params = init_params(jax.random.PRNGKey(0), model.param_descs())
+    return model, params
+
+
+def test_moe_dead_lane_out_of_expert_competition():
+    """layers.moe with an active mask: a dead lane's token must not change
+    live lanes' outputs (it used to claim capacity slots like a live batch
+    mate), and its own output must be zero."""
+    from repro.models import layers as L
+
+    key = jax.random.PRNGKey(0)
+    d, ff, e = 16, 32, 4
+    p = init_params(key, L.moe_descs(d, ff, e))
+    rng = np.random.RandomState(0)
+    x1 = jnp.asarray(rng.randn(4, 1, d), jnp.float32)
+    x2 = x1.at[1].set(jnp.asarray(rng.randn(1, d), jnp.float32))
+    active = jnp.asarray([1, 0, 1, 1], jnp.int32)
+    live = np.array([0, 2, 3])
+    y1 = np.asarray(L.moe(p, x1, top_k=2, capacity_factor=0.3,
+                          active=active)[0])
+    y2 = np.asarray(L.moe(p, x2, top_k=2, capacity_factor=0.3,
+                          active=active)[0])
+    np.testing.assert_array_equal(y1[live], y2[live])
+    assert (y1[1] == 0).all()
+    # without the mask the dead token DOES perturb live lanes (the bug the
+    # mask fixes) — guards against the test going vacuous
+    z1 = np.asarray(L.moe(p, x1, top_k=2, capacity_factor=0.3)[0])
+    z2 = np.asarray(L.moe(p, x2, top_k=2, capacity_factor=0.3)[0])
+    assert not np.array_equal(z1[live], z2[live])
+
+
+def test_moe_slot_history_invariance():
+    """Mirror of the dense families' slot-history guarantee: an MoE
+    request's tokens are invariant to DEAD lanes — a slot whose previous
+    occupant finished leaves a frozen token that no longer competes for
+    expert capacity."""
+    model, params = _moe_model()
+    scfg = ServeConfig(batch_slots=2, max_prompt=8, max_len=24)
+    # history engine: a short request finishes first, freezing its last
+    # token in the vacated lane while the probe request decodes
+    hist = ServeEngine(model, params, scfg)
+    r_warm = hist.submit([42, 17, 99], max_new=1)  # done at admission
+    hist.step()
+    assert hist.poll(r_warm) is not None
+    r_probe = hist.submit([1, 2, 3], max_new=8)
+    got = hist.run_until_drained()[r_probe]
+    # fresh engine: same probe, never-used second slot
+    fresh = ServeEngine(model, params, scfg)
+    r_solo = fresh.submit([1, 2, 3], max_new=8)
+    want = fresh.run_until_drained()[r_solo]
+    assert got == want
+
+
 def test_active_mask_freezes_dead_lanes(dense_setup):
     """A slot that finished early is a dead lane: its per-slot cache pos
     stops advancing while its batch mate keeps decoding."""
