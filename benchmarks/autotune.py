@@ -123,6 +123,33 @@ def _sweep_one(kind, m, k, n, g, verbose):
     return us, full
 
 
+def _demand_sweep(m, k, n, g, cfg, verbose) -> list:
+    """Time the decode GEMV at each demand_drop on plane-major weights,
+    using the tuned tiles.  This does NOT feed the tile table — demand is
+    a dispatch-time static, not a tunable — it records how the winning
+    config's runtime scales as demand shortens the weight-plane stream
+    (~linear in planes on the target, since decode is weight-bound)."""
+    x, planes, scales = _inputs(m, k, n, g)
+    pm = codec.plane_major(planes)
+    rows = []
+    for drop in (0, 1, 2):
+        fn = lambda x, p, s: ops.qsq_matvec(  # noqa: E731
+            x, p, s, group_size=g, bk=cfg["bk"], bn=cfg["bn"],
+            plane_major=True, demand_drop=drop)
+        us = timeit_us(fn, x, pm, scales, warmup=1, iters=3)
+        print("BENCH " + json.dumps({
+            "bench": "autotune_demand", "case": dispatch.shape_key(m, k, n, g),
+            "demand_drop": drop, "planes_read": 3 - drop,
+            "bk": cfg["bk"], "bn": cfg["bn"], "us": round(us, 1),
+        }))
+        rows.append((f"autotune/demand{drop}_{dispatch.shape_key(m, k, n, g)}",
+                     us, f"planes={3 - drop}|bk={cfg['bk']}|bn={cfg['bn']}"))
+        if verbose:
+            print(f"  demand_drop={drop} ({3 - drop} planes) "
+                  f"{dispatch.shape_key(m, k, n, g)}: {us:.0f}us")
+    return rows
+
+
 def tune(quick: bool = False, verbose: bool = True) -> tuple[dict, list]:
     """Run the sweep; returns (dispatch-format table, bench rows)."""
     backend = jax.default_backend()
@@ -150,6 +177,11 @@ def tune(quick: bool = False, verbose: bool = True) -> tuple[dict, list]:
     for kind, votes in class_votes.items():
         if votes:
             entries[kind] = json.loads(max(votes, key=votes.get))
+    # demand-streaming scaling on the first decode shape's winning tiles
+    gemv_cfg = entries.get("gemv")
+    gemv_shape = next((s for s, kd in shapes if kd == "gemv"), None)
+    if gemv_cfg is not None and gemv_shape is not None:
+        rows += _demand_sweep(*gemv_shape, gemv_cfg, verbose)
     return {backend: entries}, rows
 
 

@@ -44,6 +44,7 @@ from repro.configs.base import ArchConfig
 from repro.models.api import Model
 from repro.models.base import init_params
 from repro.quant import tree_bits_report
+from repro.quant.artifact import QualitySpec, QualityTier
 from repro.serve import ServeConfig, ServeEngine
 from repro.train.step import make_cache_prefill_step
 
@@ -56,6 +57,20 @@ STREAM_REQUESTS = 8
 STREAM_MAX_NEW = 8
 STREAM_MEAN_GAP = 2.0  # mean inter-arrival, in scheduler ticks
 STREAM_SLOTS = 2       # scarce slots: queueing pressure is the point
+
+# demand-driven plane streaming: a tier ladder whose lowest tier keeps ONE
+# of the three bit-planes on EVERY packable weight, so an all-lo batch
+# should stream ~1/3 of the full-quality weight bytes (the DEFAULT_TIERS
+# lo drops one plane from all leaves — a 2/3 floor — which would hide the
+# streaming headroom this sweep exists to measure)
+PLANE_STREAM_TIERS = QualitySpec((
+    QualityTier("hi", drop_planes=0, drop_frac=0.0),
+    QualityTier("mid", drop_planes=1, drop_frac=1.0),
+    QualityTier("lo", drop_planes=2, drop_frac=1.0),
+))
+PS_REQUESTS = 6
+PS_MAX_NEW = 6
+PS_SLOTS = 3
 
 
 def _model():
@@ -357,6 +372,70 @@ def main(verbose: bool = True, quick: bool = False):
         "tokens_match_solo_tier": mix_exact,
         "tok_per_tick": round(n_tok / m_ticks, 3),
         **_lat_stats(m_lat, m_wait),
+    }))
+
+    # DEMAND-DRIVEN PLANE STREAMING: the same continuous scheduler, swept
+    # over tier mixes on a ladder whose lo tier keeps one plane everywhere.
+    # Each decode tick streams only the planes the batch's most-demanding
+    # LIVE request wants (min live tier index, a static dispatch arg), and
+    # the engine's analytic meter converts that into weight bytes read per
+    # token — an all-lo batch should approach 1/3 of the all-hi traffic.
+    # Outputs stay bit-exact vs solo single-tier engines at every mix.
+    ps_art = api.compress(model, params, tiers=PLANE_STREAM_TIERS)
+    ps_rng = np.random.default_rng(7)
+    ps_prompts = [ps_rng.integers(1, model.cfg.vocab,
+                                  size=int(ps_rng.integers(2, 6))).tolist()
+                  for _ in range(PS_REQUESTS)]
+    ps_names = ps_art.quality_names()
+    ps_solo = {q: ps_art.engine(quality=q, per_request=False, batch_slots=1,
+                                continuous=False) for q in ps_names}
+    eng_ps = ps_art.engine(quality="hi", batch_slots=PS_SLOTS, max_prompt=8,
+                           max_len=8 + PS_MAX_NEW + 1)
+    assert eng_ps.per_request_quality
+    mixes = {
+        "all_hi": ["hi"] * PS_REQUESTS,
+        "mixed": [ps_names[i % len(ps_names)] for i in range(PS_REQUESTS)],
+        "all_lo": ["lo"] * PS_REQUESTS,
+    }
+    ps_stats = {}
+    for mix_name, mix_tiers in mixes.items():
+        eng_ps.reset_stream()  # fresh session: per-mix traffic meter
+        rids = [eng_ps.submit(p, max_new=PS_MAX_NEW, quality=q)
+                for p, q in zip(ps_prompts, mix_tiers)]
+        done = eng_ps.run_until_drained()
+        for rid, p, q in zip(rids, ps_prompts, mix_tiers):
+            assert done[rid] == ps_solo[q].generate([p],
+                                                    max_new=PS_MAX_NEW)[0], \
+                f"plane-stream {mix_name} diverged from solo {q} engine"
+        meter = eng_ps.stream_stats()
+        ps_stats[mix_name] = {
+            "bytes_per_token": round(meter["bytes_per_token"], 1),
+            "read_frac": round(meter["read_frac"], 4),
+            "tok_per_tick": round(meter["tokens"] / eng_ps.step_count, 3),
+            "tokens": meter["tokens"],
+        }
+        if verbose:
+            print(f"  plane_stream/{mix_name}: "
+                  f"{meter['bytes_per_token']:.0f} B/tok "
+                  f"({meter['read_frac']:.2f} of full), "
+                  f"{ps_stats[mix_name]['tok_per_tick']:.3f} tok/tick, "
+                  f"tokens exact")
+    hi_bpt = ps_stats["all_hi"]["bytes_per_token"]
+    lo_bpt = ps_stats["all_lo"]["bytes_per_token"]
+    assert lo_bpt < hi_bpt, \
+        f"all-lo bytes/token {lo_bpt} not below all-hi {hi_bpt}"
+    assert lo_bpt <= 0.5 * hi_bpt, \
+        f"all-lo bytes/token {lo_bpt} > 0.5x all-hi {hi_bpt}"
+    rows.append(("serve/plane_stream_all_lo", lo_bpt,
+                 f"all_hi_B_tok={hi_bpt:.0f}"
+                 f"|ratio={lo_bpt / hi_bpt:.3f}"))
+    print("BENCH " + json.dumps({
+        "bench": "serve_plane_stream",
+        "requests": PS_REQUESTS,
+        "slots": PS_SLOTS,
+        "max_new": PS_MAX_NEW,
+        "lo_over_hi_bytes": round(lo_bpt / hi_bpt, 4),
+        **ps_stats,
     }))
 
     # quality-tier sweep: one engine per tier from the SAME artifact, lower

@@ -98,6 +98,49 @@ def unpack_bitplane(planes: jax.Array, bits: int = 3) -> jax.Array:
 
 
 # --------------------------------------------------------------------------
+# Plane-major (streaming) layout
+# --------------------------------------------------------------------------
+# pack_bitplane interleaves planes along the contraction dim:
+#   (K//32, bits, ...), LSB first.  Demand-driven streaming wants the plane
+# index OUTERMOST and MSB first, so the planes a truncated tier keeps are a
+# contiguous leading prefix and a dropped plane shortens the HBM read
+# instead of being masked after the load.
+def plane_major(planes: jax.Array, bits: int = 3) -> jax.Array:
+    """(K//32, bits, ...) interleaved -> (bits, K//32, ...) MSB-first."""
+    return jnp.flip(jnp.moveaxis(planes, 1, 0), axis=0)
+
+
+def plane_interleaved(pm: jax.Array, bits: int = 3) -> jax.Array:
+    """Inverse of :func:`plane_major`."""
+    return jnp.moveaxis(jnp.flip(pm, axis=0), 0, 1)
+
+
+def unpack_bitplane_major(
+    pm: jax.Array, bits: int = 3, n_planes: int | None = None
+) -> jax.Array:
+    """(P, K//32, ...) MSB-first plane-major words -> (K, ...) uint8 codes.
+
+    Only the leading ``n_planes`` planes are read (default: all present);
+    missing trailing planes contribute zero bits, matching a truncated
+    stream.
+    """
+    np_ = pm.shape[0] if n_planes is None else n_planes
+    p32 = pm.astype(jnp.uint32)
+    j = jnp.arange(PLANE_GROUP, dtype=jnp.uint32).reshape(
+        (1, PLANE_GROUP) + (1,) * (pm.ndim - 2)
+    )
+    code = jnp.zeros(
+        (pm.shape[1], PLANE_GROUP) + pm.shape[2:], dtype=jnp.uint32
+    )
+    for p in range(np_):
+        bit = (p32[p][:, None] >> j) & jnp.uint32(1)
+        code = code | (bit << np.uint32(bits - 1 - p))
+    return code.reshape((pm.shape[1] * PLANE_GROUP,) + pm.shape[2:]).astype(
+        jnp.uint8
+    )
+
+
+# --------------------------------------------------------------------------
 # Wire-format byte accounting (drives the Eq. 11/12 energy model)
 # --------------------------------------------------------------------------
 def wire_bytes(n_codes: int, n_scales: int, bits: int = 3, scalar_bits: int = 32) -> int:

@@ -184,6 +184,26 @@ def codes_to_levels(codes: jax.Array) -> jax.Array:
     return jnp.asarray(LEVEL_TABLE)[codes.astype(jnp.int32) & 0x7]
 
 
+# Sign-magnitude recode (wire format v2): bit 2 is the sign, bits 1..0 the
+# magnitude index (0->0, 1->1, 2->2, 3->4).  Unlike Table II's offset code,
+# masking the low bit-planes degrades + and - levels alike, so a truncated
+# plane stream is sign-symmetric by construction.  Code 4 (-0) is unused.
+SM_LEVEL_TABLE = np.array([0, 1, 2, 4, 0, -1, -2, -4], dtype=np.int8)
+
+
+def levels_to_smcodes(levels: jax.Array) -> jax.Array:
+    """Map signed levels {0,+-1,+-2,+-4} -> sign-magnitude 3-bit codes."""
+    mag = jnp.abs(levels).astype(jnp.int32)
+    mag_idx = jnp.where(mag == 4, 3, mag)
+    neg = (levels < 0).astype(jnp.int32)
+    return (mag_idx + 4 * neg).astype(jnp.uint8)
+
+
+def smcodes_to_levels(codes: jax.Array) -> jax.Array:
+    """Inverse of :func:`levels_to_smcodes`; -0 (code 4) decodes to 0."""
+    return jnp.asarray(SM_LEVEL_TABLE)[codes.astype(jnp.int32) & 0x7]
+
+
 def _grouped(w: jax.Array, group_size: int) -> jax.Array:
     """Reshape (K, ...) -> (K//G, G, ...) with validation."""
     k = w.shape[0]

@@ -70,9 +70,19 @@ TABLE_ENV = "REPRO_TUNED_TABLE"
 # trace-time dispatch counters: route name, plus "<route>:padded|exact"
 counters: collections.Counter = collections.Counter()
 
+# trace-time plane-traffic accounting, kept separate from the route
+# counters so route assertions stay stable.  Per packed_matmul trace:
+#   "<route>:planes<P>"   — calls that streamed P of the 3 bit-planes
+#   "plane_reads"         — plane-tiles streamed (planes touched x tiles)
+#   "plane_words_read"    — int32 plane words the routed kernel streams
+#   "plane_words_full"    — words a full 3-plane stream would have read
+# read/full < 1 is exactly the demand-driven HBM saving on that trace.
+traffic: collections.Counter = collections.Counter()
+
 
 def reset_counters() -> None:
     counters.clear()
+    traffic.clear()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -260,6 +270,21 @@ def _pad_axis(a: jax.Array, axis: int, to: int) -> jax.Array:
     return jnp.pad(a, pads)
 
 
+def _count_traffic(p: Plan, k: int, n_read: int) -> None:
+    """Record plane-stream traffic for one routed call (trace-time)."""
+    if p.route == ROUTE_GEMV:
+        tiles = (p.pn // p.bn) * (k // p.bk)
+    elif p.route == ROUTE_GEMM:
+        tiles = (p.pm // p.bm) * (p.pn // p.bn) * (k // p.bk)
+    else:
+        tiles = 1
+    words = k // PLANE * p.pn
+    traffic[f"{p.route}:planes{n_read}"] += 1
+    traffic["plane_reads"] += n_read * tiles
+    traffic["plane_words_read"] += n_read * words
+    traffic["plane_words_full"] += 3 * words
+
+
 def packed_matmul(
     x: jax.Array,
     planes: jax.Array,
@@ -269,6 +294,9 @@ def packed_matmul(
     use_kernel: bool = True,
     interpret: bool | None = None,
     plane_mask: jax.Array | None = None,
+    sign_mag: bool = False,
+    plane_major: bool = False,
+    demand_drop: int = 0,
 ) -> jax.Array:
     """x (M,K) @ decode(planes (K//32,3,N), scales (K//G,N)) -> (M,N) f32.
 
@@ -281,26 +309,47 @@ def packed_matmul(
     :data:`MASK_VARIANTS` — makes the matmul quality-tiered PER ROW: row m
     contracts against the weight decoded under its own mask, bit-identical
     to the unmasked matmul on ``truncate(drop_m)`` planes.  The mask is a
-    traced operand split into a fixed 3-variant activation stack, so a
+    traced operand split into a fixed variant activation stack, so a
     tier change is a data change (mask flip), never a retrace; plan/route
-    and tile fitting are identical to the unmasked call."""
+    and tile fitting are identical to the unmasked call.
+
+    ``sign_mag`` selects the wire-v2 sign-magnitude decoder;
+    ``plane_major`` marks ``planes`` as (3, K//32, N) MSB-first, the layout
+    whose HBM read shortens with demand; ``demand_drop`` (static, 0..2) is
+    the batch demand floor: every live row drops at least that many planes,
+    so the kernel only streams/decodes the ``3 - demand_drop`` demanded
+    planes (plane-major) and variants ``MASK_VARIANTS[demand_drop:]``.
+    Rows whose mask demands a pruned variant contribute zeros; the caller
+    (engine demand vector) guarantees no live row does."""
     m, k = x.shape
     n = planes.shape[-1]
+    if not 0 <= demand_drop < 3:
+        raise ValueError(f"demand_drop must be 0..2, got {demand_drop}")
+    if plane_mask is None and not plane_major:
+        demand_drop = 0  # interleaved unmasked has nothing to prune
     p = plan(m, k, n, group_size, use_kernel=use_kernel)
     counters[p.route] += 1
     counters[f"{p.route}:{'padded' if p.padded else 'exact'}"] += 1
+    # interleaved planes cannot shorten the read: all 3 planes stream.
+    n_read = 3 - demand_drop if plane_major else 3
+    _count_traffic(p, k, n_read)
     if plane_mask is not None:
         counters[f"{p.route}:masked"] += 1
-        # variant split: xs[i] keeps exactly the rows masked MASK_VARIANTS[i]
-        # (a row matches one variant; others contribute exact zeros).  Pad
-        # rows carry mask 0 -> no variant -> exact zero rows, as before.
-        sel = jnp.stack([plane_mask == v for v in MASK_VARIANTS])
+        # variant split: xs[i] keeps exactly the rows masked
+        # MASK_VARIANTS[demand_drop + i] (a row matches one variant; others
+        # contribute exact zeros).  Pad rows carry mask 0 -> no variant ->
+        # exact zero rows, as before.
+        sel = jnp.stack([plane_mask == v for v in MASK_VARIANTS[demand_drop:]])
         xs = jnp.where(sel[:, :, None], x[None], 0).astype(x.dtype)
 
     if p.route == ROUTE_XLA:
         if plane_mask is not None:
-            return ref.qsq_matmul_masked_ref(xs, planes, scales, group_size)
-        return ref.qsq_matmul_ref(x, planes, scales, group_size)
+            return ref.qsq_matmul_masked_ref(
+                xs, planes, scales, group_size, sign_mag=sign_mag,
+                plane_major=plane_major, demand_drop=demand_drop)
+        return ref.qsq_matmul_ref(
+            x, planes, scales, group_size, sign_mag=sign_mag,
+            plane_major=plane_major, n_planes=3 - demand_drop)
 
     from repro.kernels import ops  # deferred: keeps pallas off cold paths
 
@@ -310,18 +359,28 @@ def packed_matmul(
         xsp = _pad_axis(xs, 1, p.pm)
         if p.route == ROUTE_GEMV:
             out = ops.qsq_matvec_masked(xsp, pp, sp, group_size=group_size,
-                                        bk=p.bk, bn=p.bn, interpret=interpret)
+                                        bk=p.bk, bn=p.bn, interpret=interpret,
+                                        sign_mag=sign_mag,
+                                        plane_major=plane_major,
+                                        demand_drop=demand_drop)
         else:
             out = ops.qsq_matmul_masked(xsp, pp, sp, group_size=group_size,
                                         bm=p.bm, bk=p.bk, bn=p.bn,
-                                        interpret=interpret)
+                                        interpret=interpret,
+                                        sign_mag=sign_mag,
+                                        plane_major=plane_major,
+                                        demand_drop=demand_drop)
         return out[:m, :n] if p.padded else out
 
     xp = _pad_axis(x, 0, p.pm)
     if p.route == ROUTE_GEMV:
         out = ops.qsq_matvec(xp, pp, sp, group_size=group_size,
-                             bk=p.bk, bn=p.bn, interpret=interpret)
+                             bk=p.bk, bn=p.bn, interpret=interpret,
+                             sign_mag=sign_mag, plane_major=plane_major,
+                             demand_drop=demand_drop)
     else:
         out = ops.qsq_matmul(xp, pp, sp, group_size=group_size,
-                             bm=p.bm, bk=p.bk, bn=p.bn, interpret=interpret)
+                             bm=p.bm, bk=p.bk, bn=p.bn, interpret=interpret,
+                             sign_mag=sign_mag, plane_major=plane_major,
+                             demand_drop=demand_drop)
     return out[:m, :n] if p.padded else out

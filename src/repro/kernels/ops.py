@@ -33,15 +33,21 @@ def qsq_matmul(
     bn: int = 256,
     interpret: bool | None = None,
     use_pallas: bool = True,
+    sign_mag: bool = False,
+    plane_major: bool = False,
+    demand_drop: int = 0,
 ) -> jax.Array:
     """x @ dequant(planes, scales).  Falls back to the XLA ref when asked."""
     if not use_pallas:
-        return ref.qsq_matmul_ref(x, planes, scales, group_size)
+        return ref.qsq_matmul_ref(x, planes, scales, group_size,
+                                  sign_mag=sign_mag, plane_major=plane_major,
+                                  n_planes=3 - demand_drop)
     if interpret is None:
         interpret = auto_interpret()
     return _qsq_matmul_pallas(
         x, planes, scales, group_size=group_size, bm=bm, bk=bk, bn=bn,
-        interpret=interpret,
+        interpret=interpret, sign_mag=sign_mag, plane_major=plane_major,
+        demand_drop=demand_drop,
     )
 
 
@@ -55,15 +61,21 @@ def qsq_matvec(
     bn: int = 256,
     interpret: bool | None = None,
     use_pallas: bool = True,
+    sign_mag: bool = False,
+    plane_major: bool = False,
+    demand_drop: int = 0,
 ) -> jax.Array:
     """Small-M x @ dequant(planes, scales) — the decode-shape GEMV kernel."""
     if not use_pallas:
-        return ref.qsq_matmul_ref(x, planes, scales, group_size)
+        return ref.qsq_matmul_ref(x, planes, scales, group_size,
+                                  sign_mag=sign_mag, plane_major=plane_major,
+                                  n_planes=3 - demand_drop)
     if interpret is None:
         interpret = auto_interpret()
     return _qsq_matvec_pallas(
         x, planes, scales, group_size=group_size, bk=bk, bn=bn,
-        interpret=interpret,
+        interpret=interpret, sign_mag=sign_mag, plane_major=plane_major,
+        demand_drop=demand_drop,
     )
 
 
@@ -78,15 +90,23 @@ def qsq_matmul_masked(
     bn: int = 256,
     interpret: bool | None = None,
     use_pallas: bool = True,
+    sign_mag: bool = False,
+    plane_major: bool = False,
+    demand_drop: int = 0,
 ) -> jax.Array:
-    """Per-row plane-masked GEMM: xs (3, M, K) variant-split activations."""
+    """Per-row plane-masked GEMM: xs (3 - demand_drop, M, K) variant-split
+    activations."""
     if not use_pallas:
-        return ref.qsq_matmul_masked_ref(xs, planes, scales, group_size)
+        return ref.qsq_matmul_masked_ref(xs, planes, scales, group_size,
+                                         sign_mag=sign_mag,
+                                         plane_major=plane_major,
+                                         demand_drop=demand_drop)
     if interpret is None:
         interpret = auto_interpret()
     return _qsq_matmul_masked_pallas(
         xs, planes, scales, group_size=group_size, bm=bm, bk=bk, bn=bn,
-        interpret=interpret,
+        interpret=interpret, sign_mag=sign_mag, plane_major=plane_major,
+        demand_drop=demand_drop,
     )
 
 
@@ -100,15 +120,23 @@ def qsq_matvec_masked(
     bn: int = 256,
     interpret: bool | None = None,
     use_pallas: bool = True,
+    sign_mag: bool = False,
+    plane_major: bool = False,
+    demand_drop: int = 0,
 ) -> jax.Array:
-    """Per-row plane-masked GEMV: xs (3, M, K) variant-split activations."""
+    """Per-row plane-masked GEMV: xs (3 - demand_drop, M, K) variant-split
+    activations."""
     if not use_pallas:
-        return ref.qsq_matmul_masked_ref(xs, planes, scales, group_size)
+        return ref.qsq_matmul_masked_ref(xs, planes, scales, group_size,
+                                         sign_mag=sign_mag,
+                                         plane_major=plane_major,
+                                         demand_drop=demand_drop)
     if interpret is None:
         interpret = auto_interpret()
     return _qsq_matvec_masked_pallas(
         xs, planes, scales, group_size=group_size, bk=bk, bn=bn,
-        interpret=interpret,
+        interpret=interpret, sign_mag=sign_mag, plane_major=plane_major,
+        demand_drop=demand_drop,
     )
 
 

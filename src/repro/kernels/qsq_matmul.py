@@ -13,11 +13,22 @@ the weight-streaming memory-roofline term, which dominates decode-shape
 inference (measured by benchmarks/bench_kernels.py and
 benchmarks/bench_serve.py; see README.md §Performance).
 
-Layout:
+Layout (plane-interleaved, legacy):
   x       (M, K)            bf16/f32   activations
   planes  (K//32, 3, N)     int32      bit-plane packed 3-bit codes
   scales  (K//G, N)         f32        per-group scalars (group along K)
   out     (M, N)            f32
+
+Layout (plane-major, ``plane_major=True``):
+  planes  (3, K//32, N)     int32      MSB-first: plane 0 holds code bit 2
+
+Plane-major is the demand-streaming layout: the planes a tier keeps are a
+leading prefix, so a call that demands only ``n_planes`` planes reads a
+``(n_planes, bk//32, bn)`` block — the dropped planes never leave HBM.
+At n_planes=1 the weight stream is ~1/3 of the full read.
+
+``sign_mag`` selects the wire-v2 sign-magnitude decoder (bit 2 = sign,
+bits 1..0 = magnitude index) over the Table II offset decoder.
 
 Grid: (M/bm, N/bn, K/bk), K innermost (accumulation, "arbitrary" semantics).
 Default tile (bm=256, bk=512, bn=256) VMEM footprint:
@@ -57,8 +68,24 @@ def _decode_codes(codes: jax.Array) -> jax.Array:
     return jnp.where(pos, mag, jnp.where(neg, -mag, 0))
 
 
+def _decode_codes_sm(codes: jax.Array) -> jax.Array:
+    """Sign-magnitude (wire v2): bit 2 = sign, bits 1..0 = magnitude index.
+
+    0->0, 1->+1, 2->+2, 3->+4, 4->-0 (=0), 5->-1, 6->-2, 7->-4.
+    """
+    c = codes.astype(jnp.int32)
+    mag_idx = c & 3
+    mag = jnp.int32(1) << jnp.maximum(mag_idx - 1, 0)
+    val = jnp.where(mag_idx > 0, mag, 0)
+    return jnp.where(c >= 4, -val, val)
+
+
+def _decoder(sign_mag: bool):
+    return _decode_codes_sm if sign_mag else _decode_codes
+
+
 def _unpack_planes(planes_blk: jax.Array, bk: int, bn: int) -> jax.Array:
-    """(bk//32, 3, bn) int32 bit-planes -> (bk, bn) int32 codes."""
+    """(bk//32, 3, bn) int32 interleaved bit-planes -> (bk, bn) int32 codes."""
     g = bk // PLANE
     # bit position j within each 32-code word, as an iota over a new axis
     j = jax.lax.broadcasted_iota(jnp.int32, (g, PLANE, bn), dimension=1)
@@ -70,8 +97,50 @@ def _unpack_planes(planes_blk: jax.Array, bk: int, bn: int) -> jax.Array:
     return code.reshape(bk, bn)
 
 
-def _qsq_matmul_kernel(x_ref, planes_ref, scales_ref, o_ref, *, bk: int, group_size: int):
-    bm, _ = x_ref.shape
+def _unpack_planes_major(
+    planes_blk: jax.Array, bk: int, bn: int, n_planes: int
+) -> jax.Array:
+    """(n_planes, bk//32, bn) MSB-first plane-major words -> (bk, bn) codes.
+
+    Streamed plane p carries code bit (2 - p); absent trailing planes
+    contribute zero bits, exactly like a masked code stream.
+    """
+    g = bk // PLANE
+    j = jax.lax.broadcasted_iota(jnp.int32, (g, PLANE, bn), dimension=1)
+    code = jnp.zeros((g, PLANE, bn), dtype=jnp.int32)
+    for p in range(n_planes):
+        word = planes_blk[p]  # (g, bn)
+        bit = (jax.lax.shift_right_logical(word[:, None, :], j)) & 1
+        code = code | (bit << (2 - p))
+    return code.reshape(bk, bn)
+
+
+def _unpack(planes_blk, bk, bn, plane_major: bool, n_planes: int):
+    if plane_major:
+        return _unpack_planes_major(planes_blk, bk, bn, n_planes)
+    return _unpack_planes(planes_blk, bk, bn)
+
+
+def _planes_spec(plane_major: bool, n_planes: int, bk: int, bn: int):
+    """Weight-plane BlockSpec for a (j-N, k-K) or (i-M, j-N, k-K) grid.
+
+    Plane-major pins the plane axis at block row 0 with a block of only the
+    demanded ``n_planes`` planes — the HBM read shortens with demand."""
+    if plane_major:
+        return (n_planes, bk // PLANE, bn), lambda *ids: (0, ids[-1], ids[-2])
+    return (bk // PLANE, 3, bn), lambda *ids: (ids[-1], 0, ids[-2])
+
+
+def _check_planes_shape(planes, kdim, n, plane_major):
+    want = (3, kdim // PLANE, n) if plane_major else (kdim // PLANE, 3, n)
+    if planes.shape != want:
+        raise ValueError(f"planes shape {planes.shape} != {want}")
+
+
+def _qsq_matmul_kernel(
+    x_ref, planes_ref, scales_ref, o_ref, *,
+    bk: int, group_size: int, sign_mag: bool, plane_major: bool, n_planes: int,
+):
     bn = o_ref.shape[1]
     k = pl.program_id(2)
 
@@ -79,8 +148,8 @@ def _qsq_matmul_kernel(x_ref, planes_ref, scales_ref, o_ref, *, bk: int, group_s
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    codes = _unpack_planes(planes_ref[...], bk, bn)          # (bk, bn) int32
-    levels = _decode_codes(codes).astype(jnp.float32)        # (bk, bn)
+    codes = _unpack(planes_ref[...], bk, bn, plane_major, n_planes)
+    levels = _decoder(sign_mag)(codes).astype(jnp.float32)   # (bk, bn)
     # broadcast per-group scales down each K-group of rows
     ng = bk // group_size
     lev_g = levels.reshape(ng, group_size, bn)
@@ -92,11 +161,14 @@ def _qsq_matmul_kernel(x_ref, planes_ref, scales_ref, o_ref, *, bk: int, group_s
 
 
 def _qsq_matmul_masked_kernel(
-    xs_ref, planes_ref, scales_ref, o_ref, *, bk: int, group_size: int
+    xs_ref, planes_ref, scales_ref, o_ref, *,
+    bk: int, group_size: int, sign_mag: bool, plane_major: bool,
+    demand_drop: int,
 ):
     """Per-row plane-masked GEMM tile (see qsq_matvec._qsq_matvec_masked_kernel
-    for the variant-split contract): one weight-tile stream, three static
-    mask decodes in VREGs, one dot per variant into the shared output."""
+    for the variant-split contract): one weight-tile stream, one static mask
+    decode in VREGs per demanded variant, one dot per variant into the shared
+    output.  ``demand_drop`` prunes the variants no live row can select."""
     bn = o_ref.shape[1]
     k = pl.program_id(2)
 
@@ -104,12 +176,13 @@ def _qsq_matmul_masked_kernel(
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    codes = _unpack_planes(planes_ref[...], bk, bn)          # (bk, bn) int32
+    codes = _unpack(planes_ref[...], bk, bn, plane_major, 3 - demand_drop)
+    decode = _decoder(sign_mag)
     ng = bk // group_size
     sc = scales_ref[...]
     acc = None
-    for i, mask in enumerate(MASK_VARIANTS):
-        levels = _decode_codes(codes & mask).astype(jnp.float32)
+    for i, mask in enumerate(MASK_VARIANTS[demand_drop:]):
+        levels = decode(codes & mask).astype(jnp.float32)
         w = (levels.reshape(ng, group_size, bn) * sc[:, None, :]).reshape(bk, bn)
         d = jnp.dot(
             xs_ref[i], w.astype(xs_ref.dtype), preferred_element_type=jnp.float32
@@ -120,7 +193,8 @@ def _qsq_matmul_masked_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("group_size", "bm", "bk", "bn", "interpret"),
+    static_argnames=("group_size", "bm", "bk", "bn", "interpret",
+                     "sign_mag", "plane_major", "demand_drop"),
 )
 def qsq_matmul_masked(
     xs: jax.Array,
@@ -132,17 +206,26 @@ def qsq_matmul_masked(
     bk: int = 512,
     bn: int = 256,
     interpret: bool = False,
+    sign_mag: bool = False,
+    plane_major: bool = False,
+    demand_drop: int = 0,
 ) -> jax.Array:
-    """Plane-masked sibling of :func:`qsq_matmul`: xs (3, M, K) -> (M, N) f32.
+    """Plane-masked sibling of :func:`qsq_matmul`:
+    xs (3 - demand_drop, M, K) -> (M, N) f32.
 
-    xs[i] holds the x rows whose plane mask is ``ref.MASK_VARIANTS[i]``
-    (other rows zero).  Same tiling contract as the unmasked kernel."""
+    xs[i] holds the x rows whose plane mask is
+    ``ref.MASK_VARIANTS[demand_drop + i]`` (other rows zero).  Same tiling
+    contract as the unmasked kernel.  With ``plane_major`` the weight block
+    only spans the ``3 - demand_drop`` demanded planes."""
     nv, m, kdim = xs.shape
     n = planes.shape[-1]
-    if nv != len(MASK_VARIANTS):
-        raise ValueError(f"xs leading dim {nv} != {len(MASK_VARIANTS)} mask variants")
-    if planes.shape != (kdim // PLANE, 3, n):
-        raise ValueError(f"planes shape {planes.shape} != {(kdim // PLANE, 3, n)}")
+    if not 0 <= demand_drop <= 2:
+        raise ValueError(f"demand_drop must be 0..2, got {demand_drop}")
+    n_planes = 3 - demand_drop
+    if nv != n_planes:
+        raise ValueError(
+            f"xs leading dim {nv} != {n_planes} demanded mask variants")
+    _check_planes_shape(planes, kdim, n, plane_major)
     if scales.shape != (kdim // group_size, n):
         raise ValueError(f"scales shape {scales.shape} != {(kdim // group_size, n)}")
     bm, bk, bn = min(bm, m), min(bk, kdim), min(bn, n)
@@ -152,13 +235,16 @@ def qsq_matmul_masked(
         raise ValueError(f"bk={bk} must be a multiple of 32 and group_size={group_size}")
 
     grid = (m // bm, n // bn, kdim // bk)
-    kernel = functools.partial(_qsq_matmul_masked_kernel, bk=bk, group_size=group_size)
+    kernel = functools.partial(
+        _qsq_matmul_masked_kernel, bk=bk, group_size=group_size,
+        sign_mag=sign_mag, plane_major=plane_major, demand_drop=demand_drop)
+    pshape, pmap = _planes_spec(plane_major, n_planes, bk, bn)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((nv, bm, bk), lambda i, j, k: (0, i, k)),
-            pl.BlockSpec((bk // PLANE, 3, bn), lambda i, j, k: (k, 0, j)),
+            pl.BlockSpec(pshape, pmap),
             pl.BlockSpec((bk // group_size, bn), lambda i, j, k: (k, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
@@ -170,7 +256,8 @@ def qsq_matmul_masked(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("group_size", "bm", "bk", "bn", "interpret"),
+    static_argnames=("group_size", "bm", "bk", "bn", "interpret",
+                     "sign_mag", "plane_major", "demand_drop"),
 )
 def qsq_matmul(
     x: jax.Array,
@@ -182,12 +269,19 @@ def qsq_matmul(
     bk: int = 512,
     bn: int = 256,
     interpret: bool = False,
+    sign_mag: bool = False,
+    plane_major: bool = False,
+    demand_drop: int = 0,
 ) -> jax.Array:
     """Fused 3-bit dequant + matmul: x (M,K) @ decode(planes, scales) -> (M,N) f32."""
     m, kdim = x.shape
     n = planes.shape[-1]
-    if planes.shape != (kdim // PLANE, 3, n):
-        raise ValueError(f"planes shape {planes.shape} != {(kdim // PLANE, 3, n)}")
+    if not 0 <= demand_drop <= 2:
+        raise ValueError(f"demand_drop must be 0..2, got {demand_drop}")
+    if demand_drop and not plane_major:
+        raise ValueError("demand_drop requires the plane-major layout")
+    n_planes = 3 - demand_drop
+    _check_planes_shape(planes, kdim, n, plane_major)
     if scales.shape != (kdim // group_size, n):
         raise ValueError(f"scales shape {scales.shape} != {(kdim // group_size, n)}")
     bm, bk, bn = min(bm, m), min(bk, kdim), min(bn, n)
@@ -197,13 +291,16 @@ def qsq_matmul(
         raise ValueError(f"bk={bk} must be a multiple of 32 and group_size={group_size}")
 
     grid = (m // bm, n // bn, kdim // bk)
-    kernel = functools.partial(_qsq_matmul_kernel, bk=bk, group_size=group_size)
+    kernel = functools.partial(
+        _qsq_matmul_kernel, bk=bk, group_size=group_size,
+        sign_mag=sign_mag, plane_major=plane_major, n_planes=n_planes)
+    pshape, pmap = _planes_spec(plane_major, n_planes, bk, bn)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk // PLANE, 3, bn), lambda i, j, k: (k, 0, j)),
+            pl.BlockSpec(pshape, pmap),
             pl.BlockSpec((bk // group_size, bn), lambda i, j, k: (k, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),

@@ -18,8 +18,11 @@ block every K step.  This kernel is the GEMV specialization the dispatcher
   square 256x512x256 GEMM config — the weight stream, not the MXU, is the
   roofline term at M <= 16.
 
-Layout matches qsq_matmul: x (M, K), planes (K//32, 3, N) int32,
-scales (K//G, N) f32 -> out (M, N) f32.
+Layout matches qsq_matmul: x (M, K), planes (K//32, 3, N) int32 (or
+(3, K//32, N) when ``plane_major``), scales (K//G, N) f32 -> out (M, N)
+f32.  ``sign_mag``/``plane_major``/``demand_drop`` follow the qsq_matmul
+contract; since decode is weight-stream bound, demand-shortened plane-major
+reads cut the dominant roofline term almost linearly in planes demanded.
 """
 from __future__ import annotations
 
@@ -31,13 +34,16 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.qsq_matmul import (
-    _COMPILER_PARAMS, PLANE, _decode_codes, _unpack_planes,
+    _COMPILER_PARAMS, PLANE, _check_planes_shape, _decoder, _planes_spec,
+    _unpack,
 )
 from repro.kernels.ref import MASK_VARIANTS
 
 
 def _qsq_matvec_kernel(
-    x_ref, planes_ref, scales_ref, o_ref, acc_ref, *, bk: int, group_size: int, nk: int
+    x_ref, planes_ref, scales_ref, o_ref, acc_ref, *,
+    bk: int, group_size: int, nk: int, sign_mag: bool, plane_major: bool,
+    n_planes: int,
 ):
     bn = o_ref.shape[1]
     k = pl.program_id(1)
@@ -46,9 +52,9 @@ def _qsq_matvec_kernel(
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    codes = _unpack_planes(planes_ref[...], bk, bn)           # (bk, bn) int32
+    codes = _unpack(planes_ref[...], bk, bn, plane_major, n_planes)
     # scales folded into the unpack: levels scale while still in VREGs
-    levels = _decode_codes(codes).astype(jnp.float32)
+    levels = _decoder(sign_mag)(codes).astype(jnp.float32)
     ng = bk // group_size
     w = (levels.reshape(ng, group_size, bn)
          * scales_ref[...][:, None, :]).reshape(bk, bn)
@@ -62,15 +68,20 @@ def _qsq_matvec_kernel(
 
 
 def _qsq_matvec_masked_kernel(
-    xs_ref, planes_ref, scales_ref, o_ref, acc_ref, *, bk: int, group_size: int, nk: int
+    xs_ref, planes_ref, scales_ref, o_ref, acc_ref, *,
+    bk: int, group_size: int, nk: int, sign_mag: bool, plane_major: bool,
+    demand_drop: int,
 ):
-    """Per-row plane-masked GEMV: xs_ref (3, M, bk) carries x pre-split by
-    mask variant (rows of other variants zeroed).  The weight tile streams
-    ONCE; it is decoded under each of the three static plane masks in VREGs
-    (``codes & mask`` — a dropped plane is a masked term of the unpack) and
-    each variant contracts its own x rows.  A row's accumulator only ever
-    receives its variant's product plus exact zeros, so per-row output is
-    bit-identical to the unmasked kernel on plane-truncated weights."""
+    """Per-row plane-masked GEMV: xs_ref (3 - demand_drop, M, bk) carries x
+    pre-split by mask variant (rows of other variants zeroed).  The weight
+    tile streams ONCE; it is decoded under each demanded static plane mask
+    in VREGs (``codes & mask`` — a dropped plane is a masked term of the
+    unpack) and each variant contracts its own x rows.  A row's accumulator
+    only ever receives its variant's product plus exact zeros, so per-row
+    output is bit-identical to the unmasked kernel on plane-truncated
+    weights.  ``demand_drop`` prunes variants no live row selects; with
+    ``plane_major`` the streamed weight block also shrinks to the demanded
+    planes."""
     bn = o_ref.shape[1]
     k = pl.program_id(1)
 
@@ -78,12 +89,13 @@ def _qsq_matvec_masked_kernel(
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    codes = _unpack_planes(planes_ref[...], bk, bn)           # (bk, bn) int32
+    codes = _unpack(planes_ref[...], bk, bn, plane_major, 3 - demand_drop)
+    decode = _decoder(sign_mag)
     ng = bk // group_size
     sc = scales_ref[...]
     acc = None
-    for i, mask in enumerate(MASK_VARIANTS):
-        levels = _decode_codes(codes & mask).astype(jnp.float32)
+    for i, mask in enumerate(MASK_VARIANTS[demand_drop:]):
+        levels = decode(codes & mask).astype(jnp.float32)
         w = (levels.reshape(ng, group_size, bn) * sc[:, None, :]).reshape(bk, bn)
         d = jnp.dot(
             xs_ref[i], w.astype(xs_ref.dtype), preferred_element_type=jnp.float32
@@ -97,7 +109,8 @@ def _qsq_matvec_masked_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("group_size", "bk", "bn", "interpret")
+    jax.jit, static_argnames=("group_size", "bk", "bn", "interpret",
+                              "sign_mag", "plane_major", "demand_drop")
 )
 def qsq_matvec_masked(
     xs: jax.Array,
@@ -108,18 +121,26 @@ def qsq_matvec_masked(
     bk: int = 1024,
     bn: int = 256,
     interpret: bool = False,
+    sign_mag: bool = False,
+    plane_major: bool = False,
+    demand_drop: int = 0,
 ) -> jax.Array:
-    """Plane-masked sibling of :func:`qsq_matvec`: xs (3, M, K) -> (M, N).
+    """Plane-masked sibling of :func:`qsq_matvec`:
+    xs (3 - demand_drop, M, K) -> (M, N).
 
-    xs[i] holds the x rows whose plane mask is ``MASK_VARIANTS[i]`` (other
-    rows zero); the dispatcher builds it from the per-row plane_mask
-    operand.  Same tiling contract as the unmasked kernel."""
+    xs[i] holds the x rows whose plane mask is
+    ``MASK_VARIANTS[demand_drop + i]`` (other rows zero); the dispatcher
+    builds it from the per-row plane_mask operand.  Same tiling contract as
+    the unmasked kernel."""
     nv, m, kdim = xs.shape
     n = planes.shape[-1]
-    if nv != len(MASK_VARIANTS):
-        raise ValueError(f"xs leading dim {nv} != {len(MASK_VARIANTS)} mask variants")
-    if planes.shape != (kdim // PLANE, 3, n):
-        raise ValueError(f"planes shape {planes.shape} != {(kdim // PLANE, 3, n)}")
+    if not 0 <= demand_drop <= 2:
+        raise ValueError(f"demand_drop must be 0..2, got {demand_drop}")
+    n_planes = 3 - demand_drop
+    if nv != n_planes:
+        raise ValueError(
+            f"xs leading dim {nv} != {n_planes} demanded mask variants")
+    _check_planes_shape(planes, kdim, n, plane_major)
     if scales.shape != (kdim // group_size, n):
         raise ValueError(f"scales shape {scales.shape} != {(kdim // group_size, n)}")
     bk, bn = min(bk, kdim), min(bn, n)
@@ -131,14 +152,16 @@ def qsq_matvec_masked(
     nk = kdim // bk
     grid = (n // bn, nk)
     kernel = functools.partial(
-        _qsq_matvec_masked_kernel, bk=bk, group_size=group_size, nk=nk
+        _qsq_matvec_masked_kernel, bk=bk, group_size=group_size, nk=nk,
+        sign_mag=sign_mag, plane_major=plane_major, demand_drop=demand_drop
     )
+    pshape, pmap = _planes_spec(plane_major, n_planes, bk, bn)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((len(MASK_VARIANTS), m, bk), lambda j, k: (0, 0, k)),
-            pl.BlockSpec((bk // PLANE, 3, bn), lambda j, k: (k, 0, j)),
+            pl.BlockSpec((nv, m, bk), lambda j, k: (0, 0, k)),
+            pl.BlockSpec(pshape, pmap),
             pl.BlockSpec((bk // group_size, bn), lambda j, k: (k, j)),
         ],
         out_specs=pl.BlockSpec((m, bn), lambda j, k: (0, j)),
@@ -150,7 +173,8 @@ def qsq_matvec_masked(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("group_size", "bk", "bn", "interpret")
+    jax.jit, static_argnames=("group_size", "bk", "bn", "interpret",
+                              "sign_mag", "plane_major", "demand_drop")
 )
 def qsq_matvec(
     x: jax.Array,
@@ -161,6 +185,9 @@ def qsq_matvec(
     bk: int = 1024,
     bn: int = 256,
     interpret: bool = False,
+    sign_mag: bool = False,
+    plane_major: bool = False,
+    demand_drop: int = 0,
 ) -> jax.Array:
     """Small-M fused 3-bit dequant matmul: x (M,K) @ decode(planes, scales).
 
@@ -169,8 +196,12 @@ def qsq_matvec(
     """
     m, kdim = x.shape
     n = planes.shape[-1]
-    if planes.shape != (kdim // PLANE, 3, n):
-        raise ValueError(f"planes shape {planes.shape} != {(kdim // PLANE, 3, n)}")
+    if not 0 <= demand_drop <= 2:
+        raise ValueError(f"demand_drop must be 0..2, got {demand_drop}")
+    if demand_drop and not plane_major:
+        raise ValueError("demand_drop requires the plane-major layout")
+    n_planes = 3 - demand_drop
+    _check_planes_shape(planes, kdim, n, plane_major)
     if scales.shape != (kdim // group_size, n):
         raise ValueError(f"scales shape {scales.shape} != {(kdim // group_size, n)}")
     bk, bn = min(bk, kdim), min(bn, n)
@@ -182,14 +213,16 @@ def qsq_matvec(
     nk = kdim // bk
     grid = (n // bn, nk)
     kernel = functools.partial(
-        _qsq_matvec_kernel, bk=bk, group_size=group_size, nk=nk
+        _qsq_matvec_kernel, bk=bk, group_size=group_size, nk=nk,
+        sign_mag=sign_mag, plane_major=plane_major, n_planes=n_planes
     )
+    pshape, pmap = _planes_spec(plane_major, n_planes, bk, bn)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((m, bk), lambda j, k: (0, k)),
-            pl.BlockSpec((bk // PLANE, 3, bn), lambda j, k: (k, 0, j)),
+            pl.BlockSpec(pshape, pmap),
             pl.BlockSpec((bk // group_size, bn), lambda j, k: (k, j)),
         ],
         out_specs=pl.BlockSpec((m, bn), lambda j, k: (0, j)),

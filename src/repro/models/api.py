@@ -86,10 +86,12 @@ class Model:
         tokens = batch["tokens"]
         active = batch.get("active")  # (B,) live-slot mask: continuous batching
         tiers = batch.get("tiers")    # (B,) per-slot quality-tier indices
+        demand = batch.get("demand")  # static plane-demand floor (python int)
         if f in ("dense", "moe", "vlm"):
             return transformer.lm_decode(params, self.cfg, cache, tokens,
-                                         active=active, tiers=tiers)
-        if active is not None or tiers is not None:
+                                         active=active, tiers=tiers,
+                                         demand=demand)
+        if active is not None or tiers is not None or demand is not None:
             raise ValueError(
                 f"per-slot active masks / quality tiers (continuous "
                 f"batching) are only supported by attention families, "
@@ -103,7 +105,8 @@ class Model:
             return encdec.encdec_decode(params, self.cfg, cache, tokens)
         raise ValueError(f)
 
-    def prefill(self, params, cache, tokens, lengths=None, tiers=None):
+    def prefill(self, params, cache, tokens, lengths=None, tiers=None,
+                demand=None):
         """Prime a decode cache for whole (B, S) left-padded prompts.
 
         Attention families run ONE full-sequence causal forward (packed
@@ -112,7 +115,10 @@ class Model:
         padding beyond it is masked out of the KV cache.  Defaults to
         "no padding" (every slot length S).  ``tiers`` (B,) primes each
         slot at its own quality tier (per-row plane masks on packed
-        weights; attention families only).  Returns (cache, last_logits).
+        weights; attention families only).  ``demand`` (static python int)
+        is the batch plane-demand floor: packed plane-major weights only
+        stream the planes some slot's tier keeps.  Returns
+        (cache, last_logits).
         ``params`` may be any WeightStore mix — dense arrays, QSQ levels,
         or packed bit-planes."""
         from repro.train.step import make_cache_prefill_step
@@ -120,7 +126,7 @@ class Model:
         if lengths is None:
             lengths = jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)
         return make_cache_prefill_step(self)(params, cache, tokens, lengths,
-                                             tiers)
+                                             tiers, demand)
 
     def cache_insert_slot(self, live, one, slot):
         """Write a single-slot prefilled cache into lane ``slot`` of a live

@@ -37,7 +37,8 @@ def W(p):
     return p
 
 
-def matvec(p, x: jax.Array, tiers: jax.Array | None = None) -> jax.Array:
+def matvec(p, x: jax.Array, tiers: jax.Array | None = None,
+           demand: int | None = None) -> jax.Array:
     """x (..., K) contracted with weight p (K, *rest) -> (..., *rest).
 
     WeightStore leaves dispatch their own matmul (fused dequant-matmul for
@@ -49,12 +50,18 @@ def matvec(p, x: jax.Array, tiers: jax.Array | None = None) -> jax.Array:
     ``tier_drops`` vector: each batch row contracts against the weight at
     ITS tier, bit-identical to serving that row from plane-truncated
     params.  Leaves without a tier vector (never truncated by any tier, or
-    dense) ignore ``tiers`` entirely."""
+    dense) ignore ``tiers`` entirely.
+
+    ``demand`` (static python int) is the batch plane-demand floor — the
+    minimum live tier index this tick.  Packed leaves turn it into a
+    per-leaf ``demand_drop`` so the kernel only streams the planes some
+    live row actually wants (see ``PackedWeight.matmul``)."""
     if is_store(p):
         if tiers is not None:
             masks = getattr(p, "tier_plane_masks", lambda: None)()
             if masks is not None:
-                return p.matmul(x, plane_mask=masks[tiers])
+                return p.matmul(x, plane_mask=masks[tiers],
+                                demand_tier=demand)
         return p.matmul(x)
     return jnp.tensordot(x, p.astype(x.dtype), axes=1)
 
@@ -116,10 +123,10 @@ def attn_descs(d: int, n_heads: int, n_kv: int, head_dim: int,
 
 
 def _project_qkv(p: dict, x: jax.Array, positions, theta: float,
-                 tiers: jax.Array | None = None):
-    q = matvec(p["wq"], x, tiers)  # (b, s, h, hd)
-    k = matvec(p["wk"], x, tiers)
-    v = matvec(p["wv"], x, tiers)
+                 tiers: jax.Array | None = None, demand: int | None = None):
+    q = matvec(p["wq"], x, tiers, demand)  # (b, s, h, hd)
+    k = matvec(p["wk"], x, tiers, demand)
+    v = matvec(p["wv"], x, tiers, demand)
     if "q_norm" in p:
         q = rmsnorm(q, p["q_norm"])
         k = rmsnorm(k, p["k_norm"])
@@ -256,6 +263,7 @@ def decode_attention(
     use_rope: bool = True,
     active: jax.Array | None = None,
     tiers: jax.Array | None = None,
+    demand: int | None = None,
 ) -> tuple[jax.Array, KVCache]:
     """One-token decode: x (B, 1, d); cache holds T past positions.
 
@@ -266,11 +274,12 @@ def decode_attention(
     advance, so it is a dead lane whose writes land on a yet-unused index
     of its own (dead) lane and whose output is discarded by the caller.
     ``tiers`` (B,) selects each slot's quality tier inside the packed
-    projections (per-row plane masks — see :func:`matvec`)."""
+    projections (per-row plane masks — see :func:`matvec`); ``demand``
+    (static) is the batch plane-demand floor the kernels stream by."""
     b = x.shape[0]
     t = cache.k.shape[1]
     positions = (cache.pos - cache.pad)[:, None] if use_rope else None
-    q, k_new, v_new = _project_qkv(p, x, positions, theta, tiers)
+    q, k_new, v_new = _project_qkv(p, x, positions, theta, tiers, demand)
 
     slot = cache.pos % t if window is not None else jnp.minimum(cache.pos, t - 1)
     bidx = jnp.arange(b)
@@ -304,6 +313,7 @@ def prefill_attention(
     theta: float = 10000.0,
     window: int | None = None,
     tiers: jax.Array | None = None,
+    demand: int | None = None,
 ) -> tuple[jax.Array, KVCache]:
     """Full-sequence cache prefill: x (B, S, d) over the whole left-padded
     prompt in ONE dispatch (vs one decode_attention call per token).
@@ -317,7 +327,7 @@ def prefill_attention(
     cache with per-slot pos = S, pad recorded)."""
     b, s, _ = x.shape
     t = cache.k.shape[1]
-    q, k_new, v_new = _project_qkv(p, x, positions, theta, tiers)
+    q, k_new, v_new = _project_qkv(p, x, positions, theta, tiers, demand)
 
     kj = jnp.arange(s)[None, None, :]
     mask = causal_mask(s, s, window=window)[None] & (kj >= pad[:, None, None])
@@ -370,11 +380,13 @@ def mlp_descs(d: int, ff: int, dtype=jnp.float32) -> dict:
     }
 
 
-def mlp(p: dict, x: jax.Array, tiers: jax.Array | None = None) -> jax.Array:
-    g = jax.nn.silu(matvec(p["wg"], x, tiers))
-    u = matvec(p["wu"], x, tiers)
+def mlp(p: dict, x: jax.Array, tiers: jax.Array | None = None,
+        demand: int | None = None) -> jax.Array:
+    g = jax.nn.silu(matvec(p["wg"], x, tiers, demand))
+    u = matvec(p["wu"], x, tiers, demand)
     g = constrain(g, ("batch", "seq_act", "mlp"))
-    return constrain(matvec(p["wd"], g * u, tiers), ("batch", "seq_act", None))
+    return constrain(matvec(p["wd"], g * u, tiers, demand),
+                     ("batch", "seq_act", None))
 
 
 # --------------------------------------------------------------------------
@@ -527,8 +539,9 @@ def embed(p: dict, tokens: jax.Array, dtype) -> jax.Array:
     return constrain(x, ("batch", "seq_act", None))
 
 
-def lm_head(p: dict, x: jax.Array, tiers: jax.Array | None = None) -> jax.Array:
-    logits = matvec(p["head"], x, tiers).astype(jnp.float32)
+def lm_head(p: dict, x: jax.Array, tiers: jax.Array | None = None,
+            demand: int | None = None) -> jax.Array:
+    logits = matvec(p["head"], x, tiers, demand).astype(jnp.float32)
     return constrain(logits, ("batch", "seq_act", "vocab"))
 
 

@@ -164,6 +164,7 @@ def lm_decode(
     tokens: jax.Array,  # (B, 1)
     active: jax.Array | None = None,  # (B,) live-slot mask (continuous batching)
     tiers: jax.Array | None = None,  # (B,) per-slot quality-tier indices
+    demand: int | None = None,  # static batch plane-demand floor (min live tier)
 ) -> tuple[jax.Array, LMCache]:
     x = L.embed(params["embed"], tokens, cfg.dtype)
 
@@ -172,7 +173,7 @@ def lm_decode(
         h, c2 = L.decode_attention(
             bp["attn"], L.rmsnorm(x, bp["ln1"]), c,
             theta=cfg.rope_theta, window=cfg.window, active=active,
-            tiers=tiers,
+            tiers=tiers, demand=demand,
         )
         x = x + h
         y = L.rmsnorm(x, bp["ln2"])
@@ -181,7 +182,7 @@ def lm_decode(
                          capacity_factor=cfg.moe.capacity_factor,
                          active=active)
         else:
-            f = L.mlp(bp["mlp"], y, tiers=tiers)
+            f = L.mlp(bp["mlp"], y, tiers=tiers, demand=demand)
         return x + f, c2
 
     if not cfg.cross_every:
@@ -212,7 +213,7 @@ def lm_decode(
         new_cache = LMCache(kv=new_kv, cross_kv=cache.cross_kv)
 
     x = L.rmsnorm(x, params["final_norm"])
-    return L.lm_head(params["embed"], x, tiers=tiers), new_cache
+    return L.lm_head(params["embed"], x, tiers=tiers, demand=demand), new_cache
 
 
 def lm_prefill(
@@ -222,6 +223,7 @@ def lm_prefill(
     tokens: jax.Array,   # (B, S) left-padded prompts
     lengths: jax.Array,  # (B,) real token count per slot
     tiers: jax.Array | None = None,  # (B,) per-slot quality-tier indices
+    demand: int | None = None,  # static plane-demand floor for this prompt batch
 ) -> tuple[LMCache, jax.Array]:
     """One-dispatch cache prefill: the whole left-padded prompt runs through
     a single causal-masked forward, so packed weights stream ONCE per
@@ -246,6 +248,7 @@ def lm_prefill(
             bp["attn"], L.rmsnorm(x, bp["ln1"]), c,
             positions=positions, pad=pad,
             theta=cfg.rope_theta, window=cfg.window, tiers=tiers,
+            demand=demand,
         )
         x = constrain(x + h, ("batch", "seq_act", None))
         y = L.rmsnorm(x, bp["ln2"])
@@ -253,12 +256,13 @@ def lm_prefill(
             f, _ = L.moe(bp["moe"], y, top_k=cfg.moe.top_k,
                          capacity_factor=cfg.moe.capacity_factor)
         else:
-            f = L.mlp(bp["mlp"], y, tiers=tiers)
+            f = L.mlp(bp["mlp"], y, tiers=tiers, demand=demand)
         return x + f, c2
 
     x, new_kv = xscan(body, x, (params["blocks"], cache.kv))
     x = L.rmsnorm(x[:, -1:], params["final_norm"])  # only the last position
-    logits = L.lm_head(params["embed"], x, tiers=tiers)  # feeds the first sample
+    logits = L.lm_head(params["embed"], x, tiers=tiers,
+                       demand=demand)  # feeds the first sample
     return LMCache(kv=new_kv), logits[:, 0]
 
 

@@ -36,8 +36,8 @@ import numpy as np
 from repro.core import codec
 from repro.core.policy import QuantPolicy, path_str
 from repro.core.qsq import (
-    LEVEL_TABLE, QSQTensor, _quantize_impl, codes_to_levels,
-    levels_to_codes, quantize,
+    LEVEL_TABLE, SM_LEVEL_TABLE, QSQTensor, _quantize_impl, codes_to_levels,
+    levels_to_codes, levels_to_smcodes, quantize, smcodes_to_levels,
 )
 
 # Logical axes a 2-D-view matmul contracts over, and path fragments that
@@ -115,19 +115,23 @@ def max_level_delta(drop: int) -> int:
 
     The per-weight reconstruction error of a truncated tier is bounded by
     ``max_level_delta(drop) * alpha`` for each group's scalar alpha (0 for
-    drop=0, 2 for drop=1, 4 for drop=2 over the valid Table II codes).
+    drop=0, 2 for drop=1, 4 for drop=2), for either code format.
 
-    Note the asymmetry inherited from the Table II layout (negatives are
-    offset codes, not sign-magnitude): zero-filled decode after drop=1 maps
-    +1 -> 0 and +4 -> +2 but keeps -1 and -4 exact, so truncated layers
-    lean slightly negative.  The bound above covers both signs; a
-    sign-magnitude plane recoding that truncates symmetrically is a
-    ROADMAP follow-up.
+    Under the sign-magnitude recode (wire v2, the packed serving format)
+    the bit-2 sign plane survives every mask, so truncation degrades + and
+    - levels identically: drop=1 maps +-1 -> 0 and +-4 -> +-2.  The legacy
+    Table II offset layout (negatives are offset codes) truncates
+    asymmetrically (+4 -> +2 but -4 exact at drop=1); the bound below is
+    the max over both formats' valid codes, so it holds for legacy
+    artifacts too.
     """
     mask = _trunc_code_mask(drop)
+    sm_valid = (0, 1, 2, 3, 5, 6, 7)  # 4 (-0) unused on valid streams
     return int(max(
-        abs(int(LEVEL_TABLE[c]) - int(LEVEL_TABLE[c & mask]))
-        for c in range(7)  # 7 itself is unused on valid streams
+        max(abs(int(LEVEL_TABLE[c]) - int(LEVEL_TABLE[c & mask]))
+            for c in range(7)),  # 7 itself is unused on valid streams
+        max(abs(int(SM_LEVEL_TABLE[c]) - int(SM_LEVEL_TABLE[c & mask]))
+            for c in sm_valid),
     ))
 
 
@@ -246,31 +250,37 @@ class QSQWeight(QSQTensor, WeightStore):
     def truncate(self, drop: int) -> "QSQWeight":
         """Level-space LSB plane truncation (see :func:`max_level_delta`).
 
-        Maps each level through its Table II code with the ``drop`` lowest
-        code bits zeroed — bit-identical to ``pack().truncate(drop)`` but
-        applicable to any grouping (conv views included).  Scales are kept;
-        no re-quantization happens.
+        Maps each level through its sign-magnitude code (wire v2) with the
+        ``drop`` lowest code bits zeroed — bit-identical to
+        ``pack().truncate(drop)`` but applicable to any grouping (conv
+        views included).  The sign plane survives every mask, so + and -
+        levels degrade alike.  Scales are kept; no re-quantization happens.
         """
         if drop == 0:
             return self
         mask = _trunc_code_mask(drop)
-        levels = codes_to_levels(levels_to_codes(self.levels) & mask)
+        levels = smcodes_to_levels(levels_to_smcodes(self.levels) & mask)
         return dataclasses.replace(self, levels=levels)
 
-    def pack(self) -> "PackedWeight":
-        """-> bit-plane form.  The grouped axis length must be 32-aligned."""
+    def pack(self, sign_mag: bool = True) -> "PackedWeight":
+        """-> bit-plane form.  The grouped axis length must be 32-aligned.
+
+        Planes carry sign-magnitude codes by default (wire v2: symmetric
+        truncation); pass ``sign_mag=False`` for the legacy Table II
+        planes."""
         if self.conv_shape is not None:
             raise ValueError("conv-view QSQ weights are not kernel-servable")
+        to_codes = levels_to_smcodes if sign_mag else levels_to_codes
 
         def enc(lev):
-            return codec.pack_bitplane(levels_to_codes(lev))
+            return codec.pack_bitplane(to_codes(lev))
 
         fn = enc
         for _ in range(self._stack()):
             fn = jax.vmap(fn)
         return PackedWeight(planes=fn(self.levels), scales=self.scales,
                             group_size=self.group_size, phi=self.phi,
-                            rest_ndim=self._rest())
+                            rest_ndim=self._rest(), sign_mag=sign_mag)
 
     # nbits() inherited from QSQTensor (same accounting for any grouping).
 
@@ -302,6 +312,14 @@ class PackedWeight(WeightStore):
     batch serves every row at its own tier with no param-tree swap and no
     retrace.  Being aux (not data), it is stack-invariant under layer
     scans, exactly like the grouping metadata.
+
+    ``sign_mag`` marks planes carrying sign-magnitude codes (wire v2);
+    default False keeps directly-constructed Table II planes decoding as
+    before.  ``plane_major`` marks the demand-streaming layout
+    (*stack, 3, K//32, *rest), plane axis outermost after the stack and
+    MSB first — the planes a truncated tier keeps are a leading prefix, so
+    the fused kernel's HBM read shortens with demand
+    (:meth:`to_plane_major`).
     """
 
     planes: jax.Array
@@ -311,12 +329,14 @@ class PackedWeight(WeightStore):
     rest_ndim: int = 0
     n_planes: int = 3
     tier_drops: tuple[int, ...] | None = None
+    sign_mag: bool = False
+    plane_major: bool = False
     kind = "packed"
 
     def tree_flatten(self):
         return (self.planes, self.scales), (
             self.group_size, self.phi, self.rest_ndim, self.n_planes,
-            self.tier_drops,
+            self.tier_drops, self.sign_mag, self.plane_major,
         )
 
     @classmethod
@@ -324,7 +344,9 @@ class PackedWeight(WeightStore):
         planes, scales = children
         return cls(planes=planes, scales=scales, group_size=aux[0], phi=aux[1],
                    rest_ndim=aux[2], n_planes=aux[3] if len(aux) > 3 else 3,
-                   tier_drops=aux[4] if len(aux) > 4 else None)
+                   tier_drops=aux[4] if len(aux) > 4 else None,
+                   sign_mag=bool(aux[5]) if len(aux) > 5 else False,
+                   plane_major=bool(aux[6]) if len(aux) > 6 else False)
 
     def _stack(self) -> int:
         return self.planes.ndim - 2 - self.rest_ndim
@@ -333,8 +355,27 @@ class PackedWeight(WeightStore):
     def shape(self):
         """Logical dense shape."""
         st = self._stack()
-        k = self.planes.shape[st] * codec.PLANE_GROUP
+        k_axis = st + 1 if self.plane_major else st
+        k = self.planes.shape[k_axis] * codec.PLANE_GROUP
         return self.planes.shape[:st] + (k,) + self.planes.shape[st + 2:]
+
+    def to_plane_major(self) -> "PackedWeight":
+        """-> the demand-streaming layout: plane axis before K//32, MSB
+        first, so a dropped trailing plane shortens the kernel's HBM read
+        (instead of being masked after the load).  Lossless; idempotent."""
+        if self.plane_major:
+            return self
+        st = self._stack()
+        pm = jnp.flip(jnp.moveaxis(self.planes, st + 1, st), axis=st)
+        return dataclasses.replace(self, planes=pm, plane_major=True)
+
+    def to_interleaved(self) -> "PackedWeight":
+        """Inverse of :meth:`to_plane_major` (the legacy layout)."""
+        if not self.plane_major:
+            return self
+        st = self._stack()
+        il = jnp.moveaxis(jnp.flip(self.planes, axis=st), st, st + 1)
+        return dataclasses.replace(self, planes=il, plane_major=False)
 
     def truncate(self, drop: int) -> "PackedWeight":
         """Plane-truncated view: zero the ``drop`` LSB bit-planes.
@@ -343,21 +384,32 @@ class PackedWeight(WeightStore):
         re-resolving a tier never deepens an earlier truncation by accident.
         The view's ``as_dense``/``matmul``/``nbits`` all reflect the
         truncation; the error vs the full-quality weight is bounded by
-        ``max_level_delta(drop) * alpha`` per group.
+        ``max_level_delta(drop) * alpha`` per group.  On a plane-major leaf
+        the zeroed planes are the trailing ones, which the demand-routed
+        kernel then never reads at all.
         """
         if drop == 0:
             return self
         if not 0 < drop < 3:
             raise ValueError(f"drop must be 0, 1 or 2; got {drop}")
-        idx = (slice(None),) * (self._stack() + 1) + (slice(0, drop),)
+        st = self._stack()
+        if self.plane_major:
+            idx = (slice(None),) * st + (slice(3 - drop, 3),)
+        else:
+            idx = (slice(None),) * (st + 1) + (slice(0, drop),)
         return dataclasses.replace(
             self, planes=self.planes.at[idx].set(0),
             n_planes=min(self.n_planes, 3 - drop),
         )
 
     def unpack(self) -> QSQWeight:
-        def dec(pl_):
-            return codes_to_levels(codec.unpack_bitplane(pl_))
+        to_levels = smcodes_to_levels if self.sign_mag else codes_to_levels
+        if self.plane_major:
+            def dec(pl_):
+                return to_levels(codec.unpack_bitplane_major(pl_))
+        else:
+            def dec(pl_):
+                return to_levels(codec.unpack_bitplane(pl_))
 
         fn = dec
         for _ in range(self._stack()):
@@ -380,7 +432,23 @@ class PackedWeight(WeightStore):
             [_trunc_code_mask(d) for d in self.tier_drops], jnp.int32
         )
 
-    def matmul(self, x, plane_mask: jax.Array | None = None):
+    def demand_drop(self, demand_tier: int | None = None) -> int:
+        """Static plane-drop floor for a batch whose minimum live tier index
+        is ``demand_tier``: every live row at tier >= demand_tier drops at
+        least ``min(tier_drops[demand_tier:])`` planes from this leaf, so
+        the kernel can skip that many trailing planes outright.  Physical
+        truncation (``n_planes < 3``) widens the floor on plane-major
+        leaves, where skipping actually shortens the HBM read."""
+        drop = 0
+        if demand_tier is not None and self.tier_drops:
+            t = min(max(int(demand_tier), 0), len(self.tier_drops) - 1)
+            drop = min(self.tier_drops[t:])
+        if self.plane_major:
+            drop = max(drop, 3 - self.n_planes)
+        return int(drop)
+
+    def matmul(self, x, plane_mask: jax.Array | None = None,
+               demand_tier: int | None = None):
         """Contract x (..., K) with this weight; optionally quality-tiered
         PER ROW.
 
@@ -388,14 +456,23 @@ class PackedWeight(WeightStore):
         (shape broadcastable over x's remaining lead dims, e.g. (B,) for a
         (B, S, K) x): row b's output is bit-identical to
         ``self.truncate(drop_b).matmul(x[b])`` — the tier dial as a masked
-        term of the kernel's unpack, not a param swap."""
+        term of the kernel's unpack, not a param swap.
+
+        ``demand_tier`` (static python int) is the batch's minimum live
+        tier index; combined with ``tier_drops`` it bounds how many
+        trailing planes no row wants (:meth:`demand_drop`), and on
+        plane-major leaves the kernel then streams only the demanded
+        planes from HBM.  Every row's ``plane_mask`` must drop at least
+        ``demand_drop`` planes — rows demanding a pruned variant read as
+        zeros."""
         if self._stack():
             raise ValueError(
                 "matmul on a stacked PackedWeight — slice the stack axis "
                 "(e.g. via the layer scan) first"
             )
         rest = self.planes.shape[2:]
-        k = self.planes.shape[0] * codec.PLANE_GROUP
+        k_words = self.planes.shape[1 if self.plane_major else 0]
+        k = k_words * codec.PLANE_GROUP
         if x.shape[-1] != k:
             raise ValueError(f"x last dim {x.shape[-1]} != K {k}")
         n = int(np.prod(rest)) if rest else 1
@@ -419,12 +496,15 @@ class PackedWeight(WeightStore):
         # switch is off.  The dense weight is never materialized.
         from repro.kernels import dispatch  # deferred: pallas off cold paths
 
+        pshape = (3, k_words, n) if self.plane_major else (k_words, 3, n)
         out = dispatch.packed_matmul(
             x.reshape(m, k),
-            self.planes.reshape(k // codec.PLANE_GROUP, 3, n),
+            self.planes.reshape(pshape),
             self.scales.reshape(ng, n),
             group_size=g, use_kernel=_PACKED_MATMUL_KERNEL,
             plane_mask=plane_mask,
+            sign_mag=self.sign_mag, plane_major=self.plane_major,
+            demand_drop=self.demand_drop(demand_tier),
         )
         return out.astype(x.dtype).reshape(*lead, *rest)
 
@@ -571,7 +651,10 @@ def serve_tree(tree, descs, dtype=None, drop_map=None, tier_drop_map=None):
         p = path_str(path)
         if packable_leaf(p, leaf, desc):
             n_packed += 1
-            pw = leaf.pack().truncate(drop_map.get(p, 0))
+            # sign-magnitude planes in the plane-major layout: truncation is
+            # symmetric in sign, and dropped/undemanded trailing planes
+            # shorten the kernel's HBM read instead of being masked.
+            pw = leaf.pack().truncate(drop_map.get(p, 0)).to_plane_major()
             if p in tier_drop_map:
                 pw = dataclasses.replace(
                     pw, tier_drops=tuple(int(d) for d in tier_drop_map[p])
@@ -636,14 +719,23 @@ def tree_bits_report(tree) -> dict:
 # --------------------------------------------------------------------------
 WIRE_FLAG = "__qsq__"
 
+# Wire code formats: 1 = Table II offset codes (legacy, implied when the
+# key is absent), 2 = sign-magnitude codes (symmetric plane truncation).
+WIRE_CODE_FMT = 2
+
 
 def is_wire_leaf(x) -> bool:
     return isinstance(x, dict) and bool(x.get(WIRE_FLAG, False))
 
 
 def wire_encode_leaf(q: QSQTensor) -> dict:
-    """Any QSQTensor/QSQWeight -> the dense-packed 3-bit wire dict."""
-    codes = levels_to_codes(q.levels).reshape(-1)
+    """Any QSQTensor/QSQWeight -> the dense-packed 3-bit wire dict.
+
+    Wire v2: codes are sign-magnitude (``code_fmt: 2``), so an edge
+    receiver can truncate LSB planes off the stream with + and - levels
+    degrading alike.  :func:`wire_decode_leaf` still reads legacy v1
+    (Table II) dicts, which carry no ``code_fmt`` key."""
+    codes = levels_to_smcodes(q.levels).reshape(-1)
     rest = q.rest_ndim if isinstance(q, QSQWeight) and q.rest_ndim is not None \
         else q.levels.ndim - 1
     return {
@@ -655,22 +747,29 @@ def wire_encode_leaf(q: QSQTensor) -> dict:
         "phi": int(q.phi),
         "rest_ndim": int(rest),
         "conv_shape": tuple(int(s) for s in q.conv_shape) if q.conv_shape else (),
+        "code_fmt": WIRE_CODE_FMT,
     }
 
 
 def wire_decode_leaf(d: dict) -> QSQWeight:
     """Inverse of :func:`wire_encode_leaf` (lossless: codes + scales exact).
 
-    Tolerates legacy wire dicts (no rest_ndim => axis-0 grouping) and
-    npz-roundtripped metadata (numpy scalars/arrays instead of ints/tuples).
+    Tolerates legacy wire dicts (no rest_ndim => axis-0 grouping; no
+    code_fmt => Table II offset codes) and npz-roundtripped metadata
+    (numpy scalars/arrays instead of ints/tuples).
     """
     shape = tuple(int(s) for s in np.asarray(d["shape"]).reshape(-1))
     n = int(np.prod(shape)) if shape else 1
     codes = codec.unpack_dense(jnp.asarray(d["packed"]), n).reshape(shape)
     conv = tuple(int(s) for s in np.asarray(d.get("conv_shape", ())).reshape(-1))
     rest = d.get("rest_ndim", None)
+    fmt_raw = d.get("code_fmt", None)
+    fmt = int(np.asarray(fmt_raw)) if fmt_raw is not None else 1
+    if fmt not in (1, WIRE_CODE_FMT):
+        raise ValueError(f"unknown wire code_fmt {fmt}")
+    to_levels = smcodes_to_levels if fmt == WIRE_CODE_FMT else codes_to_levels
     return QSQWeight(
-        levels=codes_to_levels(codes),
+        levels=to_levels(codes),
         scales=jnp.asarray(d["scales"]),
         group_size=int(d["group_size"]),
         phi=int(d["phi"]),

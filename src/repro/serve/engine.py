@@ -65,7 +65,7 @@ import numpy as np
 
 from repro.models.api import Model
 from repro.models.base import init_params
-from repro.serve.scheduler import Request, Scheduler
+from repro.serve.scheduler import Request, Scheduler, plane_demand
 from repro.train.step import (
     make_admit_step, make_cache_prefill_step, make_cont_decode_step,
     make_decode_loop, make_sample_decode_loop, make_serve_step,
@@ -113,6 +113,14 @@ class _Session:
         # changes are data changes, never retraces
         self.tiers = np.zeros((slots,), np.int32)
         self.step_idx = 0
+        # demand-streaming meter: packed weight-plane words the stream's
+        # dispatches read vs. what full-quality streaming would have read,
+        # and the tokens those dispatches emitted (host-side analytic
+        # accounting — the device program's reads are shaped by the same
+        # static demand, so the two agree by construction)
+        self.plane_words_read = 0
+        self.plane_words_full = 0
+        self.tokens_emitted = 0
 
 
 class ServeEngine:
@@ -131,10 +139,15 @@ class ServeEngine:
         self._prefill = jax.jit(make_cache_prefill_step(model))
         self._decode_loop = jax.jit(make_decode_loop(model))
         self._sample_loop = None  # jitted lazily; most engines stay greedy
-        # continuous-batching programs (attention families; traced lazily)
-        self._cont_step = jax.jit(make_cont_decode_step(model))
-        self._admit = jax.jit(make_admit_step(model))
+        # continuous-batching programs (attention families; traced lazily).
+        # ``demand`` — the batch plane-demand floor — is a STATIC argument:
+        # plane-major packed weights shorten their HBM reads per demand, so
+        # each distinct demand is its own trace, bounded by the tier count
+        self._cont_step = jax.jit(make_cont_decode_step(model),
+                                  static_argnums=(5,))
+        self._admit = jax.jit(make_admit_step(model), static_argnums=(7,))
         self._session: _Session | None = None
+        self._plane_words_cache: dict[int, tuple[int, int]] = {}
 
     # -- loading -----------------------------------------------------------
     @classmethod
@@ -219,6 +232,7 @@ class ServeEngine:
                 "requests; run_until_drained() (or poll results) first"
             )
         self._session = None
+        self._plane_words_cache.clear()  # params change: re-derive meter
         self.params, self.n_packed_leaves = self.artifact.serve_params(
             quality, packed=self.cfg.packed
         )
@@ -282,13 +296,66 @@ class ServeEngine:
         return s.sched.submit(prompt, max_new, arrival=s.step_idx,
                               quality=quality)
 
+    def _forward_plane_words(self, demand: int) -> tuple[int, int]:
+        """(words_read, words_full): packed weight-plane int32 words ONE
+        full forward streams at static plane-demand floor ``demand``, vs.
+        what it would stream reading every plane.  Analytic — derived from
+        the packed leaves' shapes and per-tier drop vectors, the same
+        quantities the demand-routed kernels shape their HBM reads by.
+        Interleaved leaves always stream all three planes (masking happens
+        post-load); plane-major leaves shorten the read."""
+        from repro.quant.store import PackedWeight
+
+        cached = self._plane_words_cache.get(demand)
+        if cached is not None:
+            return cached
+        read = full = 0
+        for leaf in jax.tree_util.tree_leaves(
+            self.params, is_leaf=lambda x: isinstance(x, PackedWeight)
+        ):
+            if not isinstance(leaf, PackedWeight):
+                continue
+            words = leaf.planes.size // 3  # int32 words per plane
+            full += 3 * words
+            n_read = (3 - leaf.demand_drop(demand)
+                      if leaf.plane_major else 3)
+            read += n_read * words
+        self._plane_words_cache[demand] = (read, full)
+        return read, full
+
+    def stream_stats(self) -> dict:
+        """Demand-streaming meter for the current continuous stream:
+        ``tokens`` emitted, packed weight-plane ``bytes_read`` the stream's
+        dispatches streamed, ``bytes_full`` a full-quality stream would
+        have, and ``bytes_per_token`` — the bench_serve headline number."""
+        s = self._session
+        if s is None or s.tokens_emitted == 0:
+            return {"tokens": 0, "bytes_read": 0, "bytes_full": 0,
+                    "bytes_per_token": 0.0, "read_frac": 1.0}
+        bytes_read = 4 * s.plane_words_read
+        bytes_full = 4 * s.plane_words_full
+        return {
+            "tokens": s.tokens_emitted,
+            "bytes_read": bytes_read,
+            "bytes_full": bytes_full,
+            "bytes_per_token": bytes_read / s.tokens_emitted,
+            "read_frac": bytes_read / bytes_full if bytes_full else 1.0,
+        }
+
     def step(self) -> None:
         """One scheduler iteration: admit queued requests into FREE slots
         (single-slot prefill + cache lane insert each, emitting the
         request's first token from the prefill logits), then ONE decode
         dispatch over all lanes at fixed width.  Requests that reach
         ``max_new`` are evicted — their slot is FREE for the next step's
-        admissions — and surface via :meth:`poll`."""
+        admissions — and surface via :meth:`poll`.
+
+        Weight-plane reads are DEMAND-DRIVEN: each admission prefills at
+        the request's own tier (its demand floor), and the decode dispatch
+        streams at the batch floor — the min live tier index
+        (:func:`~repro.serve.scheduler.plane_demand`) — so a lo-tier-heavy
+        batch reads a fraction of the weight bytes.  Demand is a static
+        jit argument; at most one retrace per distinct tier."""
         s = self._ensure_session()
         for slot, req in s.sched.admissible():
             s.sched.activate(slot, req, s.step_idx)
@@ -298,11 +365,17 @@ class ServeEngine:
             # one dispatch: prefill + lane insert + on-device argmax; the
             # host syncs on a single int32, not a (vocab,) logits row.
             # The prefill runs at the REQUEST's tier (per-row plane masks)
+            # and streams only the planes that tier demands.
+            demand = int(s.tiers[slot])
             s.cache, first = self._admit(
                 self.params, s.zero_slot_cache, s.cache, jnp.asarray(toks),
                 jnp.asarray([len(req.tokens)], jnp.int32), jnp.int32(slot),
-                jnp.asarray(s.tiers[slot:slot + 1]),
+                jnp.asarray(s.tiers[slot:slot + 1]), demand,
             )
+            r, f = self._forward_plane_words(demand)
+            s.plane_words_read += r
+            s.plane_words_full += f
+            s.tokens_emitted += 1
             first = int(first)
             s.sched.start_decoding(slot)
             s.cur[slot, 0] = first
@@ -312,10 +385,15 @@ class ServeEngine:
                 s.active[slot] = 1
         live = s.sched.decoding_slots()
         if live:
+            demand = plane_demand(s.tiers[slot] for slot in live)
             nxt, s.cache = self._cont_step(
                 self.params, s.cache, jnp.asarray(s.cur),
-                jnp.asarray(s.active), jnp.asarray(s.tiers),
+                jnp.asarray(s.active), jnp.asarray(s.tiers), demand,
             )
+            r, f = self._forward_plane_words(demand)
+            s.plane_words_read += r
+            s.plane_words_full += f
+            s.tokens_emitted += len(live)
             nxt = np.asarray(nxt)  # the step's one host sync
             for slot in live:
                 s.cur[slot, 0] = nxt[slot]

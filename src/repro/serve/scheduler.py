@@ -27,6 +27,25 @@ import enum
 from typing import Iterator, Sequence
 
 
+def plane_demand(live_tiers, default: int = 0) -> int:
+    """Batch plane-demand floor for one decode tick.
+
+    ``live_tiers`` are the quality-tier indices of the slots that will be
+    live lanes in the dispatch (lower index = higher quality = more
+    bit-planes kept).  The floor is their minimum: the batch must stream
+    every plane its most-demanding live slot keeps, and nothing more — the
+    OR of the live slots' plane masks collapses to the min tier index
+    because each packed leaf turns it into a per-leaf drop via a suffix
+    min over its tier-drop vector (``PackedWeight.demand_drop``), which
+    never under-reads a live tier even when a leaf's drops are
+    non-monotone.  The engine passes the result as a STATIC
+    jit argument, so distinct demands retrace once each, bounded by the
+    tier count rather than 2^planes.  With no live slots there is nothing
+    to stream; ``default`` keeps the return a valid dispatch key."""
+    tiers = [int(t) for t in live_tiers]
+    return min(tiers) if tiers else int(default)
+
+
 class SlotState(enum.Enum):
     FREE = "free"            # no request; a dead lane in the decode program
     PREFILLING = "prefilling"  # admission in flight: prompt -> cache lane

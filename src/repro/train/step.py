@@ -85,15 +85,16 @@ def make_cache_prefill_step(model: Model) -> Callable:
     if supports_fused_prefill(model):
         from repro.models import transformer
 
-        def prefill_step(params, cache, tokens, lengths, tiers=None):
+        def prefill_step(params, cache, tokens, lengths, tiers=None,
+                         demand=None):
             return transformer.lm_prefill(params, model.cfg, cache, tokens,
-                                          lengths, tiers=tiers)
+                                          lengths, tiers=tiers, demand=demand)
 
         return prefill_step
 
-    def prefill_step(params, cache, tokens, lengths, tiers=None):
+    def prefill_step(params, cache, tokens, lengths, tiers=None, demand=None):
         del lengths  # per-token scan: no pad isolation for recurrent state
-        if tiers is not None:
+        if tiers is not None or demand is not None:
             raise ValueError(
                 f"per-slot quality tiers need the fused attention prefill; "
                 f"family {model.cfg.family!r} serves one tier per engine"
@@ -113,18 +114,24 @@ def make_cache_prefill_step(model: Model) -> Callable:
 
 def make_admit_step(model: Model) -> Callable:
     """(params, zero_cache (batch-1), live_cache, toks (1, P), lens (1,),
-    slot (), tier (1,)) -> (live_cache, first_token ()).
+    slot (), tier (1,), demand (static int)) -> (live_cache, first_token ()).
 
     One jitted dispatch per continuous-batching admission: single-slot
     prefill on the zeroed batch-1 cache — at the request's OWN quality
     tier (``tier`` indexes each packed weight's tier-drop vector) — lane
     insert into the live cache, and the request's first greedy token
     argmaxed ON DEVICE: the host syncs on one int32, never on a
-    (vocab,)-sized logits row."""
+    (vocab,)-sized logits row.  ``demand`` is the static plane-demand
+    floor for the prefill (the request's own tier index): plane-major
+    packed weights stream only the demanded planes.  Jit it with
+    ``static_argnums=(7,)`` — one trace per distinct demand, bounded by
+    the tier count."""
     prefill = make_cache_prefill_step(model)
 
-    def admit(params, zero_cache, live_cache, toks, lens, slot, tier):
-        one_cache, logits = prefill(params, zero_cache, toks, lens, tier)
+    def admit(params, zero_cache, live_cache, toks, lens, slot, tier,
+              demand=0):
+        one_cache, logits = prefill(params, zero_cache, toks, lens, tier,
+                                    demand)
         cache = model.cache_insert_slot(live_cache, one_cache, slot)
         first = jnp.argmax(logits[0]).astype(jnp.int32)
         return cache, first
@@ -147,11 +154,20 @@ def make_cont_decode_step(model: Model) -> Callable:
     apply per-row plane masks, so a mixed-tier batch decodes every lane
     at its own tier with no retrace across tier changes.  (Dense lanes
     are fully isolated; MoE dead lanes are masked out of expert-capacity
-    competition by ``active``, so only LIVE batch mates couple.)"""
+    competition by ``active``, so only LIVE batch mates couple.)
 
-    def cont_step(params, cache, cur, active, tiers):
+    ``demand`` (static python int, default 0) is the batch plane-demand
+    floor — the min live tier index the scheduler computes each tick.
+    Plane-major packed weights stream only the planes that tier keeps, so
+    a lo-heavy batch reads a fraction of the weight bytes.  Jit with
+    ``static_argnums=(5,)``: distinct demands retrace once each, bounded
+    by the tier count (not 2^planes)."""
+
+    def cont_step(params, cache, cur, active, tiers, demand=0):
         logits, cache = model.decode(
-            params, cache, {"tokens": cur, "active": active, "tiers": tiers}
+            params, cache,
+            {"tokens": cur, "active": active, "tiers": tiers,
+             "demand": demand},
         )
         nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
         nxt = jnp.where(active > 0, nxt, cur[:, 0])
