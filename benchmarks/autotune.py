@@ -88,7 +88,7 @@ def _sweep_one(kind, m, k, n, g, verbose):
         # clamp to the shape up front: dedupes candidates that the kernel
         # would clamp to the same tiling, and keeps the stored winner's
         # tiles <= the dimension they tile
-        cfg = {nm: min(v, dims[nm]) for nm, v in zip(names, vals)}
+        cfg = {nm: min(v, dims[nm]) for nm, v in zip(names, vals, strict=True)}
         if tuple(sorted(cfg.items())) in seen:
             continue
         seen.add(tuple(sorted(cfg.items())))

@@ -128,7 +128,7 @@ def _prefill_compare(model, params, plen: int = PREFILL_LEN, slots: int = 4):
     )
     lens = jnp.full((slots,), plen, jnp.int32)
 
-    fused = jax.jit(make_cache_prefill_step(model))
+    fused = jax.jit(make_cache_prefill_step(model), static_argnums=(5,))
 
     def scan_prefill(params, cache, tokens):
         def body(cache, tok):
@@ -185,7 +185,7 @@ def _run_static_stream(engine, prompts, arrivals, max_new, slots):
         res = engine.generate([prompts[j] for j in batch], max_new=max_new)
         start = tick
         tick += 1 + max_new  # one prefill dispatch + max_new decode steps
-        for j, toks in zip(batch, res):
+        for j, toks in zip(batch, res, strict=True):
             outs[j] = toks
             wait.append(start - arrivals[j])
             lat.append(tick - arrivals[j])
@@ -401,9 +401,9 @@ def main(verbose: bool = True, quick: bool = False):
     for mix_name, mix_tiers in mixes.items():
         eng_ps.reset_stream()  # fresh session: per-mix traffic meter
         rids = [eng_ps.submit(p, max_new=PS_MAX_NEW, quality=q)
-                for p, q in zip(ps_prompts, mix_tiers)]
+                for p, q in zip(ps_prompts, mix_tiers, strict=True)]
         done = eng_ps.run_until_drained()
-        for rid, p, q in zip(rids, ps_prompts, mix_tiers):
+        for rid, p, q in zip(rids, ps_prompts, mix_tiers, strict=True):
             assert done[rid] == ps_solo[q].generate([p],
                                                     max_new=PS_MAX_NEW)[0], \
                 f"plane-stream {mix_name} diverged from solo {q} engine"

@@ -8,9 +8,7 @@ import jax.numpy as jnp
 
 from repro.data.pipeline import image_batches, synthetic_image_dataset
 from repro.models.base import init_params
-from repro.models.cnn import (
-    CNNConfig, cnn_descs, cnn_loss,
-)
+from repro.models.cnn import CNNConfig, cnn_descs, cnn_loss
 from repro.optim import AdamWConfig, adamw_init_descs, adamw_update
 
 

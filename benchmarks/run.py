@@ -22,8 +22,16 @@ import sys
 import traceback
 
 from benchmarks import (
-    autotune, bench_compression, bench_fig7, bench_fig8, bench_fig9,
-    bench_fig10, bench_fig11, bench_kernels, bench_serve, bench_table3,
+    autotune,
+    bench_compression,
+    bench_fig10,
+    bench_fig11,
+    bench_fig7,
+    bench_fig8,
+    bench_fig9,
+    bench_kernels,
+    bench_serve,
+    bench_table3,
 )
 
 BENCHES = {

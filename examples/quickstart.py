@@ -21,9 +21,7 @@ from repro.core.csd import csd_round, partial_product_savings
 from repro.core.policy import QuantPolicy
 from repro.core.qsq import QSQConfig, zeros_fraction
 from repro.models.cnn import LENET, cnn_accuracy
-from repro.quant import (
-    dequantize_pytree, pytree_bits_report, quantize_pytree,
-)
+from repro.quant import dequantize_pytree, pytree_bits_report, quantize_pytree
 
 
 def main():

@@ -59,7 +59,7 @@ def main():
             print(f"tier {tier!r}: {eng.n_packed_leaves} packed leaves, "
                   f"{rep['bits'] / 8e3:.1f} kB weights, "
                   f"{n_tok / dt:.1f} tok/s")
-            for p, o in zip(prompts, outs):
+            for p, o in zip(prompts, outs, strict=True):
                 print(f"    prompt={p} -> {o}")
 
 

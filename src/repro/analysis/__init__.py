@@ -1,0 +1,33 @@
+"""qsqlint — repo-specific static analysis for jit/trace hygiene and
+packed-weight invariants.
+
+The serving stack's performance story rests on contracts that no general
+linter knows about: packed weights must never materialize dense on a hot
+path, the continuous-batching programs must trace once per (family,
+demand-tier) and never retrace on admit/evict, plane demand must stay a
+static jit argument, Pallas kernel bodies must stay pure, and the
+dispatch counters must only mutate at trace time.  This package checks
+those contracts on the AST, before a kernel ever runs:
+
+* :mod:`repro.analysis.rules`   — the QSQ001..QSQ005 rule registry;
+* :mod:`repro.analysis.linter`  — file/project orchestration + pragmas;
+* :mod:`repro.analysis.config`  — per-rule config and allowlists;
+* :mod:`repro.analysis.retrace` — the runtime companion
+  (:func:`~repro.analysis.retrace.no_retrace`), asserting at run time
+  what QSQ002/QSQ003 argue statically.
+
+CLI: ``python -m repro.analysis src tests benchmarks`` (nonzero exit on
+violations).  Inline suppression: ``# qsqlint: disable=QSQ001 -- why``.
+"""
+from repro.analysis.config import Config, load_config
+from repro.analysis.linter import Violation, lint_file, lint_paths
+from repro.analysis.rules import RULES
+
+__all__ = [
+    "Config",
+    "RULES",
+    "Violation",
+    "lint_file",
+    "lint_paths",
+    "load_config",
+]

@@ -1,0 +1,84 @@
+"""CLI entry point: ``python -m repro.analysis [paths...]``.
+
+Exit codes: 0 clean, 1 violations found, 2 usage/config error.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.config import ALL_RULES, load_config
+from repro.analysis.linter import lint_paths
+
+
+def _parse_args(argv):
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description=("qsqlint — static analysis for jit/trace hygiene and "
+                     "packed-weight invariants (QSQ001..QSQ005)"),
+    )
+    parser.add_argument(
+        "paths", nargs="*", default=["src", "tests", "benchmarks"],
+        help="files or directories to lint (default: src tests benchmarks)")
+    parser.add_argument(
+        "--select", metavar="RULES",
+        help="comma-separated rule ids to run (default: all)")
+    parser.add_argument(
+        "--ignore", metavar="RULES",
+        help="comma-separated rule ids to skip")
+    parser.add_argument(
+        "--config", metavar="FILE",
+        help="JSON config file overriding [tool.qsqlint] / defaults")
+    parser.add_argument(
+        "--root", default=".",
+        help="repo root for relative paths + config matching (default: .)")
+    parser.add_argument(
+        "--list-rules", action="store_true",
+        help="print the rule table and exit")
+    return parser.parse_args(argv)
+
+
+def _list_rules() -> None:
+    from repro.analysis.rules import RULES
+
+    for rule_id in ALL_RULES:
+        cls = RULES[rule_id]
+        print(f"{rule_id}  {cls.name:<24} {cls.summary}")
+
+
+def main(argv=None) -> int:
+    args = _parse_args(argv if argv is not None else sys.argv[1:])
+    if args.list_rules:
+        _list_rules()
+        return 0
+
+    try:
+        config = load_config(root=args.root, config_file=args.config)
+        select = list(config.select)
+        if args.select:
+            select = [r.strip() for r in args.select.split(",") if r.strip()]
+        if args.ignore:
+            ignored = {r.strip() for r in args.ignore.split(",")}
+            select = [r for r in select if r not in ignored]
+        unknown = [r for r in select if r not in ALL_RULES]
+        if unknown:
+            print(f"qsqlint: unknown rule(s): {', '.join(unknown)}",
+                  file=sys.stderr)
+            return 2
+        config = config.replace(select=tuple(select))
+    except (OSError, KeyError, ValueError) as e:
+        print(f"qsqlint: config error: {e}", file=sys.stderr)
+        return 2
+
+    violations = lint_paths(args.paths, config=config, root=args.root)
+    for v in violations:
+        print(v.format())
+    if violations:
+        print(f"qsqlint: {len(violations)} violation(s) in "
+              f"{len({v.path for v in violations})} file(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,482 @@
+"""AST groundwork shared by the qsqlint rules.
+
+One :class:`ModuleAnalysis` is built per file and answers the questions
+every rule asks:
+
+* alias resolution — ``jnp.dot`` -> ``jax.numpy.dot`` via the module's
+  imports, so rules match canonical dotted names, not spelling;
+* scopes — a binding tree (module / function / lambda / comprehension)
+  with name resolution up the enclosing chain;
+* jit contexts — which function defs run under trace: decorator-jitted
+  (``@jax.jit`` / ``@functools.partial(jax.jit, ...)``), call-site-jitted
+  (``f = jax.jit(g, ...)``), scan bodies, and — via the cross-file
+  project index — the inner functions of jitted step FACTORIES
+  (``jax.jit(make_cont_decode_step(model), static_argnums=(5,))``);
+* static-argument resolution — ``static_argnums``/``static_argnames`` of
+  a jit site mapped onto the jitted function's parameter names;
+* factories — defs that ``return`` a locally defined function, with that
+  inner function's parameter list (the shape QSQ003 checks against);
+* Pallas kernels — defs reaching ``pl.pallas_call`` as the kernel
+  operand, directly or through a ``functools.partial`` binding.
+
+Everything here is deliberately flow-light: a single forward walk per
+function, no fixpoints.  Lint rules prefer a small number of
+well-understood checks over exhaustive dataflow.
+"""
+from __future__ import annotations
+
+import ast
+import builtins
+import dataclasses
+
+#: attribute names whose access on a tracer yields a STATIC value — a
+#: Python branch on these is trace-time shape logic, not a tracer leak.
+STATIC_ATTRS = frozenset({"shape", "ndim", "dtype", "size", "sharding"})
+
+#: calls that collapse a traced operand to a static value (len(x) is
+#: x.shape[0]; isinstance/type dispatch on the tracer object itself).
+STATIC_CALLS = frozenset({"len", "isinstance", "type", "getattr", "hasattr"})
+
+JIT_NAMES = frozenset({"jax.jit", "jax.pjit", "jax.experimental.pjit.pjit"})
+
+PALLAS_CALL = "jax.experimental.pallas.pallas_call"
+BLOCKSPEC_CALLS = frozenset({
+    "jax.experimental.pallas.BlockSpec",
+    "jax.experimental.pallas.tpu.VMEM",
+    "jax.experimental.pallas.tpu.SMEM",
+})
+
+#: module prefixes whose array constructors must not be closure-captured
+#: by a kernel body (a captured device array becomes an invisible kernel
+#: operand the BlockSpecs know nothing about).
+ARRAY_MODULES = ("jax.numpy.", "numpy.", "jax.random.")
+
+
+# --------------------------------------------------------------------------
+# Aliases
+# --------------------------------------------------------------------------
+def build_aliases(tree: ast.Module) -> dict[str, str]:
+    """Map local names to canonical dotted paths from the module's imports."""
+    aliases: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.asname:
+                    aliases[a.asname] = a.name
+                else:
+                    root = a.name.split(".")[0]
+                    aliases[root] = root
+        elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def dotted(node: ast.AST, aliases: dict[str, str]) -> str | None:
+    """Canonical dotted path of a Name/Attribute chain, alias-expanded."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(aliases.get(node.id, node.id))
+    return ".".join(reversed(parts))
+
+
+# --------------------------------------------------------------------------
+# Scopes
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class Scope:
+    node: ast.AST  # Module | FunctionDef | AsyncFunctionDef | Lambda
+    parent: "Scope | None"
+    qualname: str
+    bindings: dict[str, ast.AST] = dataclasses.field(default_factory=dict)
+
+    def resolve(self, name: str) -> "tuple[Scope, ast.AST] | None":
+        scope: Scope | None = self
+        while scope is not None:
+            if name in scope.bindings:
+                return scope, scope.bindings[name]
+            scope = scope.parent
+        return None
+
+
+def _bind_target(scope: Scope, target: ast.AST, value: ast.AST) -> None:
+    if isinstance(target, ast.Name):
+        scope.bindings[target.id] = value
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for elt in target.elts:
+            _bind_target(scope, elt, value)
+    elif isinstance(target, ast.Starred):
+        _bind_target(scope, target.value, value)
+
+
+class _ScopeBuilder(ast.NodeVisitor):
+    """Build the scope tree; record the scope owning every function def."""
+
+    def __init__(self, tree: ast.Module):
+        self.module_scope = Scope(tree, None, "<module>")
+        self.fn_scopes: dict[ast.AST, Scope] = {}
+        self.fn_parent: dict[ast.AST, Scope] = {}
+        self._stack = [self.module_scope]
+        self.visit(tree)
+
+    @property
+    def _cur(self) -> Scope:
+        return self._stack[-1]
+
+    def _visit_function(self, node):
+        self.fn_parent[node] = self._cur
+        self._cur.bindings[node.name] = node
+        qual = (node.name if self._cur.qualname == "<module>"
+                else f"{self._cur.qualname}.{node.name}")
+        scope = Scope(node, self._cur, qual)
+        for arg in _all_args(node.args):
+            scope.bindings[arg] = node
+        self.fn_scopes[node] = scope
+        self._stack.append(scope)
+        for stmt in node.body:
+            self.visit(stmt)
+        self._stack.pop()
+
+    visit_FunctionDef = _visit_function
+    visit_AsyncFunctionDef = _visit_function
+
+    def visit_Lambda(self, node: ast.Lambda):
+        scope = Scope(node, self._cur, f"{self._cur.qualname}.<lambda>")
+        for arg in _all_args(node.args):
+            scope.bindings[arg] = node
+        self.fn_scopes[node] = scope
+        self._stack.append(scope)
+        self.visit(node.body)
+        self._stack.pop()
+
+    def visit_ClassDef(self, node: ast.ClassDef):
+        self._cur.bindings[node.name] = node
+        # class bodies are not enclosing scopes for the methods inside
+        # them; keep walking in the current scope chain (close enough for
+        # the repo's method-light modules)
+        for stmt in node.body:
+            self.visit(stmt)
+
+    def visit_Assign(self, node: ast.Assign):
+        for t in node.targets:
+            _bind_target(self._cur, t, node.value)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign):
+        if node.value is not None:
+            _bind_target(self._cur, node.target, node.value)
+        self.generic_visit(node)
+
+    def visit_NamedExpr(self, node: ast.NamedExpr):
+        _bind_target(self._cur, node.target, node.value)
+        self.generic_visit(node)
+
+    def visit_For(self, node: ast.For):
+        _bind_target(self._cur, node.target, node.iter)
+        self.generic_visit(node)
+
+    def visit_With(self, node: ast.With):
+        for item in node.items:
+            if item.optional_vars is not None:
+                _bind_target(self._cur, item.optional_vars, item.context_expr)
+        self.generic_visit(node)
+
+    def visit_comprehension(self, node: ast.comprehension):
+        _bind_target(self._cur, node.target, node.iter)
+        self.generic_visit(node)
+
+    def visit_Import(self, node: ast.Import):
+        for a in node.names:
+            self._cur.bindings[a.asname or a.name.split(".")[0]] = node
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        for a in node.names:
+            if a.name != "*":
+                self._cur.bindings[a.asname or a.name] = node
+
+
+def _all_args(args: ast.arguments) -> list[str]:
+    names = [a.arg for a in args.posonlyargs + args.args + args.kwonlyargs]
+    if args.vararg:
+        names.append(args.vararg.arg)
+    if args.kwarg:
+        names.append(args.kwarg.arg)
+    return names
+
+
+def positional_params(args: ast.arguments) -> list[str]:
+    return [a.arg for a in args.posonlyargs + args.args]
+
+
+# --------------------------------------------------------------------------
+# Jit contexts, factories, kernels
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class JitContext:
+    fn: ast.AST  # FunctionDef
+    static_names: frozenset[str]
+    reason: str  # "decorator" | "jit-call" | "scan-body" | "factory-inner"
+
+
+@dataclasses.dataclass
+class FactoryInfo:
+    """A def that returns a locally defined function (a step factory)."""
+
+    module: str  # dotted module path, e.g. "repro.train.step"
+    path: str    # repo-relative file path
+    name: str
+    node: ast.AST
+    inners: list[ast.AST]  # the returned FunctionDef nodes
+
+
+@dataclasses.dataclass
+class FactoryJitSite:
+    """``jax.jit(make_x(...), static_arg...=...)`` — jitting a factory's
+    product.  Resolved against FactoryInfo in the project pass."""
+
+    callee: str  # canonical dotted name of the factory
+    jit_call: ast.Call
+    lineno: int
+    col: int
+    qualname: str  # enclosing scope at the jit site
+
+
+def static_names_from_jit(keywords: list[ast.keyword],
+                          params: list[str]) -> frozenset[str]:
+    """Resolve static_argnums/static_argnames keywords to parameter names."""
+    names: set[str] = set()
+    for kw in keywords:
+        if kw.arg == "static_argnames":
+            for const in ast.walk(kw.value):
+                if isinstance(const, ast.Constant) and isinstance(const.value, str):
+                    names.add(const.value)
+        elif kw.arg == "static_argnums":
+            for const in ast.walk(kw.value):
+                if isinstance(const, ast.Constant) and isinstance(const.value, int):
+                    if 0 <= const.value < len(params):
+                        names.add(params[const.value])
+    return frozenset(names)
+
+
+def jit_decorator_statics(fn, aliases) -> frozenset[str] | None:
+    """Static names if ``fn`` is decorator-jitted, else None."""
+    for dec in fn.decorator_list:
+        if dotted(dec, aliases) in JIT_NAMES:
+            return frozenset()
+        if isinstance(dec, ast.Call):
+            callee = dotted(dec.func, aliases)
+            if callee in JIT_NAMES:
+                return static_names_from_jit(
+                    dec.keywords, positional_params(fn.args))
+            if (callee == "functools.partial" and dec.args
+                    and dotted(dec.args[0], aliases) in JIT_NAMES):
+                return static_names_from_jit(
+                    dec.keywords, positional_params(fn.args))
+    return None
+
+
+class ModuleAnalysis:
+    """Everything the rules need to know about one parsed module."""
+
+    def __init__(self, tree: ast.Module, path: str, module: str,
+                 scan_callees: tuple[str, ...] = ()):
+        self.tree = tree
+        self.path = path
+        self.module = module
+        self.aliases = build_aliases(tree)
+        builder = _ScopeBuilder(tree)
+        self.module_scope = builder.module_scope
+        self.fn_scopes = builder.fn_scopes
+        self.fn_parent = builder.fn_parent
+        self.parent_map: dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(tree):
+            for child in ast.iter_child_nodes(node):
+                self.parent_map[child] = node
+
+        self.jit_contexts: dict[ast.AST, JitContext] = {}
+        self.factories: dict[str, FactoryInfo] = {}
+        self.factory_jit_sites: list[FactoryJitSite] = []
+        self.kernels: dict[ast.AST, ast.Call] = {}  # kernel def -> call site
+        self._collect_factories()
+        self._collect_jit_contexts(scan_callees)
+        self._collect_kernels()
+
+    # -- helpers -----------------------------------------------------------
+    def qualname_of(self, node: ast.AST) -> str:
+        """Qualified name of the function scope enclosing ``node``."""
+        cur = node
+        while cur is not None:
+            if cur in self.fn_scopes:
+                return self.fn_scopes[cur].qualname
+            cur = self.parent_map.get(cur)
+        return "<module>"
+
+    def enclosing_scope(self, node: ast.AST) -> Scope:
+        cur = self.parent_map.get(node)
+        while cur is not None:
+            if cur in self.fn_scopes:
+                return self.fn_scopes[cur]
+            cur = self.parent_map.get(cur)
+        return self.module_scope
+
+    def resolve_def(self, name: str, at: ast.AST):
+        """Resolve ``name`` to a FunctionDef through the scope chain."""
+        hit = self.enclosing_scope(at).resolve(name)
+        if hit is None:
+            return None
+        _, bound = hit
+        return bound if isinstance(bound, (ast.FunctionDef,
+                                           ast.AsyncFunctionDef)) else None
+
+    def canonical(self, node: ast.AST) -> str | None:
+        """Dotted path of an expression, module-qualified when local."""
+        name = dotted(node, self.aliases)
+        if name is None:
+            return None
+        if "." not in name and name not in self.aliases:
+            return f"{self.module}.{name}"
+        return name
+
+    # -- collection passes -------------------------------------------------
+    def _collect_factories(self) -> None:
+        for fn, scope in list(self.fn_scopes.items()):
+            if isinstance(fn, ast.Lambda):
+                continue
+            inners = []
+            for stmt in ast.walk(fn):
+                if (isinstance(stmt, ast.Return)
+                        and isinstance(stmt.value, ast.Name)):
+                    bound = scope.bindings.get(stmt.value.id)
+                    if isinstance(bound, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef)):
+                        inners.append(bound)
+            if inners and self.fn_parent[fn] is self.module_scope:
+                self.factories[fn.name] = FactoryInfo(
+                    module=self.module, path=self.path, name=fn.name,
+                    node=fn, inners=inners)
+
+    def _add_jit(self, fn: ast.AST, statics: frozenset[str], reason: str):
+        prev = self.jit_contexts.get(fn)
+        if prev is not None:
+            statics = statics | prev.static_names
+        self.jit_contexts[fn] = JitContext(fn, statics, reason)
+
+    def _collect_jit_contexts(self, scan_callees: tuple[str, ...]) -> None:
+        for fn in self.fn_scopes:
+            if isinstance(fn, ast.Lambda):
+                continue
+            statics = jit_decorator_statics(fn, self.aliases)
+            if statics is not None:
+                self._add_jit(fn, statics, "decorator")
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = dotted(node.func, self.aliases)
+            if callee in JIT_NAMES and node.args:
+                target = node.args[0]
+                if isinstance(target, ast.Name):
+                    fn = self.resolve_def(target.id, node)
+                    if fn is not None:
+                        self._add_jit(fn, static_names_from_jit(
+                            node.keywords, positional_params(fn.args)),
+                            "jit-call")
+                elif isinstance(target, ast.Call):
+                    factory = self.canonical(target.func)
+                    if factory is not None:
+                        self.factory_jit_sites.append(FactoryJitSite(
+                            callee=factory, jit_call=node,
+                            lineno=node.lineno, col=node.col_offset,
+                            qualname=self.qualname_of(node)))
+            elif callee in scan_callees and node.args:
+                target = node.args[0]
+                if isinstance(target, ast.Name):
+                    fn = self.resolve_def(target.id, node)
+                    if fn is not None:
+                        self._add_jit(fn, frozenset(), "scan-body")
+
+    def _resolve_kernel_operand(self, operand: ast.AST, at: ast.AST):
+        """The kernel FunctionDef behind a pallas_call operand: a direct
+        name, an inline functools.partial, or a name bound to one."""
+        if isinstance(operand, ast.Call):
+            if (dotted(operand.func, self.aliases) == "functools.partial"
+                    and operand.args and isinstance(operand.args[0], ast.Name)):
+                return self.resolve_def(operand.args[0].id, at)
+            return None
+        if isinstance(operand, ast.Name):
+            fn = self.resolve_def(operand.id, at)
+            if fn is not None:
+                return fn
+            hit = self.enclosing_scope(at).resolve(operand.id)
+            if hit is not None and isinstance(hit[1], ast.Call):
+                return self._resolve_kernel_operand(hit[1], at)
+        return None
+
+    def _collect_kernels(self) -> None:
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if dotted(node.func, self.aliases) != PALLAS_CALL or not node.args:
+                continue
+            fn = self._resolve_kernel_operand(node.args[0], node)
+            if fn is not None:
+                self.kernels.setdefault(fn, node)
+
+
+# --------------------------------------------------------------------------
+# Taint: does an expression depend on a traced value?
+# --------------------------------------------------------------------------
+def expr_taints(node: ast.AST, tainted: set[str]) -> bool:
+    """True if ``node``'s value can depend on a tracer named in ``tainted``.
+
+    Access through a STATIC_ATTRS attribute (``x.shape`` and friends) and
+    identity-vs-None comparisons are static at trace time and do not
+    propagate taint; neither do STATIC_CALLS.  Function/lambda bodies are
+    opaque (their names don't leak taint by reference).
+    """
+    if isinstance(node, ast.Name):
+        return node.id in tainted
+    if isinstance(node, ast.Attribute):
+        if node.attr in STATIC_ATTRS:
+            return False
+        return expr_taints(node.value, tainted)
+    if isinstance(node, ast.Subscript):
+        return (expr_taints(node.value, tainted)
+                or expr_taints(node.slice, tainted))
+    if isinstance(node, ast.Compare):
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            operands = [node.left, *node.comparators]
+            if any(isinstance(o, ast.Constant) and o.value is None
+                   for o in operands):
+                return False
+        return any(expr_taints(o, tainted)
+                   for o in [node.left, *node.comparators])
+    if isinstance(node, ast.Call):
+        if isinstance(node.func, ast.Name) and node.func.id in STATIC_CALLS:
+            return False
+        parts = [node.func, *node.args, *[kw.value for kw in node.keywords]]
+        return any(expr_taints(p, tainted) for p in parts)
+    if isinstance(node, (ast.Lambda, ast.FunctionDef, ast.AsyncFunctionDef)):
+        return False
+    return any(expr_taints(child, tainted)
+               for child in ast.iter_child_nodes(node))
+
+
+def walk_expr(node: ast.AST):
+    """Yield ``node`` and descendants, not descending into nested
+    function/lambda bodies (they are separate trace scopes)."""
+    yield node
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+            continue
+        yield from walk_expr(child)
+
+
+def is_builtin(name: str) -> bool:
+    return hasattr(builtins, name)

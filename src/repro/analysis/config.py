@@ -1,0 +1,151 @@
+"""qsqlint configuration: rule selection, per-rule knobs, allowlists.
+
+Defaults are the repo's own contracts (hot-path packages, the dispatch
+counter objects, the static-arg discipline names).  Projects can override
+any key from ``[tool.qsqlint]`` in ``pyproject.toml`` (read when a TOML
+parser is available — py3.11's ``tomllib``; silently skipped otherwise so
+the linter has zero hard deps) or from a JSON file via ``--config``.
+
+Allowlist entries are strings ``"RULE:path-glob"`` or
+``"RULE:path-glob:qualname"`` — a violation of RULE inside a matching
+file (and, when given, inside the named function scope) is suppressed
+without an inline pragma.  Pragmas are preferred for one-off exemptions
+(they sit next to the code and carry a justification); the allowlist is
+for structural ones, like the dispatch module's own counter helpers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import json
+from pathlib import Path
+
+#: Rules every run enables unless --select/--ignore narrows them.
+ALL_RULES = ("QSQ001", "QSQ002", "QSQ003", "QSQ004", "QSQ005")
+
+_DEFAULTS: dict = {
+    # QSQ001: packages where a dense-materializing call is a hot-path bug
+    "hot_paths": [
+        "src/repro/serve",
+        "src/repro/models",
+        "src/repro/kernels",
+    ],
+    # QSQ001: call names that materialize a dense weight from a store leaf
+    "dense_calls": ["as_dense", "dequantize", "dense_tree"],
+    # QSQ002/QSQ003: parameter names that must be static jit args wherever
+    # the function carrying them is jitted (plane demand and friends: a
+    # traced demand would turn every shortened HBM read into a retrace or
+    # a tracer leak)
+    "static_params": [
+        "demand",
+        "demand_tier",
+        "demand_drop",
+        "drop",
+        "plane_major",
+        "sign_mag",
+    ],
+    # QSQ003: parameter names that must NEVER be static — they are traced
+    # by design, so that tier changes / admissions are data changes (mask
+    # flips), not retraces
+    "never_static": ["plane_mask", "tiers", "active"],
+    # QSQ002: callables whose first argument is traced like a jitted body
+    "scan_callees": ["jax.lax.scan", "repro.models.base.xscan"],
+    # QSQ005: the trace-time counter objects, fully qualified
+    "counter_objects": [
+        "repro.kernels.dispatch.counters",
+        "repro.kernels.dispatch.traffic",
+    ],
+    # QSQ005: the only scopes allowed to mutate them ("path::qualname";
+    # "<module>" is module level, for the defining assignments)
+    "counter_scopes": [
+        "src/repro/kernels/dispatch.py::<module>",
+        "src/repro/kernels/dispatch.py::packed_matmul",
+        "src/repro/kernels/dispatch.py::_count_traffic",
+        "src/repro/kernels/dispatch.py::reset_counters",
+    ],
+    # global allowlist entries: "RULE:path-glob[:qualname]"
+    "allow": [],
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    """Resolved qsqlint configuration (immutable; see module docstring)."""
+
+    select: tuple[str, ...] = ALL_RULES
+    hot_paths: tuple[str, ...] = tuple(_DEFAULTS["hot_paths"])
+    dense_calls: tuple[str, ...] = tuple(_DEFAULTS["dense_calls"])
+    static_params: tuple[str, ...] = tuple(_DEFAULTS["static_params"])
+    never_static: tuple[str, ...] = tuple(_DEFAULTS["never_static"])
+    scan_callees: tuple[str, ...] = tuple(_DEFAULTS["scan_callees"])
+    counter_objects: tuple[str, ...] = tuple(_DEFAULTS["counter_objects"])
+    counter_scopes: tuple[str, ...] = tuple(_DEFAULTS["counter_scopes"])
+    allow: tuple[str, ...] = ()
+
+    def replace(self, **kw) -> "Config":
+        return dataclasses.replace(self, **kw)
+
+    # -- queries the rules ask ---------------------------------------------
+    def is_hot_path(self, path: str) -> bool:
+        p = path.replace("\\", "/")
+        return any(
+            p == hp or p.startswith(hp.rstrip("/") + "/")
+            for hp in self.hot_paths
+        )
+
+    def counter_scope_allowed(self, path: str, qualname: str) -> bool:
+        key = f"{path}::{qualname}"
+        return any(fnmatch.fnmatch(key, pat) for pat in self.counter_scopes)
+
+    def allowlisted(self, rule: str, path: str, qualname: str) -> bool:
+        for entry in self.allow:
+            parts = entry.split(":")
+            if len(parts) < 2 or parts[0] != rule:
+                continue
+            glob, func = parts[1], (parts[2] if len(parts) > 2 else None)
+            if not fnmatch.fnmatch(path, glob):
+                continue
+            if func is None or func == qualname or qualname.endswith("." + func):
+                return True
+        return False
+
+
+def _merge(base: Config, overrides: dict) -> Config:
+    known = {f.name for f in dataclasses.fields(Config)}
+    kw = {}
+    for key, val in overrides.items():
+        name = key.replace("-", "_")
+        if name not in known:
+            raise KeyError(f"unknown qsqlint config key {key!r}")
+        kw[name] = tuple(val) if isinstance(val, (list, tuple)) else val
+    return base.replace(**kw)
+
+
+def _pyproject_overrides(root: Path) -> dict:
+    pyproject = root / "pyproject.toml"
+    if not pyproject.is_file():
+        return {}
+    try:
+        import tomllib  # py >= 3.11
+    except ImportError:
+        return {}
+    with open(pyproject, "rb") as f:
+        data = tomllib.load(f)
+    return data.get("tool", {}).get("qsqlint", {})
+
+
+def load_config(root: str | Path = ".", config_file: str | Path | None = None,
+                overrides: dict | None = None) -> Config:
+    """Resolve the effective Config for a lint run rooted at ``root``.
+
+    Precedence: built-in defaults < ``[tool.qsqlint]`` in pyproject.toml
+    < ``config_file`` (JSON) < ``overrides`` (programmatic / CLI flags).
+    """
+    cfg = Config(allow=tuple(_DEFAULTS["allow"]))
+    cfg = _merge(cfg, _pyproject_overrides(Path(root)))
+    if config_file is not None:
+        with open(config_file) as f:
+            cfg = _merge(cfg, json.load(f))
+    if overrides:
+        cfg = _merge(cfg, overrides)
+    return cfg

@@ -1,0 +1,231 @@
+"""qsqlint core: file loading, pragmas, the project pass, reporting.
+
+A lint run is two passes.  Pass one parses every file and builds a
+:class:`ProjectIndex` — cross-file facts, today the step-factory table
+(QSQ003 must connect ``jax.jit(make_cont_decode_step(model), ...)`` in
+``serve/engine.py`` to the factory's inner signature in
+``train/step.py``).  Pass two runs every enabled rule per file and
+filters the findings through inline pragmas and the config allowlist.
+
+Pragma syntax (trailing comment on the flagged line)::
+
+    planes = p.as_dense()  # qsqlint: disable=QSQ001 -- cold path: <why>
+    # qsqlint: disable-file=QSQ002 -- whole-file suppression
+
+Multiple rules separate with commas; ``all`` disables everything.  The
+`` -- why`` justification is free text; keep one — a bare pragma reads
+as a silenced alarm, a justified one as a reviewed exemption.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import re
+import tokenize
+from pathlib import Path
+
+from repro.analysis.astutil import ModuleAnalysis
+from repro.analysis.config import Config
+
+PRAGMA_RE = re.compile(
+    r"#\s*qsqlint:\s*(?P<kind>disable(?:-file)?)\s*=\s*(?P<rules>[A-Za-z0-9_,\s]+?)"
+    r"\s*(?:--.*)?$"
+)
+
+_ALL = "all"
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One finding: where, which rule, why it matters."""
+
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+    qualname: str = "<module>"  # enclosing function scope, for allowlists
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+@dataclasses.dataclass
+class Pragmas:
+    file_rules: set[str]
+    line_rules: dict[int, set[str]]
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        for rules in (self.file_rules, self.line_rules.get(line, ())):
+            if _ALL in rules or rule in rules:
+                return True
+        return False
+
+
+def parse_pragmas(source: str) -> Pragmas:
+    """Trailing pragmas suppress their own line; a pragma on a
+    comment-only line suppresses the next code line (so multi-line
+    justifications above a statement work)."""
+    pragmas = Pragmas(file_rules=set(), line_rules={})
+    lines = source.splitlines()
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        comments = [(t.start[0], t.string) for t in tokens
+                    if t.type == tokenize.COMMENT]
+    except tokenize.TokenError:
+        comments = [(i + 1, line.strip()) for i, line in
+                    enumerate(lines) if "#" in line]
+
+    def _attach_line(lineno: int) -> int:
+        # standalone comment: walk down past comments/blanks to the code line
+        if not lines[lineno - 1].lstrip().startswith("#"):
+            return lineno
+        at = lineno
+        while at < len(lines):
+            stripped = lines[at].strip()  # 0-based `at` is the NEXT line
+            if stripped and not stripped.startswith("#"):
+                return at + 1
+            at += 1
+        return lineno
+
+    for lineno, text in comments:
+        m = PRAGMA_RE.search(text)
+        if not m:
+            continue
+        rules = {r.strip() for r in m.group("rules").split(",") if r.strip()}
+        if m.group("kind") == "disable-file":
+            pragmas.file_rules |= rules
+        else:
+            pragmas.line_rules.setdefault(
+                _attach_line(lineno), set()).update(rules)
+    return pragmas
+
+
+@dataclasses.dataclass
+class FileContext:
+    """Everything a rule may consult about one file under lint."""
+
+    path: str          # repo-relative posix path (display + config matching)
+    source: str
+    tree: ast.Module
+    analysis: ModuleAnalysis
+    pragmas: Pragmas
+    config: Config
+    index: "ProjectIndex"
+
+
+class ProjectIndex:
+    """Cross-file facts, built before any rule runs."""
+
+    def __init__(self):
+        # canonical factory name -> FactoryInfo (also indexed by bare name
+        # when unambiguous, for same-project resolution across modules)
+        self.factories: dict[str, object] = {}
+        self._by_bare: dict[str, list] = {}
+        # every jax.jit(make_x(...)) site across the project — QSQ002 uses
+        # these to treat a factory's inner def as jitted even when the jit
+        # lives in another file (engine.py jits step.py's products)
+        self.all_factory_jit_sites: list = []
+
+    def add_module(self, analysis: ModuleAnalysis) -> None:
+        for info in analysis.factories.values():
+            self.factories[f"{info.module}.{info.name}"] = info
+            self._by_bare.setdefault(info.name, []).append(info)
+        self.all_factory_jit_sites.extend(analysis.factory_jit_sites)
+
+    def find_factory(self, canonical_name: str):
+        info = self.factories.get(canonical_name)
+        if info is not None:
+            return info
+        candidates = self._by_bare.get(canonical_name.rsplit(".", 1)[-1], [])
+        return candidates[0] if len(candidates) == 1 else None
+
+
+def module_dotted(path: str) -> str:
+    """Best-effort dotted module path from a repo-relative file path."""
+    p = Path(path)
+    parts = list(p.with_suffix("").parts)
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts) or "<unknown>"
+
+
+def iter_python_files(paths: list[str | Path], root: Path) -> list[Path]:
+    files: list[Path] = []
+    for p in paths:
+        p = (root / p) if not Path(p).is_absolute() else Path(p)
+        if p.is_dir():
+            files.extend(sorted(
+                f for f in p.rglob("*.py") if "__pycache__" not in f.parts
+            ))
+        elif p.suffix == ".py":
+            files.append(p)
+    return files
+
+
+def _display_path(file: Path, root: Path) -> str:
+    try:
+        return file.resolve().relative_to(root.resolve()).as_posix()
+    except ValueError:
+        return file.as_posix()
+
+
+def _build_context(file: Path, root: Path, config: Config,
+                   index: ProjectIndex) -> FileContext | Violation:
+    rel = _display_path(file, root)
+    source = file.read_text()
+    try:
+        tree = ast.parse(source, filename=str(file))
+    except SyntaxError as e:
+        return Violation(path=rel, line=e.lineno or 1, col=e.offset or 0,
+                         rule="QSQ000", message=f"syntax error: {e.msg}")
+    analysis = ModuleAnalysis(tree, rel, module_dotted(rel),
+                              scan_callees=config.scan_callees)
+    return FileContext(path=rel, source=source, tree=tree, analysis=analysis,
+                       pragmas=parse_pragmas(source), config=config,
+                       index=index)
+
+
+def lint_paths(paths: list[str | Path], config: Config | None = None,
+               root: str | Path = ".") -> list[Violation]:
+    """Lint every .py under ``paths`` (files or directories) and return
+    surviving violations, sorted by (path, line, col, rule)."""
+    from repro.analysis.rules import RULES
+
+    config = config or Config()
+    root = Path(root)
+    contexts: list[FileContext] = []
+    violations: list[Violation] = []
+    index = ProjectIndex()
+    for file in iter_python_files(paths, root):
+        ctx = _build_context(file, root, config, index)
+        if isinstance(ctx, Violation):
+            violations.append(ctx)
+            continue
+        index.add_module(ctx.analysis)
+        contexts.append(ctx)
+
+    enabled = [RULES[r] for r in config.select if r in RULES]
+    seen: set[Violation] = set()
+    for ctx in contexts:
+        for rule in enabled:
+            for v in rule().check(ctx):
+                if v in seen:  # e.g. twin factory inners, same site+message
+                    continue
+                if ctx.pragmas.suppressed(v.rule, v.line):
+                    continue
+                if config.allowlisted(v.rule, v.path, v.qualname):
+                    continue
+                seen.add(v)
+                violations.append(v)
+    violations.sort(key=lambda v: (v.path, v.line, v.col, v.rule))
+    return violations
+
+
+def lint_file(path: str | Path, config: Config | None = None,
+              root: str | Path = ".") -> list[Violation]:
+    """Single-file convenience wrapper over :func:`lint_paths`."""
+    return lint_paths([path], config=config, root=root)

@@ -1,0 +1,78 @@
+"""Runtime companion to qsqlint: assert no retrace / no counter drift.
+
+qsqlint argues statically (QSQ002/QSQ003) that the decode programs trace
+once and that demand is a static arg.  :func:`no_retrace` asserts the
+same thing at run time: inside the block, no watched jitted function may
+grow its compilation cache, and the dispatch trace counters must not
+move.  The scheduler/per-request/plane-stream tests all share this via
+the ``no_retrace`` fixture in ``tests/conftest.py`` instead of each
+hand-rolling counter snapshots.
+
+Usage::
+
+    with no_retrace(eng._cont_step, eng._admit):
+        for _ in range(32):
+            eng.step()          # admits/evicts/steps freely
+
+    with no_retrace(counters=False):   # cache checks only, w/o dispatch
+        ...
+
+Each watched function must expose ``_cache_size()`` (every ``jax.jit``
+product does).
+"""
+from __future__ import annotations
+
+import contextlib
+
+from repro.kernels import dispatch
+
+
+def _cache_sizes(fns) -> list[int]:
+    sizes = []
+    for fn in fns:
+        probe = getattr(fn, "_cache_size", None)
+        if probe is None:
+            raise TypeError(
+                f"no_retrace() watches jitted callables with _cache_size(); "
+                f"got {fn!r}")
+        sizes.append(probe())
+    return sizes
+
+
+@contextlib.contextmanager
+def no_retrace(*jitted, counters: bool = True):
+    """Assert that the enclosed block triggers no new traces.
+
+    ``jitted``: jitted callables to watch — their ``_cache_size()`` must
+    be unchanged on exit (zero new compilations).  ``counters``: also
+    snapshot ``dispatch.counters``/``dispatch.traffic`` and require them
+    unchanged — the kernel dispatcher bumps them once per trace, so any
+    drift inside the block is a retrace (or a QSQ005 violation bumping
+    them at run time).
+    """
+    before_sizes = _cache_sizes(jitted)
+    if counters:
+        before_counters = dict(dispatch.counters)
+        before_traffic = dict(dispatch.traffic)
+    yield
+    after_sizes = _cache_sizes(jitted)
+    for fn, before, after in zip(jitted, before_sizes, after_sizes,
+                                 strict=True):
+        if after != before:
+            raise AssertionError(
+                f"retrace detected: {getattr(fn, '__name__', fn)!r} "
+                f"compilation cache grew {before} -> {after} inside a "
+                f"no_retrace() block")
+    if counters:
+        now_counters = dict(dispatch.counters)
+        now_traffic = dict(dispatch.traffic)
+        if now_counters != before_counters:
+            raise AssertionError(
+                "dispatch.counters moved inside a no_retrace() block: "
+                f"{before_counters} -> {now_counters} (a counter bump "
+                "means a kernel was re-traced, or something mutates the "
+                "counters at run time)")
+        if now_traffic != before_traffic:
+            raise AssertionError(
+                "dispatch.traffic moved inside a no_retrace() block: "
+                f"{before_traffic} -> {now_traffic}")

@@ -1,0 +1,551 @@
+"""The qsqlint rules: QSQ001..QSQ005.
+
+Each rule protects one invariant the serving stack's measured wins
+depend on (see README §Static analysis for the table):
+
+* QSQ001 ``no-dense-hot-path`` — packed weights stay packed on serve/
+  model/kernel paths; one ``as_dense()`` forfeits the 3.2-4.6x
+  weight-HBM cut the fused dequant-matmul exists for.
+* QSQ002 ``tracer-leak`` — jitted/scanned bodies must not coerce or
+  branch on traced values; a leak either crashes at trace time or, via
+  silent recompilation, turns every admit/evict into a retrace.
+* QSQ003 ``static-arg-discipline`` — plane demand (and the other
+  trace-shaping knobs) must be static jit args wherever threaded, and
+  the mask-flip operands (``plane_mask``/``tiers``/``active``) must
+  never be: tier changes are data, demand changes are bounded retraces.
+* QSQ004 ``kernel-purity`` — Pallas kernel bodies take everything
+  through refs or ``functools.partial`` statics, never closure-captured
+  arrays; block/scratch shapes are static expressions.
+* QSQ005 ``trace-time-counters`` — ``dispatch.counters``/``traffic``
+  mutate only in the dispatch module's designated helpers (they count
+  TRACES; a runtime mutation would desynchronize every no-retrace
+  assertion built on them).
+
+A rule is a class with ``id``/``name``/``summary`` and a ``check(ctx)``
+generator; ``@register`` adds it to :data:`RULES`.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.astutil import (
+    ARRAY_MODULES,
+    BLOCKSPEC_CALLS,
+    JitContext,
+    ModuleAnalysis,
+    _all_args,
+    dotted,
+    expr_taints,
+    is_builtin,
+    positional_params,
+    static_names_from_jit,
+    walk_expr,
+)
+from repro.analysis.linter import FileContext, Violation
+
+RULES: dict[str, type] = {}
+
+
+def register(cls):
+    RULES[cls.id] = cls
+    return cls
+
+
+class Rule:
+    id = "QSQ000"
+    name = "abstract"
+    summary = ""
+
+    def check(self, ctx: FileContext) -> Iterator[Violation]:
+        raise NotImplementedError
+
+    def violation(self, ctx: FileContext, node: ast.AST,
+                  message: str) -> Violation:
+        return Violation(
+            path=ctx.path, line=node.lineno, col=node.col_offset,
+            rule=self.id, message=message,
+            qualname=ctx.analysis.qualname_of(node),
+        )
+
+
+# --------------------------------------------------------------------------
+# QSQ001
+# --------------------------------------------------------------------------
+@register
+class NoDenseHotPath(Rule):
+    id = "QSQ001"
+    name = "no-dense-hot-path"
+    summary = ("dense-materializing calls (as_dense/dequantize/dense_tree) "
+               "are forbidden inside serve/, models/, kernels/")
+
+    def check(self, ctx: FileContext) -> Iterator[Violation]:
+        if not ctx.config.is_hot_path(ctx.path):
+            return
+        dense = set(ctx.config.dense_calls)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            name = None
+            if isinstance(func, ast.Attribute) and func.attr in dense:
+                name = func.attr
+            elif isinstance(func, ast.Name) and func.id in dense:
+                name = func.id
+            if name is not None:
+                yield self.violation(
+                    ctx, node,
+                    f"`{name}()` materializes a dense weight on a hot path; "
+                    f"route packed leaves through `.matmul()`/the dispatch "
+                    f"kernels, or pragma with a justification if this path "
+                    f"is provably cold",
+                )
+
+
+# --------------------------------------------------------------------------
+# QSQ002
+# --------------------------------------------------------------------------
+class _TracedBodyChecker:
+    """Single forward walk over one jitted/scanned function body with a
+    name-level taint set (non-static parameters and everything derived
+    from them, minus `.shape`-style static projections)."""
+
+    def __init__(self, rule: Rule, ctx: FileContext, fn: ast.AST,
+                 statics: frozenset[str]):
+        self.rule = rule
+        self.ctx = ctx
+        self.fn = fn
+        self.tainted: set[str] = {
+            a for a in _all_args(fn.args) if a not in statics
+        }
+        self.violations: list[Violation] = []
+
+    def run(self) -> list[Violation]:
+        self._block(self.fn.body)
+        return self.violations
+
+    # -- statements --------------------------------------------------------
+    def _block(self, stmts) -> None:
+        for s in stmts:
+            self._stmt(s)
+
+    def _stmt(self, s: ast.stmt) -> None:
+        if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            return  # separate trace scope; scan bodies are checked on their own
+        if isinstance(s, ast.Assign):
+            self._expr(s.value)
+            taint = expr_taints(s.value, self.tainted)
+            for t in s.targets:
+                self._assign(t, taint)
+        elif isinstance(s, ast.AnnAssign):
+            if s.value is not None:
+                self._expr(s.value)
+                self._assign(s.target, expr_taints(s.value, self.tainted))
+        elif isinstance(s, ast.AugAssign):
+            self._expr(s.value)
+            if isinstance(s.target, ast.Name):
+                if expr_taints(s.value, self.tainted):
+                    self.tainted.add(s.target.id)
+        elif isinstance(s, (ast.If, ast.While)):
+            if expr_taints(s.test, self.tainted):
+                kind = "if" if isinstance(s, ast.If) else "while"
+                self.violations.append(self.rule.violation(
+                    self.ctx, s,
+                    f"Python `{kind}` on a traced value inside a jitted/"
+                    f"scanned body — trace-time control flow must branch on "
+                    f"static args or shapes (use jnp.where/lax.cond for "
+                    f"data-dependent logic)"))
+            self._expr(s.test)
+            self._block(s.body)
+            self._block(s.orelse)
+        elif isinstance(s, ast.For):
+            self._expr(s.iter)
+            self._assign(s.target, expr_taints(s.iter, self.tainted))
+            self._block(s.body)
+            self._block(s.orelse)
+        elif isinstance(s, ast.With):
+            for item in s.items:
+                self._expr(item.context_expr)
+                if item.optional_vars is not None:
+                    self._assign(item.optional_vars,
+                                 expr_taints(item.context_expr, self.tainted))
+            self._block(s.body)
+        elif isinstance(s, ast.Try):
+            self._block(s.body)
+            for h in s.handlers:
+                self._block(h.body)
+            self._block(s.orelse)
+            self._block(s.finalbody)
+        elif isinstance(s, ast.Delete):
+            for t in s.targets:
+                if isinstance(t, ast.Name):
+                    self.tainted.discard(t.id)
+        elif isinstance(s, ast.Return):
+            if s.value is not None:
+                self._expr(s.value)
+        elif isinstance(s, (ast.Expr, ast.Raise, ast.Assert)):
+            for child in ast.iter_child_nodes(s):
+                self._expr(child)
+        # pass/break/continue/global/import: nothing to do
+
+    def _assign(self, target: ast.AST, taint: bool) -> None:
+        if isinstance(target, ast.Name):
+            if taint:
+                self.tainted.add(target.id)
+            else:
+                self.tainted.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._assign(elt, taint)
+        elif isinstance(target, ast.Starred):
+            self._assign(target.value, taint)
+        # Subscript/Attribute targets mutate objects; no name taint change
+
+    # -- expressions -------------------------------------------------------
+    def _expr(self, e: ast.AST) -> None:
+        aliases = self.ctx.analysis.aliases
+        for node in walk_expr(e):
+            if isinstance(node, ast.NamedExpr):
+                self._assign(node.target,
+                             expr_taints(node.value, self.tainted))
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            args = [*node.args, *[kw.value for kw in node.keywords]]
+            if (isinstance(func, ast.Attribute) and func.attr == "item"
+                    and expr_taints(func.value, self.tainted)):
+                self.violations.append(self.rule.violation(
+                    self.ctx, node,
+                    "`.item()` on a traced value forces a host sync at "
+                    "trace time (ConcretizationTypeError under jit)"))
+            elif (isinstance(func, ast.Name)
+                  and func.id in ("int", "float", "bool")
+                  and func.id not in aliases
+                  and any(expr_taints(a, self.tainted) for a in args)):
+                self.violations.append(self.rule.violation(
+                    self.ctx, node,
+                    f"`{func.id}()` coerces a traced value to a Python "
+                    f"scalar inside a jitted/scanned body"))
+            else:
+                name = dotted(func, aliases)
+                if (name is not None
+                        and name.startswith("numpy.")
+                        and any(expr_taints(a, self.tainted) for a in args)):
+                    self.violations.append(self.rule.violation(
+                        self.ctx, node,
+                        f"`{name}` called on a traced value — host numpy "
+                        f"inside a jitted/scanned body concretizes the "
+                        f"tracer; use jnp"))
+
+
+def _jit_contexts_with_factories(ctx: FileContext):
+    """This module's jit contexts, plus inner defs of local factories
+    that the PROJECT jits somewhere (e.g. step.py's cont_step, jitted
+    from engine.py)."""
+    analysis = ctx.analysis
+    contexts = dict(analysis.jit_contexts)
+    for site in ctx.index.all_factory_jit_sites:
+        info = ctx.index.find_factory(site.callee)
+        if info is None or info.path != ctx.path:
+            continue
+        local = analysis.factories.get(info.name)
+        if local is None:
+            continue
+        for inner in local.inners:
+            statics = static_names_from_jit(
+                site.jit_call.keywords, positional_params(inner.args))
+            prev = contexts.get(inner)
+            if prev is not None:
+                statics = statics | prev.static_names
+            contexts[inner] = JitContext(inner, statics, "factory-inner")
+    return contexts
+
+
+@register
+class TracerLeak(Rule):
+    id = "QSQ002"
+    name = "tracer-leak"
+    summary = (".item()/int()/float()/bool()/np.* on traced values and "
+               "Python if/while on them inside jitted or scanned bodies")
+
+    def check(self, ctx: FileContext) -> Iterator[Violation]:
+        contexts = _jit_contexts_with_factories(ctx)
+        for fn, jc in contexts.items():
+            checker = _TracedBodyChecker(self, ctx, fn, jc.static_names)
+            yield from checker.run()
+
+
+# --------------------------------------------------------------------------
+# QSQ003
+# --------------------------------------------------------------------------
+@register
+class StaticArgDiscipline(Rule):
+    id = "QSQ003"
+    name = "static-arg-discipline"
+    summary = ("demand/drop-style params must be static at every jit site; "
+               "plane_mask/tiers/active must never be")
+
+    def check(self, ctx: FileContext) -> Iterator[Violation]:
+        must = set(ctx.config.static_params)
+        never = set(ctx.config.never_static)
+        analysis = ctx.analysis
+
+        # (a) decorator/call-site-jitted defs in this module
+        for fn, jc in analysis.jit_contexts.items():
+            if jc.reason == "scan-body":
+                continue
+            params = set(_all_args(fn.args))
+            missing = sorted((params & must) - jc.static_names)
+            if missing:
+                yield self.violation(
+                    ctx, fn,
+                    f"`{fn.name}` threads {missing} but its jit does not "
+                    f"declare them static (static_argnames/static_argnums) "
+                    f"— a traced demand retraces per value or leaks")
+            frozen = sorted(jc.static_names & never)
+            if frozen:
+                yield self.violation(
+                    ctx, fn,
+                    f"`{fn.name}` marks {frozen} static, but these are "
+                    f"traced-by-design mask-flip operands — static here "
+                    f"means one retrace per tier/mask change")
+
+        # (b) jit-the-factory-product sites, resolved cross-module
+        for site in analysis.factory_jit_sites:
+            info = ctx.index.find_factory(site.callee)
+            if info is None:
+                continue
+            for inner in info.inners:
+                params = positional_params(inner.args)
+                statics = static_names_from_jit(site.jit_call.keywords, params)
+                missing = sorted((set(params) & must) - statics)
+                if missing:
+                    yield Violation(
+                        path=ctx.path, line=site.lineno, col=site.col,
+                        rule=self.id, qualname=site.qualname,
+                        message=(
+                            f"jit of `{info.name}(...)` product: inner "
+                            f"`{inner.name}` threads {missing} without a "
+                            f"matching static_argnums/static_argnames "
+                            f"(expected indices "
+                            f"{[params.index(m) for m in missing]})"))
+                frozen = sorted(statics & never)
+                if frozen:
+                    yield Violation(
+                        path=ctx.path, line=site.lineno, col=site.col,
+                        rule=self.id, qualname=site.qualname,
+                        message=(
+                            f"jit of `{info.name}(...)` product marks "
+                            f"{frozen} static — these are mask-flip "
+                            f"operands and must stay traced"))
+
+
+# --------------------------------------------------------------------------
+# QSQ004
+# --------------------------------------------------------------------------
+def _bound_names(fn: ast.AST) -> set[str]:
+    """Every name bound anywhere inside ``fn``'s subtree (params, locals,
+    nested defs and their params, loop/with/comprehension targets)."""
+    bound: set[str] = set(_all_args(fn.args))
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            bound.add(node.name)
+            bound.update(_all_args(node.args))
+        elif isinstance(node, ast.Lambda):
+            bound.update(_all_args(node.args))
+        elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            bound.add(node.id)
+        elif isinstance(node, ast.ExceptHandler) and node.name:
+            bound.add(node.name)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for a in node.names:
+                bound.add(a.asname or a.name.split(".")[0])
+    return bound
+
+
+def _array_valued(value: ast.AST, analysis: ModuleAnalysis) -> bool:
+    """Is a module-level binding's RHS an array constructor expression?"""
+    for node in ast.walk(value):
+        if isinstance(node, ast.Call):
+            name = dotted(node.func, analysis.aliases)
+            if name is not None and name.startswith(ARRAY_MODULES):
+                return True
+    return False
+
+
+@register
+class KernelPurity(Rule):
+    id = "QSQ004"
+    name = "kernel-purity"
+    summary = ("Pallas kernel bodies must not capture arrays from enclosing "
+               "scopes; BlockSpec/scratch shapes must be static expressions")
+
+    def check(self, ctx: FileContext) -> Iterator[Violation]:
+        analysis = ctx.analysis
+        yield from self._check_kernel_bodies(ctx, analysis)
+        yield from self._check_shapes(ctx, analysis)
+
+    # (a) closure / module-array capture inside kernel bodies
+    def _check_kernel_bodies(self, ctx, analysis) -> Iterator[Violation]:
+        for kernel in analysis.kernels:
+            bound = _bound_names(kernel)
+            parent = analysis.fn_parent.get(kernel, analysis.module_scope)
+            reported: set[str] = set()
+            for node in ast.walk(kernel):
+                if (not isinstance(node, ast.Name)
+                        or not isinstance(node.ctx, ast.Load)
+                        or node.id in bound or node.id in reported):
+                    continue
+                hit = parent.resolve(node.id)
+                if hit is None:
+                    if not is_builtin(node.id):
+                        reported.add(node.id)
+                    continue
+                scope, binding = hit
+                if scope.node is not analysis.tree:
+                    reported.add(node.id)
+                    yield self.violation(
+                        ctx, node,
+                        f"kernel `{kernel.name}` closes over `{node.id}` "
+                        f"from enclosing scope `{scope.qualname}` — pass "
+                        f"operands through refs/BlockSpecs and config "
+                        f"through functools.partial keywords")
+                elif (isinstance(binding, ast.expr)
+                      and _array_valued(binding, analysis)):
+                    reported.add(node.id)
+                    yield self.violation(
+                        ctx, node,
+                        f"kernel `{kernel.name}` captures module-level "
+                        f"array `{node.id}` — a closure-captured device "
+                        f"array is an invisible kernel operand (no "
+                        f"BlockSpec, no VMEM budget); thread it as an "
+                        f"input ref")
+
+    # (b) dynamic shapes in BlockSpec / scratch allocations
+    def _check_shapes(self, ctx, analysis) -> Iterator[Violation]:
+        # taint per enclosing jitted fn, so `VMEM((m, bn), ...)` with m
+        # from `x.shape` passes while a traced extent fails
+        taint_by_fn: dict[ast.AST, set[str]] = {}
+        for fn, jc in analysis.jit_contexts.items():
+            taint_by_fn[fn] = {
+                a for a in _all_args(fn.args) if a not in jc.static_names
+            }
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted(node.func, analysis.aliases)
+            if name not in BLOCKSPEC_CALLS:
+                continue
+            shape_arg = None
+            if node.args:
+                shape_arg = node.args[0]
+            else:
+                for kw in node.keywords:
+                    if kw.arg == "block_shape":
+                        shape_arg = kw.value
+            if shape_arg is None:
+                continue
+            # resolve the enclosing jitted fn's taint set (empty if the
+            # wrapper is not jitted — the Call check still applies)
+            cur = analysis.parent_map.get(node)
+            tainted: set[str] = set()
+            while cur is not None:
+                if cur in taint_by_fn:
+                    tainted = taint_by_fn[cur]
+                    break
+                cur = analysis.parent_map.get(cur)
+            elements = (shape_arg.elts
+                        if isinstance(shape_arg, (ast.Tuple, ast.List))
+                        else [shape_arg])
+            short = name.rsplit(".", 1)[-1]
+            for elt in elements:
+                calls = [n for n in walk_expr(elt) if isinstance(n, ast.Call)]
+                if calls:
+                    yield self.violation(
+                        ctx, elt,
+                        f"`{short}` shape element is computed by a call at "
+                        f"trace time — block/scratch shapes must be static "
+                        f"Python ints (hoist the computation before the "
+                        f"pallas_call and branch on static config)")
+                elif expr_taints(elt, tainted):
+                    yield self.violation(
+                        ctx, elt,
+                        f"`{short}` shape element depends on a traced "
+                        f"value — Pallas block/scratch extents are fixed "
+                        f"at trace time; derive them from `.shape`/static "
+                        f"args instead")
+
+
+# --------------------------------------------------------------------------
+# QSQ005
+# --------------------------------------------------------------------------
+@register
+class TraceTimeCounters(Rule):
+    id = "QSQ005"
+    name = "trace-time-counters"
+    summary = ("dispatch.counters/dispatch.traffic mutate only in the "
+               "dispatch module's designated trace-time helpers")
+
+    MUTATORS = frozenset({"clear", "update", "subtract", "pop", "popitem",
+                          "setdefault", "__setitem__", "__delitem__"})
+
+    def _is_counter(self, node: ast.AST, analysis: ModuleAnalysis,
+                    objects: set[str]) -> bool:
+        name = analysis.canonical(node)
+        return name is not None and name in objects
+
+    def check(self, ctx: FileContext) -> Iterator[Violation]:
+        analysis = ctx.analysis
+        objects = set(ctx.config.counter_objects)
+        kernels = set(analysis.kernels)
+
+        def flag(node, what: str):
+            qual = analysis.qualname_of(node)
+            in_kernel = any(self._inside(analysis, node, k) for k in kernels)
+            if in_kernel:
+                return self.violation(
+                    ctx, node,
+                    f"{what} inside a Pallas kernel body — counters are "
+                    f"trace-time bookkeeping and must never enter a kernel")
+            if ctx.config.counter_scope_allowed(ctx.path, qual):
+                return None
+            return self.violation(
+                ctx, node,
+                f"{what} outside the designated dispatch helpers "
+                f"(allowed scopes: config `counter_scopes`); tests that "
+                f"deliberately seed counters need a pragma + justification")
+
+        for node in ast.walk(ctx.tree):
+            v = None
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    base = t.value if isinstance(t, ast.Subscript) else t
+                    if self._is_counter(base, analysis, objects):
+                        v = flag(node, "dispatch counter mutation")
+                        break
+            elif isinstance(node, ast.Delete):
+                for t in node.targets:
+                    base = t.value if isinstance(t, ast.Subscript) else t
+                    if self._is_counter(base, analysis, objects):
+                        v = flag(node, "dispatch counter deletion")
+                        break
+            elif isinstance(node, ast.Call):
+                func = node.func
+                if (isinstance(func, ast.Attribute)
+                        and func.attr in self.MUTATORS
+                        and self._is_counter(func.value, analysis, objects)):
+                    v = flag(node, f"dispatch counter `.{func.attr}()`")
+            if v is not None:
+                yield v
+
+    @staticmethod
+    def _inside(analysis: ModuleAnalysis, node: ast.AST,
+                kernel: ast.AST) -> bool:
+        cur = node
+        while cur is not None:
+            if cur is kernel:
+                return True
+            cur = analysis.parent_map.get(cur)
+        return False

@@ -1,5 +1,3 @@
-from repro.checkpoint.manager import (
-    CheckpointConfig, CheckpointManager, save_pytree, load_pytree,
-)
+from repro.checkpoint.manager import CheckpointConfig, CheckpointManager, load_pytree, save_pytree
 
 __all__ = ["CheckpointConfig", "CheckpointManager", "save_pytree", "load_pytree"]

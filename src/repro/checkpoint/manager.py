@@ -57,7 +57,7 @@ def load_pytree(tree_like, path: Path, sharding=None):
     shard_flat = None
     if sharding is not None:
         shard_flat = jax.tree_util.tree_flatten(sharding)[0]
-    for i, (pth, leaf) in enumerate(flat):
+    for i, (pth, _leaf) in enumerate(flat):
         key = jax.tree_util.keystr(pth)
         arr = data[key]
         if shard_flat is not None:

@@ -1,7 +1,14 @@
 """Per-architecture configs (--arch <id>) + the paper's own CNNs."""
 from repro.configs.base import (
-    ARCH_IDS, SHAPES, ArchConfig, MoEConfig, HybridConfig, ShapeConfig,
-    get_arch, canonical, cell_is_supported,
+    ARCH_IDS,
+    SHAPES,
+    ArchConfig,
+    HybridConfig,
+    MoEConfig,
+    ShapeConfig,
+    canonical,
+    cell_is_supported,
+    get_arch,
 )
 
 __all__ = ["ARCH_IDS", "SHAPES", "ArchConfig", "MoEConfig", "HybridConfig",

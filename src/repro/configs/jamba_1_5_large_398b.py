@@ -7,7 +7,7 @@ of dim 128, 8 groups, state 128.
 """
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, MoEConfig, HybridConfig
+from repro.configs.base import ArchConfig, HybridConfig, MoEConfig
 
 CONFIG = ArchConfig(
     name="jamba-1.5-large-398b",

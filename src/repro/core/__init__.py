@@ -1,21 +1,21 @@
 """QSQ core: quantizer (Eq. 5-10), codec (Table II), CSD multipliers, energy model."""
+from repro.core import codec, csd, energy
+from repro.core.policy import QuantPolicy, budgeted_policy, sensitivity_rank
 from repro.core.qsq import (
+    LEVEL_TABLE,
     QSQConfig,
     QSQTensor,
-    quantize,
-    dequantize,
-    quantization_error,
-    zeros_fraction,
-    levels_for_phi,
     bits_per_code,
-    theta_levels,
-    levels_to_codes,
     codes_to_levels,
+    dequantize,
     exhaustive_threshold_search,
-    LEVEL_TABLE,
+    levels_for_phi,
+    levels_to_codes,
+    quantization_error,
+    quantize,
+    theta_levels,
+    zeros_fraction,
 )
-from repro.core import codec, csd, energy
-from repro.core.policy import QuantPolicy, sensitivity_rank, budgeted_policy
 
 __all__ = [
     "QSQConfig", "QSQTensor", "quantize", "dequantize", "quantization_error",

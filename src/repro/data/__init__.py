@@ -1,5 +1,8 @@
 from repro.data.pipeline import (
-    LMDataConfig, lm_batch_iterator, synthetic_image_dataset, DataIteratorState,
+    DataIteratorState,
+    LMDataConfig,
+    lm_batch_iterator,
+    synthetic_image_dataset,
 )
 
 __all__ = ["LMDataConfig", "lm_batch_iterator", "synthetic_image_dataset",

@@ -10,10 +10,8 @@ dispatch     — shape-aware routing between the kernels and the XLA ref,
 Each kernel has a pure-jnp oracle in ref.py; tests sweep shapes/dtypes with
 interpret=True and assert_allclose against the oracle.
 """
-from repro.kernels.ops import (
-    qsq_matmul, qsq_matvec, qsq_quantize, pack_weight, auto_interpret,
-)
 from repro.kernels import ref
+from repro.kernels.ops import auto_interpret, pack_weight, qsq_matmul, qsq_matvec, qsq_quantize
 
 __all__ = [
     "qsq_matmul", "qsq_matvec", "qsq_quantize", "pack_weight",

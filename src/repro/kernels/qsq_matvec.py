@@ -34,7 +34,11 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.qsq_matmul import (
-    _COMPILER_PARAMS, PLANE, _check_planes_shape, _decoder, _planes_spec,
+    _COMPILER_PARAMS,
+    PLANE,
+    _check_planes_shape,
+    _decoder,
+    _planes_spec,
     _unpack,
 )
 from repro.kernels.ref import MASK_VARIANTS

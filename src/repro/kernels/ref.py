@@ -16,9 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import codec
-from repro.core.qsq import (
-    codes_to_levels, levels_to_codes, smcodes_to_levels,
-)
+from repro.core.qsq import codes_to_levels, levels_to_codes, smcodes_to_levels
 
 # The three plane masks a quality tier can put on a row: keep all 3 code
 # planes, drop the LSB plane, drop the two LSB planes (drop = 0, 1, 2).

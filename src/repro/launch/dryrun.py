@@ -24,9 +24,7 @@ import numpy as np  # noqa: E402
 
 from repro.configs import ARCH_IDS, SHAPES, cell_is_supported, get_arch  # noqa: E402
 from repro.core.energy import roofline_terms  # noqa: E402
-from repro.launch.mesh import (  # noqa: E402
-    make_production_mesh, mesh_axis_sizes, sharding_rules,
-)
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes, sharding_rules  # noqa: E402
 from repro.models.api import Model  # noqa: E402
 from repro.models.base import abstract_params, partition_specs  # noqa: E402
 from repro.train.state import train_state_descs  # noqa: E402
@@ -88,7 +86,7 @@ def model_flops_estimate(model: Model, shape) -> float:
     descs = model.param_descs()
     n_total = 0
     n_active = 0.0
-    for path, d in jax.tree_util.tree_leaves_with_path(
+    for _path, d in jax.tree_util.tree_leaves_with_path(
         descs, is_leaf=lambda x: hasattr(x, "axes")
     ):
         numel = int(np.prod(d.shape))

@@ -66,4 +66,4 @@ def sharding_rules(mesh, *, fsdp: bool = True) -> Mapping[str, tuple]:
 
 
 def mesh_axis_sizes(mesh) -> dict:
-    return dict(zip(mesh.axis_names, mesh.devices.shape))
+    return dict(zip(mesh.axis_names, mesh.devices.shape, strict=True))

@@ -127,7 +127,7 @@ def main():
     t0 = time.time()
     outs = engine.generate(prompts, max_new=args.max_new)
     dt = time.time() - t0
-    for p, o in zip(prompts, outs):
+    for p, o in zip(prompts, outs, strict=True):
         print(f"  {p} -> {o}")
     n = len(prompts) * args.max_new
     print(f"{n} tokens in {dt:.2f}s ({n / dt:.1f} tok/s)")

@@ -1,7 +1,7 @@
 """Model zoo: dense/MoE/VLM transformers, Mamba2, Jamba hybrid, Whisper
 enc-dec, and the paper's LeNet/ConvNet."""
+from repro.models import base, cnn, encdec, hybrid, layers, mamba_lm, ssm, transformer
 from repro.models.api import Model
-from repro.models import base, layers, ssm, transformer, hybrid, mamba_lm, encdec, cnn
 
 __all__ = ["Model", "base", "layers", "ssm", "transformer", "hybrid",
            "mamba_lm", "encdec", "cnn"]

@@ -156,9 +156,7 @@ class Model:
         packed leaf for PER-REQUEST tier masking at matmul time (packed
         serving only)."""
         from repro.models.base import abstract_params
-        from repro.quant.store import (
-            dense_tree, serve_tree, tree_from_wire, truncate_tree,
-        )
+        from repro.quant.store import dense_tree, serve_tree, tree_from_wire, truncate_tree
 
         store = tree_from_wire(wire_tree)
         descs = self.param_descs()
@@ -172,6 +170,8 @@ class Model:
             )
         if drop_map:
             store = truncate_tree(store, drop_map)
+        # qsqlint: disable=QSQ001 -- the explicit packed=False opt-out:
+        # caller asked for full dense decode at load time, once
         return dense_tree(store, like=abstract_params(descs)), 0
 
     # -- inputs ----------------------------------------------------------

@@ -95,7 +95,7 @@ def init_params(key: jax.Array, descs) -> Any:
     """Materialize real arrays from a descriptor tree."""
     leaves, treedef = jax.tree_util.tree_flatten(descs, is_leaf=_is_desc)
     keys = jax.random.split(key, len(leaves))
-    arrs = [_init_one(k, d) for k, d in zip(keys, leaves)]
+    arrs = [_init_one(k, d) for k, d in zip(keys, leaves, strict=True)]
     return jax.tree_util.tree_unflatten(treedef, arrs)
 
 
@@ -116,7 +116,7 @@ def spec_for_shape(
     shard at most one dim (first dim wins)."""
     used: set = set()
     entries = []
-    for size, name in zip(shape, axes):
+    for size, name in zip(shape, axes, strict=True):
         mesh_axes = tuple(rules.get(name, ())) if name else ()
         mesh_axes = tuple(a for a in mesh_axes if a not in used)
         prod = int(np.prod([mesh_axis_sizes[a] for a in mesh_axes])) if mesh_axes else 1
@@ -161,7 +161,7 @@ def set_activation_rules(rules: Mapping[str, Sequence[str]] | None, mesh=None) -
 def constrain(x: jax.Array, axes: tuple) -> jax.Array:
     if not _ACT_RULES or _ACT_MESH is None:
         return x
-    sizes = dict(zip(_ACT_MESH.axis_names, _ACT_MESH.devices.shape))
+    sizes = dict(zip(_ACT_MESH.axis_names, _ACT_MESH.devices.shape, strict=True))
     spec = spec_for_shape(x.shape, axes, _ACT_RULES, sizes)
     return jax.lax.with_sharding_constraint(
         x, jax.sharding.NamedSharding(_ACT_MESH, spec)
@@ -176,7 +176,7 @@ def data_shard_count() -> int:
     cumsum/scatter then never crosses a data-parallel boundary."""
     if not _ACT_RULES or _ACT_MESH is None:
         return 1
-    sizes = dict(zip(_ACT_MESH.axis_names, _ACT_MESH.devices.shape))
+    sizes = dict(zip(_ACT_MESH.axis_names, _ACT_MESH.devices.shape, strict=True))
     return int(np.prod([sizes[a] for a in _ACT_RULES.get("batch", ()) if a in sizes]))
 
 

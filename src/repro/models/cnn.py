@@ -87,7 +87,7 @@ def cnn_descs(cfg: CNNConfig) -> dict:
 def cnn_forward(params: dict, cfg: CNNConfig, images: jax.Array) -> jax.Array:
     """images: (B, H, W, C) f32 -> logits (B, n_classes)."""
     x = images.astype(jnp.float32)
-    for cs, p in zip(cfg.convs, params["convs"]):
+    for cs, p in zip(cfg.convs, params["convs"], strict=True):
         x = jax.lax.conv_general_dilated(
             x, p["w"], window_strides=(1, 1), padding="SAME",
             dimension_numbers=("NHWC", "HWIO", "NHWC"),

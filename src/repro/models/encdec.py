@@ -14,8 +14,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import layers as L
-from repro.models.layers import W as L_W
 from repro.models.base import ParamDesc, dense, map_stacked, xscan
+from repro.models.layers import W as L_W
 
 
 def _gelu_mlp_descs(d: int, ff: int, dtype) -> dict:

@@ -33,6 +33,8 @@ from repro.quant.store import is_store
 def W(p):
     """Weight view: decode a WeightStore leaf to dense, pass arrays through."""
     if is_store(p):
+        # qsqlint: disable=QSQ001 -- decode-at-consumption for non-matmul
+        # leaves (norms, embeddings); matmul weights go through matvec()
         return p.as_dense()
     return p
 

@@ -1,8 +1,6 @@
 from repro.optim.adamw import AdamWConfig, OptState, adamw_init_descs, adamw_update
+from repro.optim.compression import GradCompressionConfig, compress_grads, compression_state_descs
 from repro.optim.schedule import cosine_schedule
-from repro.optim.compression import (
-    GradCompressionConfig, compression_state_descs, compress_grads,
-)
 
 __all__ = [
     "AdamWConfig", "OptState", "adamw_init_descs", "adamw_update",

@@ -1,10 +1,10 @@
 """Applying QSQ to whole model pytrees (quantize / dequantize / packed store)."""
 from repro.quant.pytree import (
     QuantizedParams,
-    quantize_pytree,
     dequantize_pytree,
-    pytree_bits_report,
     pack_pytree_wire,
+    pytree_bits_report,
+    quantize_pytree,
     unpack_pytree_wire,
 )
 
@@ -42,13 +42,7 @@ __all__ += [
     "truncate_tree", "max_level_delta", "plane_mask_for_drop",
 ]
 
-from repro.quant.artifact import (
-    DEFAULT_TIERS,
-    EdgeArtifact,
-    QualitySpec,
-    QualityTier,
-    compress,
-)
+from repro.quant.artifact import DEFAULT_TIERS, EdgeArtifact, QualitySpec, QualityTier, compress
 
 __all__ += [
     "EdgeArtifact", "QualitySpec", "QualityTier", "DEFAULT_TIERS", "compress",

@@ -41,8 +41,15 @@ from repro.configs.base import ArchConfig, HybridConfig, MoEConfig
 from repro.core.policy import QuantPolicy, budgeted_policy, path_str
 from repro.core.qsq import QSQConfig
 from repro.quant.store import (
-    QSQWeight, dense_tree, is_store, max_level_delta, packable_leaf,
-    quantize_tree, tree_from_wire, tree_to_wire, truncate_tree,
+    QSQWeight,
+    dense_tree,
+    is_store,
+    max_level_delta,
+    packable_leaf,
+    quantize_tree,
+    tree_from_wire,
+    tree_to_wire,
+    truncate_tree,
 )
 
 META_KEY = "__edge_meta__"

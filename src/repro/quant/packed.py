@@ -19,15 +19,19 @@ HBM-residency and weight-streaming win measured by
 """
 from __future__ import annotations
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import codec
 from repro.core.qsq import QSQConfig, quantize
 from repro.models.base import ParamDesc, _is_desc
 from repro.quant.store import (  # noqa: F401 — axes/paths re-exported
-    CONTRACT_AXES, EXCLUDE_PATHS, PackedWeight, contract_idx, kernel_eligible,
+    CONTRACT_AXES,
+    EXCLUDE_PATHS,
+    PackedWeight,
+    contract_idx,
+    kernel_eligible,
 )
 
 

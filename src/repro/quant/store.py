@@ -36,8 +36,15 @@ import numpy as np
 from repro.core import codec
 from repro.core.policy import QuantPolicy, path_str
 from repro.core.qsq import (
-    LEVEL_TABLE, SM_LEVEL_TABLE, QSQTensor, _quantize_impl, codes_to_levels,
-    levels_to_codes, levels_to_smcodes, quantize, smcodes_to_levels,
+    LEVEL_TABLE,
+    SM_LEVEL_TABLE,
+    QSQTensor,
+    _quantize_impl,
+    codes_to_levels,
+    levels_to_codes,
+    levels_to_smcodes,
+    quantize,
+    smcodes_to_levels,
 )
 
 # Logical axes a 2-D-view matmul contracts over, and path fragments that

@@ -67,8 +67,12 @@ from repro.models.api import Model
 from repro.models.base import init_params
 from repro.serve.scheduler import Request, Scheduler, plane_demand
 from repro.train.step import (
-    make_admit_step, make_cache_prefill_step, make_cont_decode_step,
-    make_decode_loop, make_sample_decode_loop, make_serve_step,
+    make_admit_step,
+    make_cache_prefill_step,
+    make_cont_decode_step,
+    make_decode_loop,
+    make_sample_decode_loop,
+    make_serve_step,
     supports_fused_prefill,
 )
 
@@ -136,7 +140,8 @@ class ServeEngine:
         # when the engine serves per-request tiers); None = single-tier
         self.tier_names: list[str] | None = None
         self.serve_step = jax.jit(make_serve_step(model))
-        self._prefill = jax.jit(make_cache_prefill_step(model))
+        self._prefill = jax.jit(make_cache_prefill_step(model),
+                                static_argnums=(5,))  # demand: see below
         self._decode_loop = jax.jit(make_decode_loop(model))
         self._sample_loop = None  # jitted lazily; most engines stay greedy
         # continuous-batching programs (attention families; traced lazily).

@@ -1,5 +1,8 @@
 from repro.train.state import TrainState, train_state_descs
 from repro.train.step import (
-    make_cache_prefill_step, make_decode_loop, make_prefill_step,
-    make_serve_step, make_train_step,
+    make_cache_prefill_step,
+    make_decode_loop,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
 )

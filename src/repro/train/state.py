@@ -4,10 +4,7 @@ from __future__ import annotations
 from typing import Any, NamedTuple
 
 from repro.models.api import Model
-from repro.optim import (
-    GradCompressionConfig, OptState,
-    adamw_init_descs, compression_state_descs,
-)
+from repro.optim import GradCompressionConfig, OptState, adamw_init_descs, compression_state_descs
 
 
 class TrainState(NamedTuple):

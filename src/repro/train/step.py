@@ -8,7 +8,10 @@ import jax.numpy as jnp
 
 from repro.models.api import Model
 from repro.optim import (
-    AdamWConfig, GradCompressionConfig, adamw_update, compress_grads,
+    AdamWConfig,
+    GradCompressionConfig,
+    adamw_update,
+    compress_grads,
     cosine_schedule,
 )
 from repro.train.state import TrainState

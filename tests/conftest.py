@@ -11,3 +11,17 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def no_retrace():
+    """The no_retrace() context manager from repro.analysis.retrace.
+
+    ``with no_retrace(eng._cont_step, eng._admit): ...`` asserts that
+    the block grows no jit cache and moves no dispatch counter — the
+    shared trace-once assertion for scheduler/per-request/plane-stream
+    tests (QSQ002/QSQ003 argue the same thing statically).
+    """
+    from repro.analysis.retrace import no_retrace as _no_retrace
+
+    return _no_retrace

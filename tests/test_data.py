@@ -2,8 +2,11 @@
 import numpy as np
 
 from repro.data.pipeline import (
-    LMDataConfig, image_batches, lm_batch,
-    lm_batch_iterator, synthetic_image_dataset,
+    LMDataConfig,
+    image_batches,
+    lm_batch,
+    lm_batch_iterator,
+    synthetic_image_dataset,
 )
 
 
@@ -41,7 +44,7 @@ def test_lm_stream_has_structure():
     toks = np.asarray(b["tokens"])
     succ = {}
     for row in toks:
-        for a, c in zip(row[:-1], row[1:]):
+        for a, c in zip(row[:-1], row[1:], strict=True):
             succ.setdefault(int(a), set()).add(int(c))
     assert max(len(v) for v in succ.values()) <= 4
 

@@ -124,8 +124,8 @@ def test_tuned_table_json_roundtrip(tmp_path):
 def test_checked_in_table_is_valid():
     table = dispatch.load_tuned_table(dispatch.DEFAULT_TABLE_PATH)
     assert "tpu" in table and "cpu" in table
-    for backend, entries in table.items():
-        for key, cfg in entries.items():
+    for _backend, entries in table.items():
+        for _key, cfg in entries.items():
             tc = dispatch.TileConfig(**cfg)
             assert tc.kind in ("gemv", "gemm")
             assert tc.bk % codec.PLANE_GROUP == 0

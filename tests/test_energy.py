@@ -21,7 +21,7 @@ def test_eq12_conv_faithful():
 
 def test_memory_savings_monotone_in_group():
     s = [energy.memory_savings(2**14, g) for g in (2, 4, 8, 16, 32, 64)]
-    assert all(b > a for a, b in zip(s, s[1:]))
+    assert all(b > a for a, b in zip(s, s[1:], strict=False))
     # asymptote: 1 - 3/32 = 0.90625
     assert s[-1] < 1 - 3 / 32
 

@@ -7,9 +7,7 @@ import pytest
 from repro.configs import get_arch
 from repro.models import Model
 from repro.models.base import init_params
-from repro.quant.packed import (
-    pack_params, packed_bits_report, packed_param_descs,
-)
+from repro.quant.packed import pack_params, packed_bits_report, packed_param_descs
 
 
 @pytest.mark.parametrize("arch", ["deepseek_7b", "mamba2_1_3b", "mixtral_8x22b"])

@@ -25,7 +25,10 @@ from repro.core.qsq import QSQConfig, quantize
 from repro.kernels import dispatch
 from repro.kernels.ref import MASK_VARIANTS
 from repro.quant.store import (
-    QSQWeight, max_level_delta, plane_mask_for_drop, set_packed_matmul_kernel,
+    QSQWeight,
+    max_level_delta,
+    plane_mask_for_drop,
+    set_packed_matmul_kernel,
 )
 
 

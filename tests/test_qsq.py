@@ -14,9 +14,17 @@ except ImportError:  # pragma: no cover - depends on the environment
     HAS_HYPOTHESIS = False
 
 from repro.core import (
-    LEVEL_TABLE, QSQConfig, codes_to_levels, dequantize, levels_for_phi,
-    levels_to_codes, quantization_error, quantize, theta_levels,
-    zeros_fraction, exhaustive_threshold_search,
+    LEVEL_TABLE,
+    QSQConfig,
+    codes_to_levels,
+    dequantize,
+    exhaustive_threshold_search,
+    levels_for_phi,
+    levels_to_codes,
+    quantization_error,
+    quantize,
+    theta_levels,
+    zeros_fraction,
 )
 
 

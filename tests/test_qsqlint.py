@@ -1,0 +1,444 @@
+"""qsqlint: each rule fires on a seeded violation at the right line,
+pragmas and allowlists suppress, and the repo itself lints clean.
+
+Snippets are written to tmp_path under paths that exercise the default
+config (hot paths under src/repro/..., the dispatch module's own
+counter-helper exemptions), then linted with ``lint_paths`` rooted at
+the tmp dir.
+"""
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import Config, lint_paths
+from repro.analysis.__main__ import main as qsqlint_main
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def write(root: Path, rel: str, source: str) -> Path:
+    path = root / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(source))
+    return path
+
+
+def lint(root: Path, *rels: str, config: Config | None = None):
+    return lint_paths(list(rels), config=config or Config(), root=root)
+
+
+def hits(violations, rule: str):
+    return [v for v in violations if v.rule == rule]
+
+
+# --------------------------------------------------------------------------
+# QSQ001 no-dense-hot-path
+# --------------------------------------------------------------------------
+def test_qsq001_dense_call_on_hot_path_flagged_at_line(tmp_path):
+    write(tmp_path, "src/repro/serve/hot.py", """\
+        def forward(p, x):
+            w = p.as_dense()
+            return w @ x
+        """)
+    vs = hits(lint(tmp_path, "src"), "QSQ001")
+    assert [(v.line, v.qualname) for v in vs] == [(2, "forward")]
+    assert "as_dense" in vs[0].message
+
+
+def test_qsq001_cold_path_not_flagged(tmp_path):
+    write(tmp_path, "tools/export.py", """\
+        def export(p):
+            return p.as_dense()
+        """)
+    assert not hits(lint(tmp_path, "tools"), "QSQ001")
+
+
+# --------------------------------------------------------------------------
+# QSQ002 tracer-leak
+# --------------------------------------------------------------------------
+def test_qsq002_leaks_in_jitted_body_flagged_at_lines(tmp_path):
+    write(tmp_path, "src/mod.py", """\
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def leaky(x):
+            if x > 0:
+                x = x + 1
+            y = float(x)
+            z = np.sum(x)
+            return y + z + x.item()
+        """)
+    lines = sorted(v.line for v in hits(lint(tmp_path, "src"), "QSQ002"))
+    assert lines == [6, 8, 9, 10]
+
+
+def test_qsq002_static_projections_do_not_taint(tmp_path):
+    write(tmp_path, "src/mod.py", """\
+        import jax
+
+        @jax.jit
+        def shapely(x, tiers=None):
+            m, k = x.shape
+            if m > k:
+                x = x.reshape(k, m)
+            if tiers is not None:
+                x = x * 2
+            n = int(x.ndim)
+            return x, len(x.shape), n
+        """)
+    assert not hits(lint(tmp_path, "src"), "QSQ002")
+
+
+def test_qsq002_static_args_are_untainted(tmp_path):
+    write(tmp_path, "src/mod.py", """\
+        import functools
+
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("mode",))
+        def dispatch(x, mode):
+            if mode == "fast":
+                return x * 2
+            return x
+        """)
+    assert not hits(lint(tmp_path, "src"), "QSQ002")
+
+
+def test_qsq002_scan_body_checked(tmp_path):
+    write(tmp_path, "src/mod.py", """\
+        import jax
+
+        def outer(xs):
+            def body(carry, x):
+                if x > 0:
+                    carry = carry + x
+                return carry, x
+            return jax.lax.scan(body, 0.0, xs)
+        """)
+    vs = hits(lint(tmp_path, "src"), "QSQ002")
+    assert [v.line for v in vs] == [5]
+
+
+def test_qsq002_factory_inner_jitted_cross_module(tmp_path):
+    write(tmp_path, "src/steps.py", """\
+        def make_step(model):
+            def step(params, x):
+                return float(x) + 1
+            return step
+        """)
+    write(tmp_path, "src/engine.py", """\
+        import jax
+
+        from steps import make_step
+
+        def build(model):
+            return jax.jit(make_step(model))
+        """)
+    vs = hits(lint(tmp_path, "src"), "QSQ002")
+    assert [(v.path, v.line) for v in vs] == [("src/steps.py", 3)]
+
+
+# --------------------------------------------------------------------------
+# QSQ003 static-arg discipline
+# --------------------------------------------------------------------------
+def test_qsq003_factory_jit_missing_static_flagged_at_site(tmp_path):
+    write(tmp_path, "src/steps.py", """\
+        def make_decode(model):
+            def step(params, cache, cur, demand=0):
+                return params, demand
+            return step
+        """)
+    write(tmp_path, "src/engine.py", """\
+        import jax
+
+        from steps import make_decode
+
+        def build(model):
+            return jax.jit(make_decode(model))
+        """)
+    vs = hits(lint(tmp_path, "src"), "QSQ003")
+    assert [(v.path, v.line) for v in vs] == [("src/engine.py", 6)]
+    assert "demand" in vs[0].message and "3" in vs[0].message
+
+
+def test_qsq003_factory_jit_with_static_argnums_clean(tmp_path):
+    write(tmp_path, "src/steps.py", """\
+        def make_decode(model):
+            def step(params, cache, cur, demand=0):
+                return params, demand
+            return step
+        """)
+    write(tmp_path, "src/engine.py", """\
+        import jax
+
+        from steps import make_decode
+
+        def build(model):
+            return jax.jit(make_decode(model), static_argnums=(3,))
+        """)
+    assert not hits(lint(tmp_path, "src"), "QSQ003")
+
+
+def test_qsq003_never_static_names_rejected(tmp_path):
+    write(tmp_path, "src/steps.py", """\
+        def make_decode(model):
+            def step(params, plane_mask, x):
+                return x
+            return step
+        """)
+    write(tmp_path, "src/engine.py", """\
+        import jax
+
+        from steps import make_decode
+
+        def build(model):
+            return jax.jit(make_decode(model),
+                           static_argnames=("plane_mask",))
+        """)
+    vs = hits(lint(tmp_path, "src"), "QSQ003")
+    assert len(vs) == 1 and "plane_mask" in vs[0].message
+
+
+def test_qsq003_decorated_def_missing_static(tmp_path):
+    write(tmp_path, "src/mod.py", """\
+        import jax
+
+        @jax.jit
+        def step(params, demand):
+            return params
+        """)
+    vs = hits(lint(tmp_path, "src"), "QSQ003")
+    assert [v.line for v in vs] == [4]
+
+
+# --------------------------------------------------------------------------
+# QSQ004 kernel purity
+# --------------------------------------------------------------------------
+def test_qsq004_closure_and_module_captures_flagged(tmp_path):
+    write(tmp_path, "src/kern.py", """\
+        import functools
+
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        TABLE = jnp.arange(8)
+
+        def _kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...] + TABLE
+
+        def run(x):
+            scale = jnp.float32(2.0)
+
+            def _inner(x_ref, o_ref):
+                o_ref[...] = x_ref[...] * scale
+
+            k = functools.partial(_kernel)
+            a = pl.pallas_call(
+                k, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)
+            b = pl.pallas_call(
+                _inner, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)
+            return a + b
+        """)
+    vs = hits(lint(tmp_path, "src"), "QSQ004")
+    messages = {v.line: v.message for v in vs}
+    assert 10 in messages and "module-level array" in messages[10]
+    assert 16 in messages and "closes over" in messages[16]
+
+
+def test_qsq004_dynamic_blockspec_shape_flagged(tmp_path):
+    write(tmp_path, "src/kern.py", """\
+        from jax.experimental import pallas as pl
+
+        def specs(n):
+            return pl.BlockSpec((min(n, 8), 128), lambda i, j: (i, j))
+        """)
+    vs = hits(lint(tmp_path, "src"), "QSQ004")
+    assert len(vs) == 1 and vs[0].line == 4
+    assert "call" in vs[0].message
+
+
+def test_qsq004_static_shapes_clean(tmp_path):
+    write(tmp_path, "src/kern.py", """\
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+
+        def specs(x, bm):
+            m, _ = x.shape
+            return (pl.BlockSpec((bm, m), lambda i, j: (i, j)),
+                    pltpu.VMEM((m, 128), jnp.float32))
+        """)
+    assert not hits(lint(tmp_path, "src"), "QSQ004")
+
+
+# --------------------------------------------------------------------------
+# QSQ005 trace-time counters
+# --------------------------------------------------------------------------
+def test_qsq005_mutation_outside_dispatch_flagged(tmp_path):
+    write(tmp_path, "src/mod.py", """\
+        from repro.kernels import dispatch
+
+        def sneaky():
+            dispatch.counters["x"] += 1
+            dispatch.traffic.clear()
+        """)
+    lines = sorted(v.line for v in hits(lint(tmp_path, "src"), "QSQ005"))
+    assert lines == [4, 5]
+
+
+def test_qsq005_dispatch_own_helpers_allowed(tmp_path):
+    write(tmp_path, "src/repro/kernels/dispatch.py", """\
+        import collections
+
+        counters = collections.Counter()
+        traffic = collections.Counter()
+
+        def packed_matmul(p):
+            counters[p.route] += 1
+
+        def reset_counters():
+            counters.clear()
+            traffic.clear()
+        """)
+    assert not hits(lint(tmp_path, "src"), "QSQ005")
+
+
+# --------------------------------------------------------------------------
+# Pragmas + allowlist
+# --------------------------------------------------------------------------
+def test_pragma_trailing_suppresses_one_line(tmp_path):
+    write(tmp_path, "src/repro/serve/hot.py", """\
+        def forward(p, q, x):
+            w = p.as_dense()  # qsqlint: disable=QSQ001 -- cold init
+            v = q.as_dense()
+            return (w + v) @ x
+        """)
+    vs = hits(lint(tmp_path, "src"), "QSQ001")
+    assert [v.line for v in vs] == [3]
+
+
+def test_pragma_standalone_comment_covers_next_code_line(tmp_path):
+    write(tmp_path, "src/repro/serve/hot.py", """\
+        def forward(p, x):
+            # qsqlint: disable=QSQ001 -- multi-line justification
+            # continues here; the pragma binds to the next code line
+            w = p.as_dense()
+            return w @ x
+        """)
+    assert not hits(lint(tmp_path, "src"), "QSQ001")
+
+
+def test_pragma_disable_file_and_all(tmp_path):
+    write(tmp_path, "src/repro/serve/whole.py", """\
+        # qsqlint: disable-file=QSQ001 -- generated shim
+        def forward(p, x):
+            return p.as_dense() @ x
+        """)
+    write(tmp_path, "src/repro/serve/everything.py", """\
+        def forward(p, x):
+            return p.as_dense() @ x  # qsqlint: disable=all -- legacy
+        """)
+    assert not lint(tmp_path, "src")
+
+
+def test_allowlist_suppresses_by_glob_and_qualname(tmp_path):
+    write(tmp_path, "src/repro/serve/hot.py", """\
+        def blessed(p):
+            return p.as_dense()
+
+        def cursed(p):
+            return p.as_dense()
+        """)
+    cfg = Config(allow=("QSQ001:src/repro/serve/*.py:blessed",))
+    vs = hits(lint(tmp_path, "src", config=cfg), "QSQ001")
+    assert [v.qualname for v in vs] == ["cursed"]
+    cfg_all = Config(allow=("QSQ001:src/repro/serve/*.py",))
+    assert not lint(tmp_path, "src", config=cfg_all)
+
+
+def test_syntax_error_reported_not_crash(tmp_path):
+    write(tmp_path, "src/bad.py", "def broken(:\n")
+    vs = lint(tmp_path, "src")
+    assert [v.rule for v in vs] == ["QSQ000"]
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+def test_cli_exit_codes(tmp_path, capsys):
+    write(tmp_path, "src/repro/serve/hot.py", """\
+        def forward(p, x):
+            return p.as_dense() @ x
+        """)
+    assert qsqlint_main(["--root", str(tmp_path), "src"]) == 1
+    out = capsys.readouterr().out
+    assert "src/repro/serve/hot.py:2" in out and "QSQ001" in out
+
+    write(tmp_path, "src/repro/serve/hot.py", """\
+        def forward(p, x):
+            return p.matmul(x)
+        """)
+    assert qsqlint_main(["--root", str(tmp_path), "src"]) == 0
+    assert qsqlint_main(["--select", "QSQ999", "src"]) == 2
+    assert qsqlint_main(["--list-rules"]) == 0
+    assert "QSQ005" in capsys.readouterr().out
+
+
+def test_cli_ignore_filters_rules(tmp_path):
+    write(tmp_path, "src/repro/serve/hot.py", """\
+        def forward(p, x):
+            return p.as_dense() @ x
+        """)
+    assert qsqlint_main(
+        ["--root", str(tmp_path), "--ignore", "QSQ001", "src"]) == 0
+
+
+# --------------------------------------------------------------------------
+# Self-lint: the repo must satisfy its own analyzer (the CI gate)
+# --------------------------------------------------------------------------
+def test_self_lint_repo_clean():
+    vs = lint_paths(["src", "tests", "benchmarks"], root=REPO_ROOT)
+    assert vs == [], "\n".join(v.format() for v in vs)
+
+
+# --------------------------------------------------------------------------
+# Runtime companion: no_retrace()
+# --------------------------------------------------------------------------
+def test_no_retrace_passes_on_cached_call(no_retrace):
+    import jax
+    import jax.numpy as jnp
+
+    f = jax.jit(lambda x: x + 1)
+    f(jnp.ones((2,)))
+    with no_retrace(f):
+        f(jnp.zeros((2,)))  # same shape: cache hit
+
+
+def test_no_retrace_detects_new_trace(no_retrace):
+    import jax
+    import jax.numpy as jnp
+
+    f = jax.jit(lambda x: x * 2)
+    f(jnp.ones((2,)))
+    with pytest.raises(AssertionError, match="retrace detected"):
+        with no_retrace(f):
+            f(jnp.ones((3,)))  # new shape: recompile
+
+
+def test_no_retrace_detects_counter_drift(no_retrace):
+    from repro.kernels import dispatch
+
+    with pytest.raises(AssertionError, match="counters moved"):
+        with no_retrace():
+            # qsqlint: disable=QSQ005 -- seeds the drift this test detects
+            dispatch.counters["drift"] += 1
+    dispatch.reset_counters()
+
+
+def test_no_retrace_rejects_unjitted(no_retrace):
+    with pytest.raises(TypeError, match="_cache_size"):
+        with no_retrace(lambda x: x):
+            pass

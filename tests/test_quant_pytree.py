@@ -7,7 +7,10 @@ from repro.core.policy import QuantPolicy
 from repro.core.qsq import QSQConfig, QSQTensor
 from repro.models.base import init_params
 from repro.quant import (
-    dequantize_pytree, pack_pytree_wire, pytree_bits_report, quantize_pytree,
+    dequantize_pytree,
+    pack_pytree_wire,
+    pytree_bits_report,
+    quantize_pytree,
     unpack_pytree_wire,
 )
 
@@ -36,7 +39,8 @@ def test_dequantize_shapes_and_finiteness():
     params = _params()
     qp = quantize_pytree(params, QuantPolicy(base=QSQConfig(group_size=16), min_numel=512))
     deq = dequantize_pytree(qp)
-    for a, b in zip(jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(deq)):
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(deq), strict=True):
         assert a.shape == b.shape
         assert np.isfinite(np.asarray(b)).all()
 

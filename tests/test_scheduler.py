@@ -147,7 +147,7 @@ def test_evict_readmit_reuses_slot(dense_setup):
     sched = eng._session.sched
     assert sched.states == [SlotState.FREE]
     assert not sched.has_work
-    for rid, p in zip(rids, prompts):
+    for rid, p in zip(rids, prompts, strict=True):
         assert out[rid] == _solo(static, p, 4)
     # the three admissions were strictly sequential through slot 0
     admits = sorted(sched.completed[r].admitted for r in rids)
@@ -200,16 +200,15 @@ def test_recurrent_family_submit_rejected_generate_works():
 # --------------------------------------------------------------------------
 # Trace stability: admissions/evictions are mask flips, not recompiles
 # --------------------------------------------------------------------------
-def test_step_traces_once_across_admissions():
+def test_step_traces_once_across_admissions(no_retrace):
     """After one admission + one decode step have traced the programs,
     further admissions, evictions and steps must not retrace: the packed
     dispatch counters (incremented ONLY at trace time) stay frozen."""
+    from repro.configs.base import ArchConfig
     from repro.core.policy import QuantPolicy
     from repro.core.qsq import QSQConfig
-    from repro.kernels import dispatch
     from repro.models import Model as M
     from repro.quant import pack_pytree_wire, quantize_pytree
-    from repro.configs.base import ArchConfig
 
     cfg = ArchConfig(name="smollm-like", family="dense", n_layers=2,
                      d_model=64, n_heads=4, n_kv=2, d_ff=128, vocab=256,
@@ -231,11 +230,10 @@ def test_step_traces_once_across_admissions():
     # warmup: one admission traces prefill+insert, one step traces decode
     eng.submit([1, 2, 3], max_new=3)
     eng.step()
-    dispatch.reset_counters()
-    r2 = eng.submit([9, 9], max_new=4)       # admission into slot 1
-    r3 = eng.submit([5, 6, 7, 8], max_new=2)  # queued, admitted after evict
-    out = eng.run_until_drained()
-    assert sum(dispatch.counters.values()) == 0, dict(dispatch.counters)
+    with no_retrace(eng._cont_step, eng._admit):
+        r2 = eng.submit([9, 9], max_new=4)       # admission into slot 1
+        r3 = eng.submit([5, 6, 7, 8], max_new=2)  # queued, admitted post-evict
+        out = eng.run_until_drained()
     assert len(out[r2]) == 4 and len(out[r3]) == 2
     # and the jitted programs each compiled exactly one specialization
     assert eng._cont_step._cache_size() == 1

@@ -7,9 +7,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import get_arch
 from repro.launch.mesh import make_debug_mesh, mesh_axis_sizes, sharding_rules
 from repro.models import Model
-from repro.models.base import (
-    ParamDesc, init_params, partition_specs, spec_for_shape,
-)
+from repro.models.base import ParamDesc, init_params, partition_specs, spec_for_shape
 
 
 RULES = {"batch": ("data",), "heads": ("model",), "mlp": ("model",),

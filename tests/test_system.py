@@ -7,9 +7,7 @@ import jax.numpy as jnp
 from repro.configs import get_arch
 from repro.core.policy import QuantPolicy
 from repro.core.qsq import QSQConfig
-from repro.data.pipeline import (
-    LMDataConfig, image_batches, lm_batch, synthetic_image_dataset,
-)
+from repro.data.pipeline import LMDataConfig, image_batches, lm_batch, synthetic_image_dataset
 from repro.models import Model
 from repro.models.base import init_params
 from repro.models.cnn import LENET, cnn_accuracy, cnn_descs, cnn_loss
@@ -69,6 +67,7 @@ def test_lenet_paper_pipeline():
         jax.tree_util.tree_leaves(
             qp.tree, is_leaf=lambda x: isinstance(x, QSQTensor)
         ),
+        strict=True,
     ):
         if isinstance(leaf_q, QSQTensor):
             total_z_fp += float(zeros_fraction(leaf_fp))

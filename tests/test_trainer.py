@@ -33,7 +33,10 @@ def _mk_trainer(tmp_path, steps=8, every=4, compression=False, name="ck"):
 def _tree_equal(a, b):
     fa = jax.tree_util.tree_leaves(a)
     fb = jax.tree_util.tree_leaves(b)
-    return all(np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(fa, fb))
+    if len(fa) != len(fb):
+        return False
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(fa, fb, strict=True))
 
 
 def test_loss_decreases():
