@@ -45,7 +45,7 @@ from repro.models.api import Model
 from repro.models.base import init_params
 from repro.quant import tree_bits_report
 from repro.quant.artifact import QualitySpec, QualityTier
-from repro.serve import ServeConfig, ServeEngine
+from repro.serve import QualityShed, ServeConfig, ServeEngine, SLOBudget, faults
 from repro.train.step import make_cache_prefill_step
 
 PROMPTS = [[1, 2, 3], [9, 9], [100, 42, 7, 8]]
@@ -71,6 +71,21 @@ PLANE_STREAM_TIERS = QualitySpec((
 PS_REQUESTS = 6
 PS_MAX_NEW = 6
 PS_SLOTS = 3
+
+# overload replay: fault-injected arrival floods through two admission
+# disciplines on the plane-stream ladder.  Latency/SLO are denominated in
+# the engine's COST CLOCK (each dispatch advances time by its weight-read
+# fraction: hi=1, mid=2/3, lo=1/3 on PLANE_STREAM_TIERS), so a tier
+# downgrade is a real latency lever.  Base gap is tuned so 1x sits inside
+# all-hi capacity and 4x is beyond even all-lo capacity.
+OV_REQUESTS = 20
+OV_MAX_NEW = 8
+OV_SLOTS = 4
+OV_MEAN_GAP = 3.4          # 1x mean inter-arrival, cost-clock units
+OV_FACTORS = (1, 2, 4)     # overload_trace compression factors
+OV_SLO = 12.0              # p90 latency budget, cost-clock units
+OV_HEADROOM = 0.8          # admission budget = headroom * SLO
+OV_DEADLINE = 3 * OV_SLO   # hard deadline -> TIMED_OUT past this
 
 
 def _model():
@@ -223,8 +238,8 @@ def _run_continuous_stream(engine, prompts, arrivals, max_new, tiers=None):
             admitted_seen.add(r.rid)
             wait_of[r.rid] = tick - arrival_of[r.rid]
         tick += 1 + len(new_admits)
-        for rid, toks in engine.poll().items():
-            outs[index_of[rid]] = toks
+        for rid, st in engine.poll().items():
+            outs[index_of[rid]] = st.tokens
             lat.append(tick - arrival_of[rid])
             wait.append(wait_of[rid])
     return lat, wait, outs, tick, time.time() - t0
@@ -404,8 +419,8 @@ def main(verbose: bool = True, quick: bool = False):
                 for p, q in zip(ps_prompts, mix_tiers, strict=True)]
         done = eng_ps.run_until_drained()
         for rid, p, q in zip(rids, ps_prompts, mix_tiers, strict=True):
-            assert done[rid] == ps_solo[q].generate([p],
-                                                    max_new=PS_MAX_NEW)[0], \
+            assert done[rid].tokens == ps_solo[q].generate(
+                [p], max_new=PS_MAX_NEW)[0], \
                 f"plane-stream {mix_name} diverged from solo {q} engine"
         meter = eng_ps.stream_stats()
         ps_stats[mix_name] = {
@@ -436,6 +451,76 @@ def main(verbose: bool = True, quick: bool = False):
         "max_new": PS_MAX_NEW,
         "lo_over_hi_bytes": round(lo_bpt / hi_bpt, 4),
         **ps_stats,
+    }))
+
+    # OVERLOAD REPLAY: identical fault-injected arrival floods through two
+    # admission disciplines on the same plane-stream artifact.  The FIFO
+    # baseline admits everything at the requested (hi) tier; QualityShed
+    # downgrades hi->mid->lo against an SLO budget and sheds only when
+    # even lo misses it.  Both run the one continuous decode dispatch —
+    # admissions, evictions and deadline timeouts are active-mask flips,
+    # never retraces — and every dropped request carries a typed
+    # finish_reason instead of a hang.  The gate: at 4x overload the
+    # shedding engine holds p90 latency under the SLO where FIFO blows it,
+    # with bounded queue depth.
+    ov_rng = np.random.default_rng(11)
+    ov_prompts = [ov_rng.integers(1, model.cfg.vocab,
+                                  size=int(ov_rng.integers(2, 6))).tolist()
+                  for _ in range(OV_REQUESTS)]
+    ov_base = faults.poisson_trace(OV_REQUESTS, OV_MEAN_GAP, seed=3)
+    policy = QualityShed(SLOBudget(latency=OV_HEADROOM * OV_SLO,
+                                   max_queue=2 * OV_SLOTS))
+    ov_engines = {
+        "fifo": ps_art.engine(quality="hi", batch_slots=OV_SLOTS,
+                              max_prompt=8, max_len=8 + OV_MAX_NEW + 1),
+        "shed": ps_art.engine(quality="hi", batch_slots=OV_SLOTS,
+                              max_prompt=8, max_len=8 + OV_MAX_NEW + 1,
+                              admission=policy),
+    }
+    ov_stats = {}
+    for disc, eng in ov_engines.items():
+        assert eng.per_request_quality
+        per_factor = {}
+        for factor in OV_FACTORS:
+            eng.reset_stream()
+            trace = faults.overload_trace(ov_base, factor)
+            report = faults.replay(eng, ov_prompts, trace,
+                                   max_new=OV_MAX_NEW, qualities="hi",
+                                   deadline=OV_DEADLINE)
+            per_factor[f"{factor}x"] = report.summary()
+            if verbose:
+                s = per_factor[f"{factor}x"]
+                print(f"  overload/{disc}@{factor}x: "
+                      f"p90={s['p90_latency']} "
+                      f"shed={s['shed_rate']} timeout={s['timeout_rate']} "
+                      f"depth={s['max_queue_depth']} mix={s['quality_mix']}")
+        ov_stats[disc] = per_factor
+    shed4 = ov_stats["shed"]["4x"]
+    fifo4 = ov_stats["fifo"]["4x"]
+    for factor in OV_FACTORS:
+        s = ov_stats["shed"][f"{factor}x"]
+        assert s["p90_latency"] <= OV_SLO, \
+            f"shed p90 {s['p90_latency']} blows SLO {OV_SLO} at {factor}x"
+    assert fifo4["p90_latency"] > OV_SLO, \
+        f"FIFO p90 {fifo4['p90_latency']} met SLO at 4x — raise overload"
+    assert shed4["max_queue_depth"] <= 2 * OV_SLOTS, \
+        f"shed queue depth {shed4['max_queue_depth']} unbounded at 4x"
+    assert shed4["shed_rate"] + shed4["reject_rate"] > 0, \
+        "4x overload never exercised shedding"
+    rows.append(("serve/overload_shed_p90_4x", shed4["p90_latency"],
+                 f"fifo_p90={fifo4['p90_latency']}|slo={OV_SLO}"
+                 f"|shed_rate={shed4['shed_rate']}"))
+    print("BENCH " + json.dumps({
+        "bench": "serve_overload",
+        "requests": OV_REQUESTS,
+        "slots": OV_SLOTS,
+        "max_new": OV_MAX_NEW,
+        "slo": OV_SLO,
+        "deadline": OV_DEADLINE,
+        "budget": OV_HEADROOM * OV_SLO,
+        "slo_met_shed_4x": shed4["p90_latency"] <= OV_SLO,
+        "slo_met_fifo_4x": fifo4["p90_latency"] <= OV_SLO,
+        **ov_stats,
     }))
 
     # quality-tier sweep: one engine per tier from the SAME artifact, lower

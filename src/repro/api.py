@@ -16,20 +16,36 @@ as thin delegates for existing callers.
 """
 from repro.quant.artifact import (
     DEFAULT_TIERS,
+    ArtifactIntegrityError,
     EdgeArtifact,
     QualitySpec,
     QualityTier,
     compress,
     default_policy,
 )
+from repro.serve import (
+    AdmissionPolicy,
+    FinishReason,
+    QualityShed,
+    RequestStatus,
+    SLOBudget,
+    SubmitRejected,
+)
 
 load = EdgeArtifact.load
 
 __all__ = [
     "DEFAULT_TIERS",
+    "AdmissionPolicy",
+    "ArtifactIntegrityError",
     "EdgeArtifact",
+    "FinishReason",
     "QualitySpec",
+    "QualityShed",
     "QualityTier",
+    "RequestStatus",
+    "SLOBudget",
+    "SubmitRejected",
     "compress",
     "default_policy",
     "load",

@@ -17,6 +17,8 @@ All functions are jit-compatible with static shapes.
 """
 from __future__ import annotations
 
+import zlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -138,6 +140,29 @@ def unpack_bitplane_major(
     return code.reshape((pm.shape[1] * PLANE_GROUP,) + pm.shape[2:]).astype(
         jnp.uint8
     )
+
+
+# --------------------------------------------------------------------------
+# Per-plane integrity (degraded-wire serving)
+# --------------------------------------------------------------------------
+def plane_crcs(codes, bits: int = 3) -> tuple[int, ...]:
+    """Per-bit-plane CRC32s of a code tensor, MSB FIRST (host-side).
+
+    Entry 0 covers the sign/MSB plane, the last entry the trailing LSB
+    plane — the same order the plane-major streaming layout stores and a
+    partial download truncates.  A receiver that checks these against an
+    artifact's stored values can tell WHICH planes a channel damaged:
+    trailing-LSB damage is recoverable (zero the plane — bit-identical
+    to a truncated download, i.e. a lower quality tier), MSB damage is
+    not.  CRCs are computed over the packed bit rows, so they are layout
+    independent (dense wire words and plane-major kernel words agree).
+    """
+    c = np.asarray(codes, dtype=np.uint8).reshape(-1)
+    out = []
+    for p in range(bits - 1, -1, -1):  # MSB first
+        row = np.packbits((c >> p) & np.uint8(1))
+        out.append(zlib.crc32(row.tobytes()) & 0xFFFFFFFF)
+    return tuple(out)
 
 
 # --------------------------------------------------------------------------

@@ -18,6 +18,13 @@ tiers (hi/mid/lo/...): every request is prefilled and decoded at its OWN
 tier inside the one shared dispatch — per-request quality, no retrace,
 no param-tree swap.
 
+Robust-serving knobs (with ``--stream``): ``--deadline`` ages requests on
+the engine's cost clock and evicts them mid-decode once past it
+(TIMED_OUT, partial tokens kept); ``--slo`` turns on QualityShed
+admission (downgrade hi->mid->lo against the budget, shed past it);
+``--max-queue`` bounds the scheduler queue (REJECTED beyond it).  Every
+terminal request prints its typed finish_reason — nothing hangs.
+
 On a real pod the same entry point builds the production mesh and shards
 params/caches with launch/mesh.py rules (see launch/dryrun.py for the
 lowering path that proves those shardings compile).
@@ -67,6 +74,18 @@ def main():
                     help="with --wire --stream: cycle arrivals through the "
                          "artifact's quality tiers — each request served "
                          "at its own tier in the one shared dispatch")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="with --stream: per-request deadline in cost-clock "
+                         "units — queued requests past it are cancelled, "
+                         "in-flight ones evicted mid-decode (TIMED_OUT)")
+    ap.add_argument("--slo", type=float, default=None,
+                    help="with --stream: enable QualityShed admission — "
+                         "downgrade tiers to hold estimated latency under "
+                         "this budget (cost-clock units), shed when even "
+                         "the lowest tier misses it")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="with --stream: bound the scheduler queue; "
+                         "arrivals beyond it finish as REJECTED")
     args = ap.parse_args()
 
     if args.slots < 1:
@@ -88,16 +107,29 @@ def main():
                  "rides the continuous scheduler on the packed artifact)")
     if args.mixed_tiers and args.dense:
         ap.error("--mixed-tiers needs packed serving (drop --dense)")
+    if not args.stream and (args.deadline is not None or args.slo is not None
+                            or args.max_queue is not None):
+        ap.error("--deadline/--slo/--max-queue only apply with --stream "
+                 "(a static generate() has no queue to protect)")
+    if args.deadline is not None and args.deadline <= 0:
+        ap.error("--deadline must be > 0")
+    if args.max_queue is not None and args.max_queue < 0:
+        ap.error("--max-queue must be >= 0")
 
     cfg = get_arch(args.arch, smoke=args.smoke)
     model = Model(cfg)
     params = init_params(jax.random.PRNGKey(0), model.param_descs())
 
+    admission = None
+    if args.slo is not None:
+        admission = api.QualityShed(api.SLOBudget(latency=args.slo,
+                                                  max_queue=args.max_queue))
     if args.wire:
         artifact = api.compress(model, params)
         engine = artifact.engine(
             quality=args.quality, batch_slots=args.slots,
-            packed=not args.dense,
+            packed=not args.dense, admission=admission,
+            max_queue=args.max_queue,
         )
         rep = tree_bits_report(engine.params)
         print(
@@ -106,7 +138,9 @@ def main():
             f"{rep['savings'] * 100:.0f}% below f32)"
         )
     else:
-        engine = ServeEngine(model, params, ServeConfig(batch_slots=args.slots))
+        engine = ServeEngine(model, params, ServeConfig(
+            batch_slots=args.slots, admission=admission,
+            max_queue=args.max_queue))
 
     rng = np.random.RandomState(0)
     prompts = [rng.randint(0, cfg.vocab, size=rng.randint(2, 6)).tolist()
@@ -122,7 +156,7 @@ def main():
             names = engine.tier_names
             tiers = [names[i % len(names)] for i in range(len(prompts))]
         _serve_stream(engine, prompts, args.max_new, args.arrival_every,
-                      tiers=tiers)
+                      tiers=tiers, deadline=args.deadline)
         return
     t0 = time.time()
     outs = engine.generate(prompts, max_new=args.max_new)
@@ -134,13 +168,14 @@ def main():
 
 
 def _serve_stream(engine, prompts, max_new: int, arrival_every: int,
-                  tiers=None) -> None:
+                  tiers=None, deadline: float | None = None) -> None:
     """Feed staggered arrivals through submit()/step()/poll(): prompt i
     arrives at step i * arrival_every and joins the running decode as soon
     as a slot frees — no batch flush.  ``tiers`` (one name per prompt)
     submits each request at its own quality tier into the shared dispatch.
-    Prints each request as it finishes with its tier, waiting time (queued
-    steps) and latency (arrival -> last token, in steps)."""
+    Prints each request as it terminates with its typed finish_reason
+    (done / timed_out / cancelled / shed / rejected), realized tier,
+    waiting time (queued steps) and latency (arrival -> last token)."""
     t0 = time.time()
     pending = list(enumerate(prompts))
     rid_to_prompt = {}
@@ -149,23 +184,31 @@ def _serve_stream(engine, prompts, max_new: int, arrival_every: int,
         while pending and pending[0][0] * arrival_every <= step_idx:
             i, p = pending.pop(0)
             tier = tiers[i] if tiers is not None else None
-            rid = engine.submit(p, max_new=max_new, quality=tier)
+            rid = engine.submit(p, max_new=max_new, quality=tier,
+                                deadline=deadline)
             rid_to_prompt[rid] = p
             tag = f" @{tier}" if tier is not None else ""
-            print(f"  step {step_idx:3d}  submit r{rid}{tag} {p}")
+            print(f"  step {step_idx:3d}  submit    r{rid}{tag} {p}")
         engine.step()
-        completed = engine.completed_requests
-        for rid, toks in engine.poll().items():
-            req = completed[rid]
-            tag = f" @{req.quality}" if req.quality is not None else ""
-            print(f"  step {req.finished:3d}  done   r{rid}{tag} "
-                  f"{rid_to_prompt[rid]} -> {toks} "
-                  f"(waited {req.waiting}, latency {req.latency} steps)")
+        for rid, st in engine.poll().items():
+            tag = f" @{st.quality}" if st.quality is not None else ""
+            reason = st.finish_reason.value
+            where = f"step {st.finished:3d}" if st.finished is not None \
+                else f"step {step_idx:3d}"
+            line = f"  {where}  {reason:9s} r{rid}{tag} {rid_to_prompt[rid]}"
+            if st.tokens:
+                line += f" -> {st.tokens}"
+            if st.waiting is not None and st.latency is not None:
+                line += f" (waited {st.waiting}, latency {st.latency} steps)"
+            elif st.detail:
+                line += f" ({st.detail})"
+            print(line)
     dt = time.time() - t0
-    done = engine.completed_requests.values()
+    done = [r for r in engine.completed_requests.values()
+            if r.waiting is not None and r.latency is not None]
     n = sum(len(r.out) for r in done)
-    mean_wait = np.mean([r.waiting for r in done])
-    mean_lat = np.mean([r.latency for r in done])
+    mean_wait = np.mean([r.waiting for r in done]) if done else 0.0
+    mean_lat = np.mean([r.latency for r in done]) if done else 0.0
     print(f"{n} tokens / {len(rid_to_prompt)} requests in {dt:.2f}s "
           f"({n / dt:.1f} tok/s; mean wait {mean_wait:.1f} steps, "
           f"mean latency {mean_lat:.1f} steps)")

@@ -30,6 +30,7 @@ import dataclasses
 import json
 import math
 import re
+import warnings
 from pathlib import Path
 from typing import Any, Sequence
 
@@ -38,14 +39,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig, HybridConfig, MoEConfig
+from repro.core import codec
 from repro.core.policy import QuantPolicy, budgeted_policy, path_str
 from repro.core.qsq import QSQConfig
 from repro.quant.store import (
     QSQWeight,
     dense_tree,
     is_store,
+    is_wire_leaf,
     max_level_delta,
     packable_leaf,
+    plane_mask_for_drop,
     quantize_tree,
     tree_from_wire,
     tree_to_wire,
@@ -54,6 +58,14 @@ from repro.quant.store import (
 
 META_KEY = "__edge_meta__"
 FORMAT = "edge-artifact-v1"
+N_PLANES = 3  # 3-bit wire: sign/MSB, mid, LSB
+
+
+class ArtifactIntegrityError(ValueError):
+    """Checksum verification found damage no quality tier can absorb —
+    a corrupted sign/MSB plane, or LSB damage deeper than any tier's
+    plane drops.  Trailing-LSB damage within tier reach never raises:
+    the artifact loads with a capped tier ceiling instead."""
 
 
 # --------------------------------------------------------------------------
@@ -209,6 +221,10 @@ class EdgeArtifact:
     tiers: QualitySpec = DEFAULT_TIERS
     rank: tuple = ()  # ((path, sensitivity_score), ...) most sensitive first
     policy_meta: dict = dataclasses.field(default_factory=dict)
+    # degraded-wire bookkeeping, set by load(verify=True): path -> LSB
+    # planes that had to be zeroed because their stored checksums did not
+    # match (channel corruption or a truncated download).  Empty = pristine.
+    plane_damage: dict = dataclasses.field(default_factory=dict)
 
     # -- identity ---------------------------------------------------------
     @property
@@ -263,6 +279,99 @@ class EdgeArtifact:
                 out.setdefault(p, [0] * n)[i] = int(d)
         return {p: tuple(v) for p, v in out.items()}
 
+    # -- per-plane integrity (degraded-wire serving) ----------------------
+    def _wire_leaves(self) -> list[tuple[str, dict]]:
+        """('/'-joined path, wire leaf dict) for every packed wire leaf —
+        the same path strings ``rank``/``drop_map`` resolve against."""
+        return [
+            (path_str(p), leaf)
+            for p, leaf in jax.tree_util.tree_flatten_with_path(
+                self.wire, is_leaf=is_wire_leaf)[0]
+            if is_wire_leaf(leaf)
+        ]
+
+    @staticmethod
+    def _leaf_codes(leaf: dict) -> np.ndarray:
+        n = int(np.prod(np.asarray(leaf["shape"]).reshape(-1)))
+        return np.asarray(codec.unpack_dense(jnp.asarray(leaf["packed"]), n))
+
+    def plane_integrity(self) -> dict[str, list[int]]:
+        """Path -> per-plane CRC32s (MSB first) over each wire leaf's
+        codes; stored in the artifact meta by :meth:`save` so a receiver
+        can tell exactly which bit-planes the channel damaged."""
+        return {
+            p: list(codec.plane_crcs(self._leaf_codes(leaf)))
+            for p, leaf in self._wire_leaves()
+        }
+
+    def _verify_integrity(self, stored: dict) -> None:
+        """Check every wire leaf's per-plane CRCs against the stored ones
+        and REPAIR what the tier ladder can absorb: a damaged trailing
+        LSB plane is zeroed in place (bit-identical to a truncated
+        plane-major download — the paper's channel degrading the stream
+        IS the quality dial) and recorded in ``plane_damage`` so serving
+        caps the tier ceiling.  Damage to the sign/MSB plane — or any
+        damage pattern the tiers cannot cover — raises
+        :class:`ArtifactIntegrityError`."""
+        damage: dict[str, int] = {}
+        for p, leaf in self._wire_leaves():
+            want = stored.get(p)
+            if want is None:
+                continue
+            codes = self._leaf_codes(leaf)
+            got = codec.plane_crcs(codes)
+            bad = [i for i in range(N_PLANES)
+                   if got[i] != int(want[i]) & 0xFFFFFFFF]
+            if not bad:
+                continue
+            if 0 in bad:
+                raise ArtifactIntegrityError(
+                    f"wire leaf {p!r}: sign/MSB plane failed its checksum "
+                    f"— unrecoverable; re-download the artifact"
+                )
+            # MSB-first plane index i damaged => the leaf is only valid
+            # with the bottom (N_PLANES - i) planes gone
+            need = max(N_PLANES - i for i in bad)
+            repaired = codes & np.uint8(plane_mask_for_drop(need))
+            leaf["packed"] = np.asarray(codec.pack_dense(repaired, bits=3))
+            damage[p] = need
+        self.plane_damage = damage
+
+    def tier_ceiling_index(self) -> int:
+        """Best (lowest) tier index this artifact can still serve: the
+        first tier whose :meth:`drop_map` truncates every damaged leaf at
+        least as deep as its zeroed planes — at that tier the repaired
+        artifact is BIT-IDENTICAL to a pristine one.  0 when pristine;
+        raises when even the lowest tier leaves damage exposed."""
+        if not self.plane_damage:
+            return 0
+        for t, tier in enumerate(self.tiers.tiers):
+            dm = self.drop_map(tier.name)
+            if all(dm.get(p, 0) >= need
+                   for p, need in self.plane_damage.items()):
+                return t
+        raise ArtifactIntegrityError(
+            f"plane damage {self.plane_damage} exceeds every quality "
+            f"tier's truncation ({self.quality_names()}); the artifact "
+            f"cannot be served — re-download"
+        )
+
+    def degraded_quality(self, quality: str) -> tuple[str, int]:
+        """(serve tier, ceiling index) under this artifact's plane damage:
+        tiers above the ceiling clamp DOWN to it (degrade, don't fail),
+        with a warning naming the substitution."""
+        ceiling = self.tier_ceiling_index()
+        names = self.quality_names()
+        if names.index(quality) < ceiling:
+            warnings.warn(
+                f"artifact plane damage {self.plane_damage} caps serving "
+                f"at tier {names[ceiling]!r}; requested {quality!r} is "
+                f"degraded to it",
+                stacklevel=3,
+            )
+            quality = names[ceiling]
+        return quality, ceiling
+
     # -- realization ------------------------------------------------------
     def tree(self):
         """Decode the wire to a WeightStore tree (QSQWeight leaves)."""
@@ -287,7 +396,10 @@ class EdgeArtifact:
         )
 
     def dense_params(self, quality: str = "hi", like=None):
-        """Fully decoded param tree at a tier (model-free path: CNNs etc.)."""
+        """Fully decoded param tree at a tier (model-free path: CNNs etc.).
+        Plane-damaged artifacts clamp ``quality`` to the tier ceiling."""
+        if self.plane_damage:
+            quality, _ = self.degraded_quality(quality)
         store = truncate_tree(self.tree(), self.drop_map(quality))
         return dense_tree(store, like=like)
 
@@ -344,6 +456,11 @@ class EdgeArtifact:
                 "serving of an attention family, from an artifact with a "
                 "sensitivity ranking (repro.api.compress)"
             )
+        ceiling = 0
+        if self.plane_damage:
+            # degraded wire: serve the best tier the surviving planes
+            # support instead of failing (a truncated download IS a tier)
+            quality, ceiling = self.degraded_quality(quality)
         params, n_packed = self.serve_params(quality, packed=cfg.packed,
                                              per_request=per_request)
         eng = ServeEngine(self.model(), params, cfg)
@@ -352,11 +469,13 @@ class EdgeArtifact:
         eng.quality = quality
         if per_request:
             eng.tier_names = self.quality_names()
+            eng.tier_ceiling = ceiling
         return eng
 
     # -- persistence ------------------------------------------------------
     def save(self, path: str | Path) -> Path:
-        """Write the self-describing artifact npz (wire + tiers + arch)."""
+        """Write the self-describing artifact npz (wire + tiers + arch +
+        per-plane checksums for degraded-wire recovery at load)."""
         meta = {
             "format": FORMAT,
             "arch": _arch_to_json(self.arch_config)
@@ -364,18 +483,28 @@ class EdgeArtifact:
             "tiers": [dataclasses.asdict(t) for t in self.tiers.tiers],
             "rank": [[p, float(s)] for p, s in self.rank],
             "policy": self.policy_meta,
+            "integrity": self.plane_integrity(),
         }
         return save_wire_npz(self.wire, path, meta)
 
     @classmethod
-    def load(cls, path: str | Path) -> "EdgeArtifact":
+    def load(cls, path: str | Path, verify: bool = True) -> "EdgeArtifact":
         """Read an artifact npz; bare (legacy) wire files load with no
         arch/tier metadata and serve only through ``dense_params``/
-        ``tree()`` or an explicitly supplied model."""
+        ``tree()`` or an explicitly supplied model.
+
+        With ``verify`` (default) and stored per-plane checksums, every
+        wire leaf is integrity-checked: intact artifacts load unchanged;
+        trailing-LSB damage (corruption or a partial download) is zeroed
+        in place and CAPS the serving tier (``plane_damage`` /
+        ``tier_ceiling_index``) — bit-identical to a deliberately
+        truncated artifact — while sign/MSB damage raises
+        :class:`ArtifactIntegrityError`.  Artifacts saved before
+        checksums existed skip verification."""
         wire, meta = load_wire_npz(path)
         if meta is None:
             return cls(wire=wire)
-        return cls(
+        art = cls(
             wire=wire,
             arch_config=_arch_from_json(meta["arch"]) if meta.get("arch") else None,
             tiers=QualitySpec(tuple(QualityTier(**t) for t in meta["tiers"]))
@@ -383,6 +512,9 @@ class EdgeArtifact:
             rank=tuple((p, s) for p, s in meta.get("rank", [])),
             policy_meta=meta.get("policy", {}),
         )
+        if verify and meta.get("integrity"):
+            art._verify_integrity(meta["integrity"])
+        return art
 
 
 # --------------------------------------------------------------------------

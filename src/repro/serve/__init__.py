@@ -1,4 +1,37 @@
-from repro.serve.engine import ServeConfig, ServeEngine
-from repro.serve.scheduler import Request, Scheduler, SlotState
+from repro.serve.admission import (
+    AdmissionDecision,
+    AdmissionPolicy,
+    AdmitAll,
+    LoadView,
+    QualityShed,
+    SLOBudget,
+)
+from repro.serve.engine import ServeConfig, ServeEngine, StepInfo
+from repro.serve.scheduler import (
+    FinishReason,
+    QueueFullError,
+    Request,
+    RequestStatus,
+    Scheduler,
+    SlotState,
+    SubmitRejected,
+)
 
-__all__ = ["Request", "Scheduler", "ServeConfig", "ServeEngine", "SlotState"]
+__all__ = [
+    "AdmissionDecision",
+    "AdmissionPolicy",
+    "AdmitAll",
+    "FinishReason",
+    "LoadView",
+    "QualityShed",
+    "QueueFullError",
+    "Request",
+    "RequestStatus",
+    "Scheduler",
+    "ServeConfig",
+    "ServeEngine",
+    "SLOBudget",
+    "SlotState",
+    "StepInfo",
+    "SubmitRejected",
+]

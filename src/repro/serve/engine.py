@@ -35,6 +35,22 @@ tier, and tier changes are mask flips (no retrace, no param-tree swap).
 ``set_quality`` then only moves the default tier for quality-less
 submissions.
 
+The stream is OVERLOAD-GRACEFUL: ``submit(..., deadline=...)`` puts the
+request on a cost-clock budget — each dispatch advances the stream clock
+by its weight-read fraction (a full-quality forward costs 1.0, a
+demand-shortened one its ``read_frac``), so the clock ticks in
+HBM-bandwidth units, the resource the paper's plane truncation buys
+back.  Past-deadline requests are TIMED_OUT: popped from the queue, or
+evicted mid-decode by an active-mask flip (zero retrace; survivors are
+bit-identical; any tokens already emitted remain as a partial result).
+``cancel(rid)`` is the caller-initiated twin.  A pluggable
+:class:`~repro.serve.admission.AdmissionPolicy` (``ServeConfig.admission``)
+can downgrade incoming tiers — degrade quality instead of latency —
+before shedding, and ``ServeConfig.max_queue`` bounds the queue; every
+outcome surfaces as a typed
+:class:`~repro.serve.scheduler.FinishReason` through the structured
+:meth:`poll`.
+
 ``generate()`` is a thin submit-all/drain wrapper over that scheduler for
 greedy attention-family engines, and otherwise falls back to the static
 two-program path (one-dispatch prefill + multi-token decode scan, or the
@@ -65,7 +81,15 @@ import numpy as np
 
 from repro.models.api import Model
 from repro.models.base import init_params
-from repro.serve.scheduler import Request, Scheduler, plane_demand
+from repro.serve.admission import ADMIT, REJECT, SHED, AdmissionPolicy, LoadView
+from repro.serve.scheduler import (
+    FinishReason,
+    Request,
+    RequestStatus,
+    Scheduler,
+    SubmitRejected,
+    plane_demand,
+)
 from repro.train.step import (
     make_admit_step,
     make_cache_prefill_step,
@@ -85,6 +109,26 @@ class ServeConfig:
     packed: bool = True  # wire loads: keep matmul weights in bit-plane form
     continuous: bool = True  # greedy attention-family generate() -> scheduler
     max_prompt: int = 64  # continuous sessions: fixed prefill width
+    max_queue: int | None = None  # bound on queued requests; None = unbounded
+    # pluggable SLO admission control (see repro.serve.admission); None
+    # admits everything at the requested tier, exactly the pre-SLO behavior
+    admission: AdmissionPolicy | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class StepInfo:
+    """What one :meth:`ServeEngine.step` did — host-side accounting only.
+
+    ``cost`` is the step's advance of the stream cost clock (sum of its
+    dispatches' weight-read fractions); ``demand`` the decode dispatch's
+    static plane-demand floor (None when no lane was live)."""
+
+    admitted: tuple[int, ...]
+    finished: tuple[int, ...]
+    timed_out: tuple[int, ...]
+    live: int
+    demand: int | None
+    cost: float
 
 
 class _Session:
@@ -95,7 +139,7 @@ class _Session:
     every jitted program traces once per session shape."""
 
     def __init__(self, model: Model, slots: int, prefill_len: int,
-                 cache_len: int):
+                 cache_len: int, max_queue: int | None = None):
         if prefill_len < 1:
             raise ValueError(f"prefill width must be >= 1, got {prefill_len}")
         if prefill_len >= cache_len:
@@ -105,7 +149,7 @@ class _Session:
             )
         self.prefill_len = prefill_len
         self.cache_len = cache_len
-        self.sched = Scheduler(slots)
+        self.sched = Scheduler(slots, max_queue=max_queue)
         key = jax.random.PRNGKey(0)
         self.cache = init_params(key, model.cache_descs(slots, cache_len))
         # zeroed batch-1 cache reused (never donated) by every admission
@@ -117,6 +161,9 @@ class _Session:
         # changes are data changes, never retraces
         self.tiers = np.zeros((slots,), np.int32)
         self.step_idx = 0
+        # stream cost clock: advances by each dispatch's weight-read
+        # fraction (full quality = 1.0); deadlines are enforced on it
+        self.now = 0.0
         # demand-streaming meter: packed weight-plane words the stream's
         # dispatches read vs. what full-quality streaming would have read,
         # and the tokens those dispatches emitted (host-side analytic
@@ -139,6 +186,12 @@ class ServeEngine:
         # vectors stamped on the packed leaves (set by EdgeArtifact.engine
         # when the engine serves per-request tiers); None = single-tier
         self.tier_names: list[str] | None = None
+        # degraded-wire ceiling: the best (lowest) tier index this engine
+        # may serve.  0 = pristine artifact; EdgeArtifact.engine raises it
+        # when trailing LSB planes failed their checksums, so requests are
+        # silently clamped DOWN to what the surviving planes support
+        # (requested tier stays visible in RequestStatus.requested)
+        self.tier_ceiling: int = 0
         self.serve_step = jax.jit(make_serve_step(model))
         self._prefill = jax.jit(make_cache_prefill_step(model),
                                 static_argnums=(5,))  # demand: see below
@@ -185,10 +238,20 @@ class ServeEngine:
         quality-less submissions (no drain, no param rebuild)."""
         return self.tier_names is not None
 
+    def _clamp_ceiling(self, quality: str | None) -> str | None:
+        """Degraded-wire clamp: tiers better than ``tier_ceiling`` would
+        stream planes that failed their checksums — serve the ceiling
+        tier instead (degrade, don't fail)."""
+        if (self.tier_ceiling and self.tier_names is not None
+                and quality is not None
+                and self.tier_names.index(quality) < self.tier_ceiling):
+            return self.tier_names[self.tier_ceiling]
+        return quality
+
     def _resolve_quality(self, quality: str | None) -> str | None:
         """Validate a submit-time tier name (None -> the engine default)."""
         if quality is None:
-            return self.quality
+            return self._clamp_ceiling(self.quality)
         if self.tier_names is None:
             raise ValueError(
                 "per-request quality needs an engine with per-tier packed "
@@ -200,7 +263,7 @@ class ServeEngine:
                 f"unknown quality tier {quality!r}; this engine has "
                 f"{self.tier_names}"
             )
-        return quality
+        return self._clamp_ceiling(quality)
 
     def _tier_index(self, quality: str | None) -> int:
         if self.tier_names is None or quality is None:
@@ -268,11 +331,29 @@ class ServeEngine:
             self._session = _Session(
                 self.model, self.cfg.batch_slots,
                 prefill_len=self.cfg.max_prompt, cache_len=self.cfg.max_len,
+                max_queue=self.cfg.max_queue,
             )
         return self._session
 
+    def _admission_view(self, s: _Session) -> LoadView:
+        """Snapshot the stream load for an :class:`AdmissionPolicy`:
+        per-request (tier index, remaining dispatches) for queued and live
+        work plus the per-tier dispatch cost table."""
+        names = (tuple(self.tier_names) if self.tier_names is not None
+                 else (self.quality or "default",))
+        return LoadView(
+            step=s.step_idx, now=s.now, n_slots=s.sched.n_slots,
+            tier_names=names, tier_costs=self.tier_cost_table(),
+            queued=tuple((self._tier_index(r.quality), r.max_new)
+                         for r in s.sched.queue),
+            live=tuple((self._tier_index(r.quality),
+                        max(r.max_new - len(r.out), 0))
+                       for r in s.sched.slot_req if r is not None),
+        )
+
     def submit(self, prompt: Sequence[int], max_new: int = 32,
-               quality: str | None = None) -> int:
+               quality: str | None = None,
+               deadline: float | None = None) -> int:
         """Enqueue one prompt on the engine's continuous stream; returns a
         request id for :meth:`poll`.  The request is admitted into the
         first slot that frees up — immediately on the next :meth:`step`
@@ -282,24 +363,82 @@ class ServeEngine:
         is prefilled AND decoded at that tier inside the shared fixed-width
         dispatches, sharing the batch with requests at other tiers.  None
         takes the engine default (``set_quality``), resolved at submission
-        time."""
+        time.
+
+        ``deadline`` is a RELATIVE cost-clock budget (see :attr:`now`):
+        once the stream clock has advanced that far the request is timed
+        out wherever it is — queued (popped) or mid-decode (evicted by an
+        active-mask flip, keeping its partial tokens).
+
+        Requests that can NEVER be served raise :class:`SubmitRejected`
+        (a ValueError) — oversized prompt, cache overflow, non-positive
+        deadline — instead of queueing a guaranteed hang.  LOAD-dependent
+        refusals never raise: a full ``max_queue`` or an admission-policy
+        shed returns a rid that is already terminal with
+        ``finish_reason`` ``REJECTED``/``SHED``."""
         self._require_continuous()
         quality = self._resolve_quality(quality)
+        requested = quality
         s = self._ensure_session()
         if len(prompt) > s.prefill_len:
-            raise ValueError(
+            raise SubmitRejected(
                 f"prompt of {len(prompt)} tokens exceeds the stream's "
                 f"fixed {s.prefill_len}-token prefill window; raise "
                 f"ServeConfig.max_prompt"
             )
         if s.prefill_len + max_new > s.cache_len:
-            raise ValueError(
+            raise SubmitRejected(
                 f"prefill window {s.prefill_len} + max_new {max_new} "
                 f"exceeds the {s.cache_len}-entry slot cache; raise "
                 f"ServeConfig.max_len"
             )
+        if deadline is not None and not deadline > 0:
+            raise SubmitRejected(
+                f"deadline must be a positive cost-clock budget, "
+                f"got {deadline}"
+            )
+        if s.sched.queue_full:
+            return s.sched.finish_unadmitted(
+                prompt, max_new, s.step_idx, FinishReason.REJECTED,
+                quality=quality, requested=requested, arrival_t=s.now,
+                detail=f"bounded queue full (max_queue={s.sched.max_queue})",
+            )
+        if self.cfg.admission is not None:
+            d = self.cfg.admission.decide(
+                self._tier_index(quality), max_new, self._admission_view(s))
+            if d.action == ADMIT:
+                if d.tier is not None and self.tier_names is not None:
+                    # quality-scalable shedding: serve a cheaper tier
+                    # instead of queueing past the SLO
+                    quality = self.tier_names[
+                        max(int(d.tier), self.tier_ceiling)]
+            elif d.action in (SHED, REJECT):
+                reason = (FinishReason.SHED if d.action == SHED
+                          else FinishReason.REJECTED)
+                return s.sched.finish_unadmitted(
+                    prompt, max_new, s.step_idx, reason, quality=quality,
+                    requested=requested, arrival_t=s.now, detail=d.detail,
+                )
+            else:
+                raise ValueError(
+                    f"admission policy returned unknown action {d.action!r}")
+        abs_deadline = None if deadline is None else s.now + float(deadline)
         return s.sched.submit(prompt, max_new, arrival=s.step_idx,
-                              quality=quality)
+                              quality=quality, requested=requested,
+                              deadline=abs_deadline, arrival_t=s.now)
+
+    def cancel(self, rid: int) -> RequestStatus:
+        """Caller-initiated abort.  A queued request is removed; a live one
+        is evicted mid-decode — an active-mask flip, zero retrace, its
+        partial tokens kept.  Idempotent: an already-terminal rid returns
+        its (unchanged) status; unknown rids raise KeyError."""
+        if self._session is None:
+            raise KeyError(f"unknown request id {rid} (no active stream)")
+        s = self._session
+        _, slot = s.sched.cancel(rid, s.step_idx, s.now)
+        if slot is not None:
+            s.active[slot] = 0  # dead lane: a data change, never a retrace
+        return s.sched.status(rid)
 
     def _forward_plane_words(self, demand: int) -> tuple[int, int]:
         """(words_read, words_full): packed weight-plane int32 words ONE
@@ -328,6 +467,23 @@ class ServeEngine:
         self._plane_words_cache[demand] = (read, full)
         return read, full
 
+    def _dispatch_cost(self, demand: int) -> float:
+        """One dispatch's advance of the stream cost clock: its weight
+        read fraction at ``demand`` (packed weights dominate decode time
+        on the HBM-bandwidth model the plane-streaming kernels optimize;
+        a full-quality dispatch is the 1.0 reference).  Engines with no
+        packed leaves tick 1.0 per dispatch — a plain step counter."""
+        read, full = self._forward_plane_words(demand)
+        return read / full if full else 1.0
+
+    def tier_cost_table(self) -> tuple[float, ...]:
+        """Per-tier dispatch cost (weight-read fraction at each tier's
+        demand floor), indexed like ``tier_names`` — the cost side of the
+        admission policy's quality/cost knapsack.  Single-tier engines
+        get the one-entry table ``(1.0,)``."""
+        n = len(self.tier_names) if self.tier_names is not None else 1
+        return tuple(self._dispatch_cost(t) for t in range(n))
+
     def stream_stats(self) -> dict:
         """Demand-streaming meter for the current continuous stream:
         ``tokens`` emitted, packed weight-plane ``bytes_read`` the stream's
@@ -347,24 +503,39 @@ class ServeEngine:
             "read_frac": bytes_read / bytes_full if bytes_full else 1.0,
         }
 
-    def step(self) -> None:
-        """One scheduler iteration: admit queued requests into FREE slots
-        (single-slot prefill + cache lane insert each, emitting the
-        request's first token from the prefill logits), then ONE decode
-        dispatch over all lanes at fixed width.  Requests that reach
-        ``max_new`` are evicted — their slot is FREE for the next step's
-        admissions — and surface via :meth:`poll`.
+    def step(self) -> StepInfo:
+        """One scheduler iteration: enforce deadlines (pop expired queued
+        requests; evict expired live ones by active-mask flip), admit
+        queued requests into FREE slots (single-slot prefill + cache lane
+        insert each, emitting the request's first token from the prefill
+        logits), then ONE decode dispatch over all lanes at fixed width.
+        Requests that reach ``max_new`` are evicted — their slot is FREE
+        for the next step's admissions — and surface via :meth:`poll`.
 
         Weight-plane reads are DEMAND-DRIVEN: each admission prefills at
         the request's own tier (its demand floor), and the decode dispatch
         streams at the batch floor — the min live tier index
         (:func:`~repro.serve.scheduler.plane_demand`) — so a lo-tier-heavy
         batch reads a fraction of the weight bytes.  Demand is a static
-        jit argument; at most one retrace per distinct tier."""
+        jit argument; at most one retrace per distinct tier.  The stream
+        cost clock (:attr:`now`) advances by the step's summed dispatch
+        read fractions — cheaper tiers genuinely buy back clock time."""
         s = self._ensure_session()
+        admitted: list[int] = []
+        finished: list[int] = []
+        timed_out: list[int] = []
+        cost = 0.0
+        for req in s.sched.expire_queued(s.step_idx, s.now):
+            timed_out.append(req.rid)
+        for slot in s.sched.expired_decoding(s.now):
+            req = s.sched.release(slot, s.step_idx, s.now,
+                                  FinishReason.TIMED_OUT)
+            s.active[slot] = 0  # dead lane: a data change, never a retrace
+            timed_out.append(req.rid)
         for slot, req in s.sched.admissible():
-            s.sched.activate(slot, req, s.step_idx)
+            s.sched.activate(slot, req, s.step_idx, now=s.now)
             s.tiers[slot] = self._tier_index(req.quality)
+            admitted.append(req.rid)
             toks = np.zeros((1, s.prefill_len), np.int32)
             toks[0, s.prefill_len - len(req.tokens):] = req.tokens
             # one dispatch: prefill + lane insert + on-device argmax; the
@@ -381,16 +552,20 @@ class ServeEngine:
             s.plane_words_read += r
             s.plane_words_full += f
             s.tokens_emitted += 1
+            cost += self._dispatch_cost(demand)
             first = int(first)
             s.sched.start_decoding(slot)
             s.cur[slot, 0] = first
-            if s.sched.record(slot, first, s.step_idx):
+            if s.sched.record(slot, first, s.step_idx, now=s.now):
                 s.sched.evict(slot)  # max_new == 1: done at admission
+                finished.append(req.rid)
             else:
                 s.active[slot] = 1
         live = s.sched.decoding_slots()
+        demand_used: int | None = None
         if live:
             demand = plane_demand(s.tiers[slot] for slot in live)
+            demand_used = demand
             nxt, s.cache = self._cont_step(
                 self.params, s.cache, jnp.asarray(s.cur),
                 jnp.asarray(s.active), jnp.asarray(s.tiers), demand,
@@ -399,21 +574,35 @@ class ServeEngine:
             s.plane_words_read += r
             s.plane_words_full += f
             s.tokens_emitted += len(live)
+            cost += self._dispatch_cost(demand)
             nxt = np.asarray(nxt)  # the step's one host sync
             for slot in live:
                 s.cur[slot, 0] = nxt[slot]
-                if s.sched.record(slot, int(nxt[slot]), s.step_idx):
+                rid = s.sched.slot_req[slot].rid
+                if s.sched.record(slot, int(nxt[slot]), s.step_idx,
+                                  now=s.now):
                     s.sched.evict(slot)
                     s.active[slot] = 0
+                    finished.append(rid)
         s.step_idx += 1
+        s.now += cost
+        return StepInfo(admitted=tuple(admitted), finished=tuple(finished),
+                        timed_out=tuple(timed_out), live=len(live),
+                        demand=demand_used, cost=cost)
 
     def poll(self, rid: int | None = None):
-        """Results finished since the last poll: ``poll()`` -> {rid:
-        tokens}; ``poll(rid)`` -> that request's tokens, or None while it
-        is still queued/decoding.  Each result is handed out once: an
-        already-claimed or never-issued rid raises KeyError (None never
-        means "lost" — claimed results stay readable via
-        :attr:`completed_requests`)."""
+        """Structured request status (see
+        :class:`~repro.serve.scheduler.RequestStatus`).
+
+        ``poll(rid)`` -> that request's status, an IDEMPOTENT read for any
+        issued rid: ``.state`` says where it is
+        (queued/prefilling/decoding/done), ``.finish_reason`` how it ended
+        (``None`` means keep stepping), ``.tokens`` the emitted ids once
+        terminal — partial for TIMED_OUT/CANCELLED, empty for
+        SHED/REJECTED.  ``poll()`` -> {rid: status} for every request that
+        TERMINATED since the last bare poll, handed out once (claimed
+        results stay readable via ``poll(rid)`` /
+        :attr:`completed_requests`).  Unknown rids raise KeyError."""
         if self._session is None:
             if rid is None:
                 return {}
@@ -431,6 +620,29 @@ class ServeEngine:
     def step_count(self) -> int:
         """Number of step() iterations the current stream has run."""
         return 0 if self._session is None else self._session.step_idx
+
+    @property
+    def now(self) -> float:
+        """The stream cost clock: cumulative dispatch weight-read
+        fractions (a full-quality dispatch = 1.0).  Deadlines and
+        admission SLO budgets are denominated in this unit."""
+        return 0.0 if self._session is None else self._session.now
+
+    @property
+    def queue_depth(self) -> int:
+        """Requests waiting for a slot (admission queue length)."""
+        return 0 if self._session is None else len(self._session.sched.queue)
+
+    def advance_clock(self, dt: float) -> float:
+        """Advance the stream cost clock by ``dt`` without dispatching —
+        models idle wall-time between arrivals and injected slow ticks
+        (fault harness), so deadlines keep aging while the engine waits.
+        Returns the new :attr:`now`."""
+        if dt < 0:
+            raise ValueError(f"cannot rewind the cost clock (dt={dt})")
+        s = self._ensure_session()
+        s.now += float(dt)
+        return s.now
 
     @property
     def completed_requests(self) -> dict[int, Request]:
@@ -451,20 +663,34 @@ class ServeEngine:
         requests are abandoned, the next submit() starts a fresh session."""
         self._session = None
 
-    def run_until_drained(self, max_steps: int | None = None):
+    def run_until_drained(self, max_ticks: int | None = None):
         """step() until the queue and every slot are empty; returns
-        everything :meth:`poll` would (results finished since the last
-        poll, keyed by request id)."""
+        everything :meth:`poll` would (statuses of requests that
+        terminated since the last poll, keyed by request id).
+
+        ``max_ticks`` is a WATCHDOG, not a deadline: every step with work
+        emits at least one token (admissions emit their first token in
+        the same step), so a drain can never legitimately exceed the
+        outstanding token count — the default bound is twice that plus
+        slack, and overrunning it raises RuntimeError instead of spinning
+        forever on a stuck stream."""
         s = self._ensure_session()
+        if max_ticks is None:
+            outstanding = sum(r.max_new for r in s.sched.queue)
+            outstanding += sum(max(r.max_new - len(r.out), 1)
+                               for r in s.sched.slot_req if r is not None)
+            max_ticks = 2 * outstanding + s.sched.n_slots + 16
         n = 0
         while s.sched.has_work:
+            if n >= max_ticks:
+                raise RuntimeError(
+                    f"run_until_drained watchdog: stream not drained after "
+                    f"{n} ticks ({len(s.sched.queue)} queued, "
+                    f"{len(s.sched.decoding_slots())} decoding); every tick "
+                    f"should retire tokens — this stream is stuck"
+                )
             self.step()
             n += 1
-            if max_steps is not None and n >= max_steps and s.sched.has_work:
-                raise RuntimeError(
-                    f"stream not drained after {max_steps} steps "
-                    f"({len(s.sched.queue)} queued)"
-                )
         return self.poll()
 
     # -- generation ----------------------------------------------------------
@@ -521,7 +747,9 @@ class ServeEngine:
     def _generate_continuous(self, prompts, max_new: int, qualities=None):
         """Submit-all/drain on a throwaway session sized to this batch
         (prefill width = longest prompt, cache = prompt + max_new), so the
-        traced shapes match the call exactly like the static path's."""
+        traced shapes match the call exactly like the static path's.  The
+        throwaway session is UNBOUNDED (no max_queue): the batch API has
+        no arrival stream to shed."""
         maxp = max(len(p) for p in prompts)
         saved = self._session
         self._session = _Session(
@@ -533,7 +761,7 @@ class ServeEngine:
                                 quality=None if qualities is None else qualities[i])
                     for i, p in enumerate(prompts)]
             done = self.run_until_drained()
-            return [done[r] for r in rids]
+            return [done[r].tokens for r in rids]
         finally:
             self._session = saved
 

@@ -89,7 +89,7 @@ def test_mixed_tier_tokens_match_solo_single_tier(artifact, solo_oracle):
             for p, q in zip(prompts, tiers, strict=True)]
     out = eng.run_until_drained()
     for p, q, r in zip(prompts, tiers, rids, strict=True):
-        assert out[r] == solo_oracle(p, 6, q), q
+        assert out[r].tokens == solo_oracle(p, 6, q), q
     # tiers must actually disagree somewhere, or the assertion is vacuous
     assert len({tuple(solo_oracle([1, 2, 3], 6, q))
                 for q in art.quality_names()}) > 1
@@ -105,8 +105,8 @@ def test_mid_stream_admission_at_other_tier(artifact, solo_oracle):
         eng.step()
     r_lo = eng.submit([9, 9], max_new=6, quality="lo")
     out = eng.run_until_drained()
-    assert out[r_hi] == solo_oracle([1, 2, 3], 10, "hi")
-    assert out[r_lo] == solo_oracle([9, 9], 6, "lo")
+    assert out[r_hi].tokens == solo_oracle([1, 2, 3], 10, "hi")
+    assert out[r_lo].tokens == solo_oracle([9, 9], 6, "lo")
 
 
 def test_scheduler_fuzz_mixed_tiers_vs_solo_oracle(artifact, solo_oracle,
@@ -148,9 +148,9 @@ def test_scheduler_fuzz_mixed_tiers_vs_solo_oracle(artifact, solo_oracle,
             else:
                 if live and rng.rand() < 0.5:
                     rid = live[int(rng.randint(len(live)))]
-                    toks = eng.poll(rid)
-                    if toks is not None:
-                        results[rid] = toks
+                    st = eng.poll(rid)  # structured, idempotent
+                    if st.done:
+                        results[rid] = st
                         live.remove(rid)
                 else:
                     got = eng.poll()
@@ -162,7 +162,7 @@ def test_scheduler_fuzz_mixed_tiers_vs_solo_oracle(artifact, solo_oracle,
     assert eng._admit._cache_size() == len(tier_names)
     assert len(results) == len(expected) > 10
     for rid, (prompt, max_new, tier) in expected.items():
-        assert results[rid] == solo_oracle(prompt, max_new, tier), \
+        assert results[rid].tokens == solo_oracle(prompt, max_new, tier), \
             (rid, tier, prompt)
     # the fuzz must actually have mixed tiers
     assert len({t for _, _, t in expected.values()}) == len(tier_names)
@@ -179,8 +179,8 @@ def test_set_quality_mid_stream_changes_default_only(artifact, solo_oracle):
     eng.set_quality("lo")                          # no drain required
     r_after = eng.submit([5, 6], max_new=4)        # default: lo
     out = eng.run_until_drained()
-    assert out[r_before] == solo_oracle([5, 6], 4, "hi")
-    assert out[r_after] == solo_oracle([5, 6], 4, "lo")
+    assert out[r_before].tokens == solo_oracle([5, 6], 4, "hi")
+    assert out[r_after].tokens == solo_oracle([5, 6], 4, "lo")
     with pytest.raises(KeyError, match="unknown quality tier"):
         eng.set_quality("ultra")
 

@@ -285,7 +285,7 @@ def test_engine_demand_updates_without_retrace(stream_artifact, no_retrace):
         eng.step()
         r_hi = eng.submit([5, 5], max_new=2, quality="hi")
         out = eng.run_until_drained()
-    assert len(out[r_lo]) == 8 and len(out[r_hi]) == 2
+    assert len(out[r_lo].tokens) == 8 and len(out[r_hi].tokens) == 2
 
 
 def test_engine_stream_meter_all_lo_under_half_of_all_hi(stream_artifact):

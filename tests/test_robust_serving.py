@@ -1,0 +1,486 @@
+"""Overload-graceful serving: deadlines, cancellation, admission, faults.
+
+The robustness contract under test —
+
+* every request terminates with a typed ``FinishReason`` — deadline
+  expiry pops queued requests and EVICTS in-flight ones mid-decode (an
+  active-mask flip, zero retrace), keeping partial tokens; ``cancel`` is
+  idempotent; nothing ever hangs (``run_until_drained`` watchdog);
+* survivors of an eviction/cancellation are BIT-IDENTICAL to a solo
+  engine serving them alone (randomized schedule vs oracle, under
+  ``no_retrace``);
+* submit refuses impossible work with a typed ``SubmitRejected``
+  (oversized prompt, cache overflow, bad deadline), while LOAD-dependent
+  refusals (bounded queue, admission policy) come back as terminal
+  SHED/REJECTED statuses instead of exceptions;
+* ``QualityShed`` downgrades hi->mid->lo against the SLO budget before
+  shedding — the realized tier shows on the status next to the caller's
+  ``requested`` tier;
+* a checksum-corrupted trailing LSB plane caps the artifact's tier
+  ceiling and serves BIT-IDENTICAL to (a) a truncated plane-major
+  download and (b) the pristine artifact at the ceiling tier; MSB/sign
+  plane corruption is a hard typed ``ArtifactIntegrityError``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs.base import ArchConfig
+from repro.models.api import Model
+from repro.models.base import init_params
+from repro.quant.artifact import QualitySpec, QualityTier
+from repro.serve import (
+    FinishReason,
+    QualityShed,
+    QueueFullError,
+    Scheduler,
+    SLOBudget,
+    SubmitRejected,
+    faults,
+)
+from repro.serve.admission import ADMIT, REJECT, SHED, AdmitAll, LoadView
+
+# lo keeps ONE plane on every packable weight (see bench_serve's
+# PLANE_STREAM_TIERS): tier costs separate as ~(1, 2/3, 1/3), and any
+# single-leaf LSB damage is covered by mid's full-coverage drop — the
+# ceiling the corruption tests assert.
+STREAM_TIERS = QualitySpec((
+    QualityTier("hi", drop_planes=0, drop_frac=0.0),
+    QualityTier("mid", drop_planes=1, drop_frac=1.0),
+    QualityTier("lo", drop_planes=2, drop_frac=1.0),
+))
+
+
+def _model_and_params():
+    cfg = ArchConfig(name="smollm-like", family="dense", n_layers=2,
+                     d_model=64, n_heads=4, n_kv=2, d_ff=128, vocab=256,
+                     dtype=jnp.float32, remat=False)
+    model = Model(cfg)
+    params = init_params(jax.random.PRNGKey(0), model.param_descs())
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def artifact():
+    model, params = _model_and_params()
+    return api.compress(model, params, tiers=STREAM_TIERS), model, params
+
+
+@pytest.fixture(scope="module")
+def solo_oracle(artifact):
+    """(prompt, max_new, tier) -> solo tokens from a SINGLE-TIER engine
+    (physically plane-truncated params — shares nothing with the
+    per-slot mask path but the wire)."""
+    art, _, _ = artifact
+    engines = {}
+    memo = {}
+
+    def run(prompt, max_new, tier):
+        key = (tuple(prompt), max_new, tier)
+        if key not in memo:
+            if tier not in engines:
+                engines[tier] = art.engine(quality=tier, per_request=False,
+                                           batch_slots=1, continuous=False)
+            memo[key] = engines[tier].generate([list(prompt)],
+                                               max_new=max_new)[0]
+        return memo[key]
+
+    return run
+
+
+def _engine(art, slots=2, **kw):
+    eng = art.engine(quality="hi", batch_slots=slots, max_prompt=8,
+                     max_len=24, **kw)
+    assert eng.per_request_quality
+    return eng
+
+
+def _warm_all_tiers(eng):
+    """Trace _admit/_cont_step at every demand before a no_retrace block."""
+    for q in eng.tier_names:
+        eng.submit([3, 1], max_new=2, quality=q)
+        eng.run_until_drained()
+    eng.reset_stream()
+
+
+# --------------------------------------------------------------------------
+# Scheduler units: bounded queue, deadlines, cancellation (host-side)
+# --------------------------------------------------------------------------
+def test_scheduler_bounded_queue():
+    sch = Scheduler(1, max_queue=2)
+    sch.submit([1], max_new=1, arrival=0)
+    sch.submit([2], max_new=1, arrival=0)
+    assert sch.queue_full
+    with pytest.raises(QueueFullError, match="max_queue=2"):
+        sch.submit([3], max_new=1, arrival=0)
+    with pytest.raises(ValueError, match="max_queue"):
+        Scheduler(1, max_queue=0)
+
+
+def test_scheduler_submit_validation():
+    sch = Scheduler(1)
+    with pytest.raises(SubmitRejected, match="at least one token"):
+        sch.submit([], max_new=4, arrival=0)
+    with pytest.raises(SubmitRejected, match="max_new"):
+        sch.submit([1], max_new=0, arrival=0)
+
+
+def test_scheduler_expire_queued_times_out():
+    sch = Scheduler(1)
+    r_dead = sch.submit([1, 2], max_new=4, arrival=0, deadline=5.0,
+                        arrival_t=0.0)
+    r_live = sch.submit([3], max_new=4, arrival=0)  # no deadline
+    expired = sch.expire_queued(step=3, now=6.0)
+    assert [r.rid for r in expired] == [r_dead]
+    st = sch.poll(r_dead)
+    assert st.finish_reason is FinishReason.TIMED_OUT
+    assert st.tokens == [] and st.admitted is None
+    assert st.finished_t == 6.0 and st.deadline == 5.0
+    assert sch.poll(r_live).finish_reason is None
+    assert sch.expire_queued(step=4, now=7.0) == []  # no double expiry
+
+
+def test_scheduler_cancel_queued_live_terminal():
+    sch = Scheduler(1)
+    r_q = sch.submit([1], max_new=4, arrival=0)
+    r_live = sch.submit([2], max_new=4, arrival=0)
+    # make r_live live first (FIFO: admit r_q then cancel it from queue)
+    req, slot = sch.cancel(r_q, step=0, now=0.0)
+    assert req.rid == r_q and slot is None
+    assert sch.poll(r_q).finish_reason is FinishReason.CANCELLED
+    slot, req = next(iter(sch.admissible()))
+    sch.activate(slot, req, step=1, now=1.0)
+    sch.start_decoding(slot)
+    sch.record(slot, 7, step=1, now=1.0)
+    req2, freed = sch.cancel(r_live, step=2, now=2.0)
+    assert req2.rid == r_live and freed == slot
+    st = sch.poll(r_live)
+    assert st.finish_reason is FinishReason.CANCELLED
+    assert st.tokens == [7]  # partial result kept
+    # idempotent on terminal rids; unknown rids raise
+    assert sch.cancel(r_live, step=3, now=3.0) == (None, None)
+    with pytest.raises(KeyError):
+        sch.cancel(999, step=3, now=3.0)
+
+
+def test_scheduler_finish_unadmitted_counts_not_raises():
+    sch = Scheduler(1)
+    rid = sch.finish_unadmitted([1, 2], max_new=4, arrival=0,
+                                reason=FinishReason.SHED, quality="lo",
+                                requested="hi", detail="over budget")
+    st = sch.poll(rid)
+    assert st.finish_reason is FinishReason.SHED
+    assert st.tokens == [] and st.requested == "hi"
+    assert st.detail == "over budget"
+    assert not sch.has_work  # never queued, never held a slot
+
+
+# --------------------------------------------------------------------------
+# Engine: deadlines, cancellation, survivors bit-identical, zero retrace
+# --------------------------------------------------------------------------
+def test_deadline_evicts_midstream_survivor_exact(artifact, solo_oracle,
+                                                  no_retrace):
+    art, _, _ = artifact
+    eng = _engine(art, slots=2)
+    _warm_all_tiers(eng)
+    p_dead, p_live = [5, 6, 7], [9, 9]
+    with no_retrace(eng._cont_step, eng._admit):
+        r_dead = eng.submit(p_dead, max_new=8, quality="hi", deadline=2.5)
+        r_live = eng.submit(p_live, max_new=8, quality="hi")
+        done = eng.run_until_drained()
+    st = done[r_dead]
+    assert st.finish_reason is FinishReason.TIMED_OUT
+    assert 0 < len(st.tokens) < 8, "eviction must keep a PARTIAL result"
+    solo = solo_oracle(p_dead, 8, "hi")
+    assert st.tokens == solo[:len(st.tokens)], \
+        "partial tokens must be a prefix of the solo decode"
+    assert st.latency_t is not None and st.finished_t >= st.deadline
+    assert done[r_live].tokens == solo_oracle(p_live, 8, "hi"), \
+        "survivor of a mid-decode eviction must stay bit-identical"
+
+
+def test_deadline_expires_queued_request(artifact, solo_oracle):
+    art, _, _ = artifact
+    eng = _engine(art, slots=1)
+    r_live = eng.submit([1, 2, 3], max_new=6, quality="hi")
+    r_dead = eng.submit([4, 4], max_new=6, quality="hi", deadline=3.0)
+    done = eng.run_until_drained()
+    assert done[r_live].ok
+    assert done[r_live].tokens == solo_oracle([1, 2, 3], 6, "hi")
+    st = done[r_dead]
+    assert st.finish_reason is FinishReason.TIMED_OUT
+    assert st.tokens == [] and st.admitted is None, \
+        "a queued request must expire without ever taking a slot"
+
+
+def test_cancel_midstream_survivor_exact(artifact, solo_oracle, no_retrace):
+    art, _, _ = artifact
+    eng = _engine(art, slots=2)
+    _warm_all_tiers(eng)
+    p_a, p_b = [8, 1, 6], [2, 2]
+    with no_retrace(eng._cont_step, eng._admit):
+        r_a = eng.submit(p_a, max_new=8, quality="hi")
+        r_b = eng.submit(p_b, max_new=8, quality="hi")
+        for _ in range(3):
+            eng.step()
+        st = eng.cancel(r_b)
+        done = eng.run_until_drained()
+    assert st.finish_reason is FinishReason.CANCELLED
+    assert 0 < len(st.tokens) < 8
+    assert st.tokens == solo_oracle(p_b, 8, "hi")[:len(st.tokens)]
+    assert done[r_a].tokens == solo_oracle(p_a, 8, "hi")
+    # idempotent: cancelling a terminal rid returns the same status
+    again = eng.cancel(r_b)
+    assert again.finish_reason is FinishReason.CANCELLED
+    assert again.tokens == st.tokens
+    with pytest.raises(KeyError):
+        eng.cancel(12345)
+
+
+def test_robust_fuzz_vs_solo_oracle(artifact, solo_oracle, no_retrace):
+    """Randomized submit/step/cancel/deadline schedule across mixed tiers:
+    every DONE request bit-identical to its solo oracle, every evicted one
+    a prefix — with the dispatch counters frozen the whole time."""
+    art, _, _ = artifact
+    eng = _engine(art, slots=3)
+    _warm_all_tiers(eng)
+    rng = np.random.default_rng(42)
+    tiers = eng.tier_names
+    specs = {}  # rid -> (prompt, max_new, tier)
+    with no_retrace(eng._cont_step, eng._admit):
+        for _ in range(10):
+            prompt = rng.integers(1, 200, size=int(rng.integers(1, 6))).tolist()
+            max_new = int(rng.integers(1, 7))
+            tier = tiers[int(rng.integers(0, len(tiers)))]
+            deadline = float(rng.uniform(2.0, 9.0)) \
+                if rng.random() < 0.3 else None
+            rid = eng.submit(prompt, max_new=max_new, quality=tier,
+                             deadline=deadline)
+            specs[rid] = (prompt, max_new, tier)
+            for _ in range(int(rng.integers(0, 3))):
+                if eng.has_work:
+                    eng.step()
+            if rng.random() < 0.25:
+                victims = [r for r in specs
+                           if eng.poll(r).finish_reason is None]
+                if victims:
+                    eng.cancel(int(rng.choice(victims)))
+        eng.run_until_drained()
+    for rid, (prompt, max_new, tier) in specs.items():
+        st = eng.poll(rid)
+        assert st.done, f"r{rid} never terminated"
+        solo = solo_oracle(prompt, max_new, tier)
+        if st.ok:
+            assert st.tokens == solo, f"r{rid}@{tier} diverged from solo"
+        else:
+            assert st.finish_reason in (FinishReason.TIMED_OUT,
+                                        FinishReason.CANCELLED)
+            assert st.tokens == solo[:len(st.tokens)], \
+                f"r{rid}@{tier} partial tokens not a solo prefix"
+
+
+# --------------------------------------------------------------------------
+# Typed submit errors / watchdog — the infinite-hang class, killed
+# --------------------------------------------------------------------------
+def test_submit_rejects_impossible_work(artifact):
+    art, _, _ = artifact
+    eng = _engine(art)
+    with pytest.raises(SubmitRejected, match="prefill window"):
+        eng.submit(faults.oversized_prompt(eng), max_new=2)
+    with pytest.raises(SubmitRejected, match="max_len"):
+        eng.submit([1], max_new=10_000)
+    with pytest.raises(SubmitRejected, match="deadline"):
+        eng.submit([1], max_new=2, deadline=0.0)
+    assert not eng.has_work, "rejected submits must leave nothing queued"
+    # SubmitRejected IS a ValueError — existing except clauses keep working
+    assert issubclass(SubmitRejected, ValueError)
+
+
+def test_run_until_drained_watchdog(artifact):
+    art, _, _ = artifact
+    eng = _engine(art, slots=1)
+    eng.submit([1, 2], max_new=4)
+    with pytest.raises(RuntimeError, match="watchdog"):
+        eng.run_until_drained(max_ticks=0)
+    # the stream is still drainable afterwards — the watchdog only raises
+    done = eng.run_until_drained()
+    assert len(done) == 1 and next(iter(done.values())).ok
+
+
+def test_engine_bounded_queue_rejects_typed(artifact):
+    art, _, _ = artifact
+    eng = _engine(art, slots=1, max_queue=1)
+    r1 = eng.submit([1, 2], max_new=3)
+    r2 = eng.submit([3], max_new=3)  # queue is now at its bound
+    st = eng.poll(r2)
+    assert st.finish_reason is FinishReason.REJECTED
+    assert "max_queue" in st.detail and st.tokens == []
+    done = eng.run_until_drained()
+    assert done[r1].ok
+
+
+# --------------------------------------------------------------------------
+# Admission policy: downgrade before shedding, shed before timing out
+# --------------------------------------------------------------------------
+def _view(queued=(), live=(), slots=2):
+    return LoadView(step=0, now=0.0, n_slots=slots,
+                    tier_names=("hi", "mid", "lo"),
+                    tier_costs=(1.0, 2 / 3, 1 / 3), queued=tuple(queued),
+                    live=tuple(live))
+
+
+def test_quality_shed_decide_ladder():
+    p = QualityShed(SLOBudget(latency=10.0, max_queue=2))
+    # idle: requested tier fits
+    d = p.decide(0, 8, _view())
+    assert d.action == ADMIT and d.tier == 0
+    # busy (wait 4): hi estimates 12, mid 9.33 -> downgraded with a detail
+    d = p.decide(0, 8, _view(live=[(0, 4)], slots=1))
+    assert d.action == ADMIT and d.tier == 1 and "downgraded" in d.detail
+    # saturated: even lo misses the budget -> SHED
+    d = p.decide(0, 8, _view(live=[(0, 8), (0, 8)], queued=[(0, 8)],
+                             slots=1))
+    assert d.action == SHED and "even lo" in d.detail
+    # queue depth cap -> REJECT before any estimating
+    d = p.decide(2, 1, _view(queued=[(2, 1), (2, 1)]))
+    assert d.action == REJECT and "cap" in d.detail
+    # a lo request is never upgraded
+    d = p.decide(2, 8, _view())
+    assert d.action == ADMIT and d.tier == 2
+
+
+def test_admit_all_is_fifo_baseline():
+    d = AdmitAll().decide(1, 8, _view(queued=[(0, 8)] * 50))
+    assert d.action == ADMIT and d.tier == 1
+
+
+def test_quality_shed_downgrade_realized_on_engine(artifact, solo_oracle):
+    art, _, _ = artifact
+    eng = _engine(art, slots=1,
+                  admission=QualityShed(SLOBudget(latency=4.5)))
+    # idle stream, 6 dispatches: hi estimates 6.0 > 4.5, mid 4.0 fits
+    rid = eng.submit([7, 7], max_new=6, quality="hi")
+    st = eng.poll(rid)
+    assert st.requested == "hi" and st.quality == "mid", \
+        "the downgrade must be visible on the status"
+    done = eng.run_until_drained()
+    assert done[rid].tokens == solo_oracle([7, 7], 6, "mid"), \
+        "a downgraded request is served EXACTLY at the downgraded tier"
+
+
+def test_quality_shed_sheds_when_even_lo_misses(artifact):
+    art, _, _ = artifact
+    eng = _engine(art, slots=1,
+                  admission=QualityShed(SLOBudget(latency=3.0)))
+    r1 = eng.submit([1], max_new=8, quality="lo")  # 8/3 = 2.67 fits
+    r2 = eng.submit([2], max_new=8, quality="hi")  # wait 2.67 + 8/3 > 3
+    assert eng.poll(r1).finish_reason is None
+    st = eng.poll(r2)
+    assert st.finish_reason is FinishReason.SHED
+    assert st.tokens == [] and "even lo" in st.detail
+    eng.run_until_drained()
+    assert eng.poll(r1).ok
+
+
+# --------------------------------------------------------------------------
+# Fault harness: replay determinism, stragglers, burst arrivals
+# --------------------------------------------------------------------------
+def test_replay_deterministic_and_typed(artifact):
+    art, _, _ = artifact
+    eng = _engine(art, slots=2)
+    prompts = [[1, 2], [3], [4, 5, 6], [7]]
+    trace = faults.burst_trace(len(prompts))  # thundering herd at t=0
+    outcomes = []
+    for _ in range(2):
+        eng.reset_stream()
+        rep = faults.replay(eng, prompts, trace, max_new=4, deadline=4.0)
+        assert set(rep.statuses) == set(range(len(prompts)))
+        assert all(st.done for st in rep.statuses.values())
+        s = rep.summary()
+        assert s["done_rate"] + s["timeout_rate"] + s["shed_rate"] \
+            + s["reject_rate"] == pytest.approx(1.0)
+        assert s["timeout_rate"] > 0, \
+            "a 2-slot burst of 4 with deadline 4.0 must time someone out"
+        outcomes.append({r: (st.finish_reason, tuple(st.tokens))
+                         for r, st in rep.statuses.items()})
+    assert outcomes[0] == outcomes[1], "replay must be deterministic"
+
+
+def test_replay_slow_ticks_age_deadlines(artifact):
+    art, _, _ = artifact
+    eng = _engine(art, slots=2)
+    prompts = [[1, 2], [3, 4]]
+    healthy = faults.replay(eng, prompts, [0.0, 0.0], max_new=4,
+                            deadline=6.0)
+    assert all(st.ok for st in healthy.statuses.values())
+    eng.reset_stream()
+    # every tick stalls 3 extra cost units: deadlines age through it
+    slowed = faults.replay(eng, prompts, [0.0, 0.0], max_new=4,
+                           deadline=6.0, slow=faults.slow_ticks(1, 3.0))
+    assert any(st.finish_reason is FinishReason.TIMED_OUT
+               for st in slowed.statuses.values()), \
+        "stalls must push requests past their deadline"
+
+
+# --------------------------------------------------------------------------
+# Degraded wire: per-plane checksums cap the tier ceiling
+# --------------------------------------------------------------------------
+def test_lsb_corruption_caps_tier_bit_identical(tmp_path, artifact,
+                                                solo_oracle):
+    art, _, _ = artifact
+    clean_path = tmp_path / "model.edge.npz"
+    art.save(clean_path)
+    # pristine round trip: verified, undamaged, full ladder
+    clean = api.load(clean_path)
+    assert clean.plane_damage == {} and clean.tier_ceiling_index() == 0
+    bad_path = faults.corrupt_plane_npz(clean_path, plane=2, n_flips=3,
+                                        seed=1, out=tmp_path / "lsb.npz")
+    damaged = api.load(bad_path)
+    assert damaged.plane_damage, "checksums must catch the flipped plane"
+    assert damaged.tier_ceiling_index() == 1  # mid truncates every leaf
+    # partial download: the LSB planes mid's deferral schedule covers
+    # never arrived (under plane-major streaming the tier ladder IS the
+    # download order — only tier-deferrable planes trail)
+    trunc_path = faults.truncate_planes_npz(clean_path, drop=1,
+                                            leaves=art.drop_map("mid"),
+                                            out=tmp_path / "trunc.npz")
+    truncated = api.load(trunc_path)  # partial download IS a tier
+    assert truncated.tier_ceiling_index() == 1
+    prompts = [[1, 2, 3], [9, 9]]
+    with pytest.warns(UserWarning, match="degraded"):
+        eng_dmg = damaged.engine(quality="hi", batch_slots=2, max_prompt=8,
+                                 max_len=24)
+    with pytest.warns(UserWarning, match="degraded"):
+        eng_trc = truncated.engine(quality="hi", batch_slots=2,
+                                   max_prompt=8, max_len=24)
+    for p in prompts:
+        want = solo_oracle(p, 6, "mid")  # pristine artifact AT the ceiling
+        assert eng_dmg.generate([p], max_new=6)[0] == want, \
+            "repaired LSB damage must serve bit-identical to pristine@mid"
+        assert eng_trc.generate([p], max_new=6)[0] == want, \
+            "truncated download must serve bit-identical to pristine@mid"
+    # damage on planes the ladder never defers cannot be served at all
+    full_path = faults.truncate_planes_npz(clean_path, drop=1,
+                                           out=tmp_path / "full.npz")
+    with pytest.raises(api.ArtifactIntegrityError, match="exceeds"):
+        api.load(full_path).tier_ceiling_index()
+    # the ceiling also clamps per-request submissions upward
+    rid = eng_dmg.submit(prompts[0], max_new=4, quality="hi")
+    assert eng_dmg.poll(rid).quality == "mid"
+    done = eng_dmg.run_until_drained()
+    assert done[rid].tokens == solo_oracle(prompts[0], 4, "mid")
+
+
+def test_msb_corruption_is_hard_typed_error(tmp_path, artifact):
+    art, _, _ = artifact
+    clean_path = tmp_path / "model.edge.npz"
+    art.save(clean_path)
+    bad_path = faults.corrupt_plane_npz(clean_path, plane=0, n_flips=2,
+                                        seed=2, out=tmp_path / "msb.npz")
+    with pytest.raises(api.ArtifactIntegrityError, match="MSB"):
+        api.load(bad_path)
+    # verify=False is the explicit escape hatch (load what the wire holds)
+    art_unverified = api.load(bad_path, verify=False)
+    assert art_unverified.plane_damage == {}

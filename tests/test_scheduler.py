@@ -23,7 +23,7 @@ from repro.configs import get_arch
 from repro.models import Model
 from repro.models.base import init_params
 from repro.serve import ServeConfig, ServeEngine
-from repro.serve.scheduler import Scheduler, SlotState
+from repro.serve.scheduler import FinishReason, Scheduler, SlotState
 
 
 @pytest.fixture(scope="module")
@@ -73,19 +73,26 @@ def test_scheduler_state_machine():
     assert r2 not in s.completed
 
 
-def test_scheduler_poll_hands_out_once():
+def test_scheduler_poll_structured_status():
     s = Scheduler(1)
     rid = s.submit([1], max_new=1, arrival=0)
+    st = s.poll(rid)
+    assert st.state == "queued" and st.finish_reason is None
+    assert st.tokens is None  # non-terminal: no token hand-out yet
     slot, req = next(s.admissible())
     s.activate(slot, req, step=0)
     s.start_decoding(slot)
     s.record(slot, 9, step=0)
     s.evict(slot)
-    assert s.poll(rid) == [9]
-    with pytest.raises(KeyError, match="already claimed"):
-        s.poll(rid)  # claimed is an error, not a silent None
+    st = s.poll(rid)
+    assert st.state == "done" and st.finish_reason is FinishReason.DONE
+    assert st.tokens == [9] and st.ok and st.done
+    assert s.poll(rid).tokens == [9]  # per-rid polls are idempotent
     with pytest.raises(KeyError, match="unknown"):
         s.poll(rid + 1)  # never issued
+    # the bare poll pops newly-terminal statuses exactly once
+    batch = s.poll()
+    assert batch[rid].tokens == [9]
     assert s.poll() == {}
     assert s.completed[rid].out == [9]  # stats survive the claim
 
@@ -131,8 +138,8 @@ def test_midstream_admission_exact_and_isolated(dense_setup):
         eng.step()  # r1 is several tokens deep
     r2 = eng.submit([9, 9], max_new=6)  # joins the running decode
     out = eng.run_until_drained()
-    assert out[r1] == _solo(static, [1, 2, 3], 10)
-    assert out[r2] == _solo(static, [9, 9], 6)
+    assert out[r1].tokens == _solo(static, [1, 2, 3], 10)
+    assert out[r2].tokens == _solo(static, [9, 9], 6)
 
 
 def test_evict_readmit_reuses_slot(dense_setup):
@@ -148,7 +155,7 @@ def test_evict_readmit_reuses_slot(dense_setup):
     assert sched.states == [SlotState.FREE]
     assert not sched.has_work
     for rid, p in zip(rids, prompts, strict=True):
-        assert out[rid] == _solo(static, p, 4)
+        assert out[rid].tokens == _solo(static, p, 4)
     # the three admissions were strictly sequential through slot 0
     admits = sorted(sched.completed[r].admitted for r in rids)
     assert admits[0] < admits[1] < admits[2]
@@ -165,12 +172,15 @@ def test_poll_streams_results_incrementally(dense_setup):
         eng.step()
         seen.update(eng.poll())
     assert r_short in seen and r_long not in seen  # short one finished first
-    assert eng.poll(r_long) is None  # None == still decoding, keep stepping
+    assert seen[r_short].finish_reason is FinishReason.DONE
+    live = eng.poll(r_long)  # structured: still decoding, keep stepping
+    assert live.finish_reason is None and live.state == "decoding"
+    assert live.n_tokens > 0 and live.tokens is None
     out = eng.run_until_drained()  # drains AND polls the remainder
-    assert out[r_long] == _solo(static, [6, 7], 8)
-    with pytest.raises(KeyError, match="already claimed"):
-        eng.poll(r_long)  # handed out once (drain claimed it)
-    assert eng.completed_requests[r_long].out == out[r_long]
+    assert out[r_long].tokens == _solo(static, [6, 7], 8)
+    assert r_long not in eng.poll()  # bare polls hand out once
+    assert eng.poll(r_long).tokens == out[r_long].tokens  # per-rid: idempotent
+    assert eng.completed_requests[r_long].out == out[r_long].tokens
 
 
 def test_submit_rejects_unsupported(dense_setup):
@@ -234,7 +244,7 @@ def test_step_traces_once_across_admissions(no_retrace):
         r2 = eng.submit([9, 9], max_new=4)       # admission into slot 1
         r3 = eng.submit([5, 6, 7, 8], max_new=2)  # queued, admitted post-evict
         out = eng.run_until_drained()
-    assert len(out[r2]) == 4 and len(out[r3]) == 2
+    assert len(out[r2].tokens) == 4 and len(out[r3].tokens) == 2
     # and the jitted programs each compiled exactly one specialization
     assert eng._cont_step._cache_size() == 1
     assert eng._admit._cache_size() == 1
@@ -297,13 +307,13 @@ def test_moe_slot_history_invariance():
     hist = ServeEngine(model, params, scfg)
     r_warm = hist.submit([42, 17, 99], max_new=1)  # done at admission
     hist.step()
-    assert hist.poll(r_warm) is not None
+    assert hist.poll(r_warm).done
     r_probe = hist.submit([1, 2, 3], max_new=8)
-    got = hist.run_until_drained()[r_probe]
+    got = hist.run_until_drained()[r_probe].tokens
     # fresh engine: same probe, never-used second slot
     fresh = ServeEngine(model, params, scfg)
     r_solo = fresh.submit([1, 2, 3], max_new=8)
-    want = fresh.run_until_drained()[r_solo]
+    want = fresh.run_until_drained()[r_solo].tokens
     assert got == want
 
 
