@@ -43,10 +43,19 @@ from repro import api
 from repro.configs.base import ArchConfig
 from repro.models.api import Model
 from repro.models.base import init_params
+from repro.optim import AdamWConfig
 from repro.quant import tree_bits_report
 from repro.quant.artifact import QualitySpec, QualityTier
-from repro.serve import QualityShed, ServeConfig, ServeEngine, SLOBudget, faults
-from repro.train.step import make_cache_prefill_step
+from repro.serve import (
+    QualityShed,
+    ServeConfig,
+    ServeEngine,
+    SLOBudget,
+    SpecConfig,
+    faults,
+)
+from repro.train.state import train_state_descs
+from repro.train.step import make_cache_prefill_step, make_train_step
 
 PROMPTS = [[1, 2, 3], [9, 9], [100, 42, 7, 8]]
 MAX_NEW = 16
@@ -87,6 +96,19 @@ OV_SLO = 12.0              # p90 latency budget, cost-clock units
 OV_HEADROOM = 0.8          # admission budget = headroom * SLO
 OV_DEADLINE = 3 * OV_SLO   # hard deadline -> TIMED_OUT past this
 
+# self-speculative decoding: draft at a cheap tier of the SAME packed
+# weights, verify the window in one hi-tier dispatch.  Measured on
+# DEFAULT_TIERS (lo = drop one LSB plane everywhere -> reads 2/3), so
+# bytes/accepted-token beats plain hi exactly when the per-round
+# acceptance rate clears that 2/3 read fraction.  Constant prompts keep
+# the trained repeat task in-distribution.
+SPEC_PROMPT_SPECS = ((7, 5), (33, 3), (120, 7), (201, 4))
+SPEC_MAX_NEW = 12
+SPEC_SLOTS = 2
+SPEC_TRAIN_STEPS = 600
+SPEC_CONFIGS = (("lo", 2), ("lo", 4), ("mid", 2), ("mid", 4))
+SPEC_HEADLINE = "lo_k4"
+
 
 def _model():
     cfg = ArchConfig(name="smollm-bench", family="dense", n_layers=2,
@@ -95,6 +117,31 @@ def _model():
     model = Model(cfg)
     params = init_params(jax.random.PRNGKey(0), model.param_descs())
     return model, params
+
+
+def _spec_model():
+    """The bench model TRAINED on a constant-repeat task (next = current).
+
+    Random weights give near-flat logits, so truncating one LSB plane
+    flips the argmax and speculative acceptance collapses to ~0 — hiding
+    the byte win this sweep exists to measure.  The repeat task survives
+    both 3-bit quantization and single-plane truncation, so draft tiers
+    genuinely track the hi tier and acceptance reflects the mechanism,
+    not noise.  Fully deterministic: fixed data rng and init key.
+    """
+    cfg = ArchConfig(name="smollm-bench", family="dense", n_layers=2,
+                     d_model=64, n_heads=4, n_kv=2, d_ff=128, vocab=256,
+                     dtype=jnp.float32, remat=False)
+    model = Model(cfg)
+    state = init_params(jax.random.PRNGKey(0), train_state_descs(model))
+    step = jax.jit(make_train_step(model, AdamWConfig(lr=3e-3),
+                                   total_steps=SPEC_TRAIN_STEPS))
+    rng = np.random.default_rng(0)
+    for _ in range(SPEC_TRAIN_STEPS):
+        first = rng.integers(0, cfg.vocab, size=(8, 1))
+        toks = jnp.asarray(np.repeat(first, 16, axis=1), jnp.int32)
+        state, _ = step(state, {"tokens": toks, "labels": toks})
+    return model, state.params
 
 
 def _tok_per_s(engine) -> tuple[float, float]:
@@ -521,6 +568,71 @@ def main(verbose: bool = True, quick: bool = False):
         "slo_met_shed_4x": shed4["p90_latency"] <= OV_SLO,
         "slo_met_fifo_4x": fifo4["p90_latency"] <= OV_SLO,
         **ov_stats,
+    }))
+
+    # SELF-SPECULATIVE DECODING: the quality dial IS the draft model.
+    # Each speculating slot drafts k tokens at a cheap tier (the demand
+    # floor streams only that tier's planes), then ONE hi-tier dispatch
+    # verifies the whole window; the longest agreeing prefix is kept and
+    # rejected tokens are a per-slot KV pos rollback, never a retrace.
+    # Outputs must be token-identical to plain hi decode; the win is
+    # weight bytes per ACCEPTED token, which beats plain hi exactly when
+    # acceptance clears the draft tier's read fraction (2/3 for lo on
+    # DEFAULT_TIERS).  Swept over draft tier x window size on the
+    # trained model, where the repeat task makes acceptance real.
+    sp_model, sp_params = _spec_model()
+    sp_art = api.compress(sp_model, sp_params, tiers=api.DEFAULT_TIERS)
+    sp_prompts = [[t] * n for t, n in SPEC_PROMPT_SPECS]
+    sp_plain = sp_art.engine(quality="hi", batch_slots=SPEC_SLOTS,
+                             max_prompt=8, max_len=8 + SPEC_MAX_NEW + 1)
+    sp_rids = [sp_plain.submit(p, max_new=SPEC_MAX_NEW) for p in sp_prompts]
+    sp_done = sp_plain.run_until_drained()
+    sp_oracle = [sp_done[r].tokens for r in sp_rids]
+    sp_hi_bpt = sp_plain.stream_stats()["bytes_per_token"]
+    sp_stats: dict = {}
+    sp_exact = True
+    for draft, k in SPEC_CONFIGS:
+        eng_sp = sp_art.engine(quality="hi", batch_slots=SPEC_SLOTS,
+                               max_prompt=8, max_len=8 + SPEC_MAX_NEW + 1)
+        sp_r = [eng_sp.submit(p, max_new=SPEC_MAX_NEW,
+                              speculate=SpecConfig(draft, k))
+                for p in sp_prompts]
+        sp_d = eng_sp.run_until_drained()
+        sp_exact &= all(sp_d[r].tokens == t
+                        for r, t in zip(sp_r, sp_oracle, strict=True))
+        st = eng_sp.stream_stats()
+        sp_stats[f"{draft}_k{k}"] = {
+            "acceptance_rate": round(st["acceptance_rate"], 4),
+            "bytes_per_token": round(st["bytes_per_token"], 1),
+            "drafted": st["drafted"],
+            "accepted": st["accepted"],
+            "tokens": st["tokens"],
+        }
+        if verbose:
+            print(f"  speculative/{draft}_k{k}: "
+                  f"acc={st['acceptance_rate']:.3f} "
+                  f"{st['bytes_per_token']:.0f} B/tok "
+                  f"(hi {sp_hi_bpt:.0f}), tokens exact")
+    assert sp_exact, "speculative decode diverged from plain hi tokens"
+    sp_head = sp_stats[SPEC_HEADLINE]
+    assert sp_head["bytes_per_token"] < sp_hi_bpt, \
+        (f"speculative {SPEC_HEADLINE} bytes/token "
+         f"{sp_head['bytes_per_token']} not below plain hi {sp_hi_bpt}")
+    rows.append((f"serve/speculative_{SPEC_HEADLINE}",
+                 sp_head["bytes_per_token"],
+                 f"hi_B_tok={sp_hi_bpt:.0f}"
+                 f"|acc={sp_head['acceptance_rate']:.3f}"
+                 f"|ratio={sp_head['bytes_per_token'] / sp_hi_bpt:.3f}"))
+    print("BENCH " + json.dumps({
+        "bench": "serve_speculative",
+        "requests": len(sp_prompts),
+        "slots": SPEC_SLOTS,
+        "max_new": SPEC_MAX_NEW,
+        "train_steps": SPEC_TRAIN_STEPS,
+        "hi_bytes_per_token": round(sp_hi_bpt, 1),
+        "headline": SPEC_HEADLINE,
+        "tokens_exact": sp_exact,
+        **sp_stats,
     }))
 
     # quality-tier sweep: one engine per tier from the SAME artifact, lower

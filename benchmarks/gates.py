@@ -1,0 +1,197 @@
+"""CI acceptance gates over BENCH lines — checked in, unit-testable.
+
+The bench-smoke job runs ``benchmarks.run --quick --bench-out
+bench-lines.jsonl`` and then invokes this module once per gate::
+
+    python -m benchmarks.gates plane-stream --bench-lines bench-lines.jsonl
+    python -m benchmarks.gates overload     --bench-lines bench-lines.jsonl
+    python -m benchmarks.gates speculative  --bench-lines bench-lines.jsonl
+
+Each gate extracts its BENCH records, writes them to a
+``BENCH_<name>.jsonl`` artifact (so the trajectory survives the run even
+when the gate fails), and enforces the acceptance bar — strictly-better
+structural properties plus a seeded baseline from
+``benchmarks/baselines/`` where one exists.  Gate logic lives in plain
+functions over parsed records (no file I/O), so the failure modes are
+unit-tested in ``tests/test_gates.py`` instead of living as untestable
+heredocs inside the workflow YAML.
+
+Exit codes: 0 gate passed, 1 gate failed (message on stderr), 2 usage
+error (argparse).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+BASELINE_DIR = Path(__file__).resolve().parent / "baselines"
+
+
+class GateError(Exception):
+    """A gate's acceptance bar was not met (or its input is missing)."""
+
+
+def parse_bench_lines(lines) -> list[dict]:
+    """Parse an iterable of jsonl/BENCH-prefixed lines into records."""
+    out = []
+    for line in lines:
+        line = line.strip()
+        if not line:
+            continue
+        if line.startswith("BENCH "):
+            line = line[len("BENCH "):]
+        out.append(json.loads(line))
+    return out
+
+
+def extract(records: list[dict], bench: str) -> list[dict]:
+    """The records for one bench; raises if the bench never emitted."""
+    hits = [d for d in records if d.get("bench") == bench]
+    if not hits:
+        raise GateError(f"no {bench} BENCH line emitted")
+    return hits
+
+
+def gate_plane_stream(records: list[dict], baseline: dict) -> str:
+    """Demand-driven streaming must actually shorten HBM reads: the
+    all-lo mix reads strictly fewer weight bytes per token than all-hi,
+    and no more than the seeded baseline ratio allows."""
+    ps = extract(records, "serve_plane_stream")
+    for d in ps:
+        lo = d["all_lo"]["bytes_per_token"]
+        hi = d["all_hi"]["bytes_per_token"]
+        if not lo < hi:
+            raise GateError(
+                f"all-lo bytes/token {lo} not strictly below all-hi {hi}")
+        if lo / hi > baseline["lo_over_hi_bytes"] + 1e-6:
+            raise GateError(
+                f"lo/hi byte ratio {lo / hi:.4f} regressed past "
+                f"baseline {baseline['lo_over_hi_bytes']}")
+    return ("plane-stream traffic gate ok: "
+            f"{[round(d['lo_over_hi_bytes'], 4) for d in ps]}")
+
+
+def gate_overload(records: list[dict]) -> str:
+    """Overload-graceful serving must actually hold the SLO at 4x: shed
+    p90 under the budget where FIFO blows it, bounded queue, and a
+    nonzero shed/reject rate (the overload was real)."""
+    ov = extract(records, "serve_overload")
+    for d in ov:
+        slo = d["slo"]
+        shed4, fifo4 = d["shed"]["4x"], d["fifo"]["4x"]
+        if shed4["p90_latency"] > slo:
+            raise GateError(f"shed p90 {shed4['p90_latency']} blows the "
+                            f"SLO {slo} at 4x overload")
+        if fifo4["p90_latency"] <= slo:
+            raise GateError(f"FIFO baseline p90 {fifo4['p90_latency']} met "
+                            f"the SLO at 4x — the overload gate is vacuous")
+        if shed4["max_queue_depth"] > 2 * d["slots"]:
+            raise GateError(f"shed queue depth {shed4['max_queue_depth']} "
+                            f"exceeds the 2x-slots bound at 4x")
+        if shed4["shed_rate"] + shed4["reject_rate"] <= 0:
+            raise GateError("4x overload never exercised shedding")
+    return ("overload shedding gate ok: "
+            f"{[(d['shed']['4x']['p90_latency'], d['fifo']['4x']['p90_latency']) for d in ov]}")
+
+
+def gate_speculative(records: list[dict], baseline: dict) -> str:
+    """Self-speculative decoding must stay exact AND pay for itself:
+    verified tokens identical to plain hi decode, headline acceptance
+    rate at or above the seeded floor, and weight bytes per accepted
+    token strictly below plain hi — by at least the baseline margin."""
+    sp = extract(records, "serve_speculative")
+    for d in sp:
+        if not d.get("tokens_exact", False):
+            raise GateError("speculative tokens diverged from plain hi "
+                            "decode — exactness is the contract")
+        head = d[d["headline"]]
+        acc = head["acceptance_rate"]
+        if acc < baseline["min_acceptance_rate"]:
+            raise GateError(
+                f"headline {d['headline']} acceptance rate {acc:.4f} below "
+                f"seeded floor {baseline['min_acceptance_rate']}")
+        hi = d["hi_bytes_per_token"]
+        ratio = head["bytes_per_token"] / hi
+        if not head["bytes_per_token"] < hi:
+            raise GateError(
+                f"speculative bytes/accepted-token "
+                f"{head['bytes_per_token']} not below plain hi {hi}")
+        if ratio > baseline["max_spec_over_hi_bytes"] + 1e-6:
+            raise GateError(
+                f"spec/hi byte ratio {ratio:.4f} regressed past "
+                f"baseline {baseline['max_spec_over_hi_bytes']}")
+    heads = [(d[d["headline"]]["acceptance_rate"],
+              round(d[d["headline"]]["bytes_per_token"]
+                    / d["hi_bytes_per_token"], 4)) for d in sp]
+    return f"speculative decode gate ok: {heads}"
+
+
+def load_baseline(name: str, baseline_dir: Path = BASELINE_DIR) -> dict:
+    path = baseline_dir / f"{name}.json"
+    try:
+        return json.loads(path.read_text())
+    except FileNotFoundError:
+        raise GateError(f"missing seeded baseline {path}") from None
+
+
+def write_artifact(records: list[dict], path: Path) -> None:
+    with open(path, "w") as f:
+        for d in records:
+            f.write(json.dumps(d) + "\n")
+
+
+GATES = {
+    "plane-stream": ("serve_plane_stream", gate_plane_stream, True),
+    "overload": ("serve_overload", gate_overload, False),
+    "speculative": ("serve_speculative", gate_speculative, True),
+}
+
+
+def run_gate(gate: str, records: list[dict], *,
+             baseline_dir: Path = BASELINE_DIR,
+             artifact_dir: Path | None = None) -> str:
+    """Extract + artifact + enforce one named gate; returns the ok line."""
+    bench, fn, needs_baseline = GATES[gate]
+    # the artifact is written BEFORE enforcement so a failing gate still
+    # uploads the measured lines for debugging
+    try:
+        hits = [d for d in records if d.get("bench") == bench]
+        if artifact_dir is not None and hits:
+            write_artifact(hits, artifact_dir / f"BENCH_{bench}.jsonl")
+        if needs_baseline:
+            return fn(records, load_baseline(f"BENCH_{bench}",
+                                             baseline_dir))
+        return fn(records)
+    except KeyError as e:
+        raise GateError(f"BENCH line missing expected key: {e}") from None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.gates",
+        description="CI acceptance gates over BENCH jsonl lines")
+    ap.add_argument("gate", choices=sorted(GATES))
+    ap.add_argument("--bench-lines", default="bench-lines.jsonl",
+                    help="path to the jsonl of BENCH lines from "
+                         "benchmarks.run --bench-out")
+    ap.add_argument("--baselines-dir", type=Path, default=BASELINE_DIR)
+    ap.add_argument("--artifact-dir", type=Path, default=Path("."),
+                    help="where BENCH_<bench>.jsonl is written")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.bench_lines) as f:
+            records = parse_bench_lines(f)
+        msg = run_gate(args.gate, records,
+                       baseline_dir=args.baselines_dir,
+                       artifact_dir=args.artifact_dir)
+    except (GateError, OSError, json.JSONDecodeError) as e:
+        print(f"GATE FAIL [{args.gate}]: {e}", file=sys.stderr)
+        return 1
+    print(msg)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,6 +29,7 @@ from repro.serve import (
     QualityShed,
     RequestStatus,
     SLOBudget,
+    SpecConfig,
     SubmitRejected,
 )
 
@@ -45,6 +46,7 @@ __all__ = [
     "QualityTier",
     "RequestStatus",
     "SLOBudget",
+    "SpecConfig",
     "SubmitRejected",
     "compress",
     "default_policy",

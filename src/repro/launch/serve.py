@@ -25,6 +25,14 @@ admission (downgrade hi->mid->lo against the budget, shed past it);
 ``--max-queue`` bounds the scheduler queue (REJECTED beyond it).  Every
 terminal request prints its typed finish_reason — nothing hangs.
 
+``--speculate TIER[:K]`` (with ``--wire --stream``) turns on
+self-speculative decoding: every request drafts K tokens per round at
+TIER — a cheaper plane mask over the SAME packed weights, streamed via
+the demand floor — then one hi-tier dispatch verifies the window and
+keeps the longest agreeing prefix.  Tokens are identical to plain
+serving; the wins print per request as drafted/accepted counters and as
+the stream's acceptance rate and weight-bytes per accepted token.
+
 On a real pod the same entry point builds the production mesh and shards
 params/caches with launch/mesh.py rules (see launch/dryrun.py for the
 lowering path that proves those shardings compile).
@@ -86,6 +94,12 @@ def main():
     ap.add_argument("--max-queue", type=int, default=None,
                     help="with --stream: bound the scheduler queue; "
                          "arrivals beyond it finish as REJECTED")
+    ap.add_argument("--speculate", default=None, metavar="TIER[:K]",
+                    help="with --wire --stream: self-speculative decoding — "
+                         "draft K tokens/round (default 4) at TIER (a "
+                         "cheaper plane mask of the same packed weights), "
+                         "verify in one serving-tier dispatch; tokens stay "
+                         "identical to plain serving")
     args = ap.parse_args()
 
     if args.slots < 1:
@@ -115,6 +129,31 @@ def main():
         ap.error("--deadline must be > 0")
     if args.max_queue is not None and args.max_queue < 0:
         ap.error("--max-queue must be >= 0")
+    speculate = None
+    if args.speculate is not None:
+        if not (args.wire and args.stream) or args.dense:
+            ap.error("--speculate needs --wire --stream packed serving "
+                     "(the draft tier is a plane mask over the packed "
+                     "artifact inside the continuous scheduler)")
+        if args.mixed_tiers:
+            ap.error("--speculate cannot combine with --mixed-tiers: the "
+                     "draft tier must sit strictly below every request's "
+                     "serving tier, which a full tier cycle violates")
+        draft, _, kstr = args.speculate.partition(":")
+        names = api.DEFAULT_TIERS.names()
+        if draft not in names:
+            ap.error(f"--speculate tier must be one of {names}; got "
+                     f"{draft!r}")
+        if names.index(draft) <= names.index(args.quality):
+            ap.error(f"--speculate tier {draft!r} must sit strictly below "
+                     f"the serving tier {args.quality!r}")
+        try:
+            k = int(kstr) if kstr else 4
+        except ValueError:
+            ap.error(f"--speculate window must be an integer; got {kstr!r}")
+        if k < 1:
+            ap.error(f"--speculate window must be >= 1; got {k}")
+        speculate = api.SpecConfig(draft, k)
 
     cfg = get_arch(args.arch, smoke=args.smoke)
     model = Model(cfg)
@@ -155,8 +194,13 @@ def main():
                          "bare wire with repro.api.compress)")
             names = engine.tier_names
             tiers = [names[i % len(names)] for i in range(len(prompts))]
+        if speculate is not None and not engine.per_request_quality:
+            ap.error("--speculate needs per-request quality serving (a "
+                     "greedy attention family and an artifact with a "
+                     "sensitivity ranking)")
         _serve_stream(engine, prompts, args.max_new, args.arrival_every,
-                      tiers=tiers, deadline=args.deadline)
+                      tiers=tiers, deadline=args.deadline,
+                      speculate=speculate)
         return
     t0 = time.time()
     outs = engine.generate(prompts, max_new=args.max_new)
@@ -168,14 +212,18 @@ def main():
 
 
 def _serve_stream(engine, prompts, max_new: int, arrival_every: int,
-                  tiers=None, deadline: float | None = None) -> None:
+                  tiers=None, deadline: float | None = None,
+                  speculate=None) -> None:
     """Feed staggered arrivals through submit()/step()/poll(): prompt i
     arrives at step i * arrival_every and joins the running decode as soon
     as a slot frees — no batch flush.  ``tiers`` (one name per prompt)
     submits each request at its own quality tier into the shared dispatch.
-    Prints each request as it terminates with its typed finish_reason
-    (done / timed_out / cancelled / shed / rejected), realized tier,
-    waiting time (queued steps) and latency (arrival -> last token)."""
+    ``speculate`` (a SpecConfig) drafts every request at a cheap tier and
+    verifies at its serving tier; accepted/drafted counters print per
+    request.  Prints each request as it terminates with its typed
+    finish_reason (done / timed_out / cancelled / shed / rejected),
+    realized tier, waiting time (queued steps) and latency (arrival ->
+    last token)."""
     t0 = time.time()
     pending = list(enumerate(prompts))
     rid_to_prompt = {}
@@ -185,7 +233,7 @@ def _serve_stream(engine, prompts, max_new: int, arrival_every: int,
             i, p = pending.pop(0)
             tier = tiers[i] if tiers is not None else None
             rid = engine.submit(p, max_new=max_new, quality=tier,
-                                deadline=deadline)
+                                deadline=deadline, speculate=speculate)
             rid_to_prompt[rid] = p
             tag = f" @{tier}" if tier is not None else ""
             print(f"  step {step_idx:3d}  submit    r{rid}{tag} {p}")
@@ -198,6 +246,8 @@ def _serve_stream(engine, prompts, max_new: int, arrival_every: int,
             line = f"  {where}  {reason:9s} r{rid}{tag} {rid_to_prompt[rid]}"
             if st.tokens:
                 line += f" -> {st.tokens}"
+            if st.drafted:
+                line += f" [spec {st.accepted}/{st.drafted} accepted]"
             if st.waiting is not None and st.latency is not None:
                 line += f" (waited {st.waiting}, latency {st.latency} steps)"
             elif st.detail:
@@ -212,6 +262,12 @@ def _serve_stream(engine, prompts, max_new: int, arrival_every: int,
     print(f"{n} tokens / {len(rid_to_prompt)} requests in {dt:.2f}s "
           f"({n / dt:.1f} tok/s; mean wait {mean_wait:.1f} steps, "
           f"mean latency {mean_lat:.1f} steps)")
+    if speculate is not None:
+        st = engine.stream_stats()
+        print(f"speculative: drafted {st['drafted']}, accepted "
+              f"{st['accepted']} (rate {st['acceptance_rate']:.3f}); "
+              f"{st['bytes_per_token']:.0f} weight bytes per accepted "
+              f"token ({st['read_frac']:.2f} of full-plane reads)")
 
 
 if __name__ == "__main__":

@@ -105,6 +105,25 @@ class Model:
             return encdec.encdec_decode(params, self.cfg, cache, tokens)
         raise ValueError(f)
 
+    def verify(self, params, cache, batch):
+        """Batched multi-position forward for self-speculative verify:
+        score each lane's drafted window ``[start, start+wlen)`` in one
+        dispatch at the lane's verify tier, overwriting the draft-tier KV
+        the draft ticks left in the cache.  Returns (logits (B, W, V),
+        cache).  Attention families with full-length caches only — the
+        same per-lane KV isolation admission relies on."""
+        f = self.cfg.family
+        if f not in ("dense", "moe", "vlm"):
+            raise ValueError(
+                f"speculative verify needs an attention family with "
+                f"per-lane KV isolation, not {f!r}"
+            )
+        return transformer.lm_verify(
+            params, self.cfg, cache, batch["tokens"], batch["start"],
+            batch["wlen"], batch["spec"], tiers=batch.get("tiers"),
+            demand=batch.get("demand"),
+        )
+
     def prefill(self, params, cache, tokens, lengths=None, tiers=None,
                 demand=None):
         """Prime a decode cache for whole (B, S) left-padded prompts.

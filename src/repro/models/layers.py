@@ -351,6 +351,71 @@ def prefill_attention(
     return y, KVCache(k=k, v=v, pos=jnp.full((b,), s, jnp.int32), pad=pad)
 
 
+def verify_attention(
+    p: dict,
+    x: jax.Array,
+    cache: KVCache,
+    *,
+    start: jax.Array,  # (B,) int32 — first cache index of each slot's window
+    wlen: jax.Array,   # (B,) int32 — window tokens per slot (0 = not verifying)
+    theta: float = 10000.0,
+    use_rope: bool = True,
+    tiers: jax.Array | None = None,
+    demand: int | None = None,
+) -> tuple[jax.Array, KVCache]:
+    """Multi-position decode for self-speculative VERIFY: x (B, W, d) is a
+    per-slot window of already-chosen tokens (the last emitted token plus
+    the drafted continuation) fed at cache indices ``start + j``.
+
+    The window's k/v OVERWRITE cache entries ``[start, start+wlen)`` per
+    slot — replacing the draft-tier KV the draft ticks left there with
+    this dispatch's (verify-tier) projections — before attention runs, so
+    window query j attends causally over exactly the entries a sequential
+    decode of token j would see: the prefix ``[pad, start)`` plus the
+    window's own writes up to j.  Entries at index > ``start + j`` (stale
+    drafts from deeper draft ticks) are masked, never attended.  Lanes
+    with ``wlen == 0`` are dead: nothing written, ``pos`` unchanged,
+    output garbage the caller discards.
+
+    ``pos`` on written lanes is set to ``start + wlen`` (as if every
+    draft were accepted); the caller rolls it back to the accepted prefix
+    after the acceptance compare — a data change on the per-slot ``pos``
+    leaf, which is all the KV rollback there is.  Full-length caches
+    only: the SWA ring buffer's wrap arithmetic is not supported here
+    (the engine refuses speculation for windowed configs)."""
+    b, w, _ = x.shape
+    t = cache.k.shape[1]
+    positions = None
+    if use_rope:
+        positions = start[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :] \
+            - cache.pad[:, None]
+    q, k_new, v_new = _project_qkv(p, x, positions, theta, tiers, demand)
+
+    # scatter-free window write: entry idx of lane b takes window slot
+    # idx - start[b] when that slot exists, else keeps its cached value
+    idx = jnp.arange(t, dtype=jnp.int32)[None, :]  # (1, T)
+    rel = idx - start[:, None]                     # (B, T)
+    inwin = (rel >= 0) & (rel < wlen[:, None])     # (B, T)
+    relc = jnp.clip(rel, 0, w - 1)[:, :, None, None]
+    k = jnp.where(inwin[:, :, None, None],
+                  jnp.take_along_axis(k_new.astype(cache.k.dtype), relc, axis=1),
+                  cache.k)
+    v = jnp.where(inwin[:, :, None, None],
+                  jnp.take_along_axis(v_new.astype(cache.v.dtype), relc, axis=1),
+                  cache.v)
+
+    # window query j (global index start + j) sees pad <= idx <= start + j
+    qpos = start[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]  # (B, W)
+    valid = (idx[:, None, :] <= qpos[:, :, None]) \
+        & (idx[:, None, :] >= cache.pad[:, None, None])              # (B, W, T)
+    mask = valid[:, None, None, :, :]  # (B,1,1,W,T)
+
+    out = _gqa_scores_apply(q, k.astype(q.dtype), v.astype(q.dtype), mask)
+    y = jnp.einsum("bshk,hkd->bsd", out, W(p["wo"]).astype(x.dtype))
+    pos = jnp.where(wlen > 0, start + wlen, cache.pos)
+    return y, KVCache(k=k, v=v, pos=pos, pad=cache.pad)
+
+
 def cross_attention(p: dict, x: jax.Array, kv: tuple[jax.Array, jax.Array]) -> jax.Array:
     """Cross-attn with precomputed encoder/vision K, V: kv = (k, v) (B,T,Kv,hd)."""
     q = matvec(p["wq"], x)

@@ -266,6 +266,57 @@ def lm_prefill(
     return LMCache(kv=new_kv), logits[:, 0]
 
 
+def lm_verify(
+    params: dict,
+    cfg: ArchConfig,
+    cache: LMCache,
+    tokens: jax.Array,  # (B, W) verify windows: [last emitted, draft_1..k]
+    start: jax.Array,   # (B,) first cache index of each slot's window
+    wlen: jax.Array,    # (B,) window tokens per slot (0 = lane not verifying)
+    spec: jax.Array,    # (B,) speculating-lane mask (gates MoE capacity)
+    tiers: jax.Array | None = None,  # (B,) per-slot VERIFY tier indices
+    demand: int | None = None,  # static plane-demand floor (min verify tier)
+) -> tuple[jax.Array, LMCache]:
+    """Batched multi-position forward for self-speculative verify: one
+    dispatch scores a whole drafted window per slot at the slot's verify
+    tier, streaming the packed weights ONCE instead of once per drafted
+    token.  Structured like :func:`lm_prefill` but anchored mid-stream:
+    each lane's window lands at cache indices ``[start, start+wlen)``,
+    overwriting the draft-tier KV the draft ticks wrote there, and logits
+    come back for EVERY window position (the acceptance compare needs
+    them all).  Dense FFN lanes are exactly independent, so a verified
+    token equals the plain per-token decode bit-for-bit; MoE keeps the
+    usual cross-slot capacity coupling.  Attention-only stacks with
+    full-length caches only."""
+    if cfg.cross_every:
+        raise ValueError("speculative verify requires an attention-only stack")
+    if cfg.window is not None:
+        raise ValueError("speculative verify requires a full-length KV cache")
+    x = L.embed(params["embed"], tokens, cfg.dtype)
+
+    def body(x, inp):
+        bp, c = inp
+        h, c2 = L.verify_attention(
+            bp["attn"], L.rmsnorm(x, bp["ln1"]), c,
+            start=start, wlen=wlen, theta=cfg.rope_theta,
+            tiers=tiers, demand=demand,
+        )
+        x = constrain(x + h, ("batch", "seq_act", None))
+        y = L.rmsnorm(x, bp["ln2"])
+        if cfg.moe is not None:
+            f, _ = L.moe(bp["moe"], y, top_k=cfg.moe.top_k,
+                         capacity_factor=cfg.moe.capacity_factor,
+                         active=spec)
+        else:
+            f = L.mlp(bp["mlp"], y, tiers=tiers, demand=demand)
+        return x + f, c2
+
+    x, new_kv = xscan(body, x, (params["blocks"], cache.kv))
+    x = L.rmsnorm(x, params["final_norm"])
+    logits = L.lm_head(params["embed"], x, tiers=tiers, demand=demand)
+    return logits, LMCache(kv=new_kv)
+
+
 def lm_cache_insert_slot(live: LMCache, one: LMCache, slot: jax.Array) -> LMCache:
     """Admit a request: write a freshly prefilled single-slot cache (batch-1
     leaves from :func:`lm_prefill` on a zeroed cache) into lane ``slot`` of

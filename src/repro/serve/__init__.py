@@ -14,6 +14,7 @@ from repro.serve.scheduler import (
     RequestStatus,
     Scheduler,
     SlotState,
+    SpecConfig,
     SubmitRejected,
 )
 
@@ -32,6 +33,7 @@ __all__ = [
     "ServeEngine",
     "SLOBudget",
     "SlotState",
+    "SpecConfig",
     "StepInfo",
     "SubmitRejected",
 ]

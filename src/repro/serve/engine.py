@@ -79,6 +79,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import dispatch
 from repro.models.api import Model
 from repro.models.base import init_params
 from repro.serve.admission import ADMIT, REJECT, SHED, AdmissionPolicy, LoadView
@@ -87,6 +88,7 @@ from repro.serve.scheduler import (
     Request,
     RequestStatus,
     Scheduler,
+    SpecConfig,
     SubmitRejected,
     plane_demand,
 )
@@ -97,6 +99,7 @@ from repro.train.step import (
     make_decode_loop,
     make_sample_decode_loop,
     make_serve_step,
+    make_verify_step,
     supports_fused_prefill,
 )
 
@@ -129,6 +132,11 @@ class StepInfo:
     live: int
     demand: int | None
     cost: float
+    # speculative round accounting: draft-tier tokens proposed this step
+    # and how many of them the verify dispatch accepted (0/0 for plain
+    # decode steps)
+    drafted: int = 0
+    accepted: int = 0
 
 
 class _Session:
@@ -172,6 +180,10 @@ class _Session:
         self.plane_words_read = 0
         self.plane_words_full = 0
         self.tokens_emitted = 0
+        # self-speculative decoding meter: draft-tier tokens proposed vs.
+        # accepted by verify dispatches across the stream's lifetime
+        self.drafted = 0
+        self.accepted = 0
 
 
 class ServeEngine:
@@ -204,6 +216,9 @@ class ServeEngine:
         self._cont_step = jax.jit(make_cont_decode_step(model),
                                   static_argnums=(5,))
         self._admit = jax.jit(make_admit_step(model), static_argnums=(7,))
+        # speculative verify: one trace per (demand, window width) pair —
+        # demand is bounded by the tier count, width by the draft k
+        self._verify = jax.jit(make_verify_step(model), static_argnums=(7,))
         self._session: _Session | None = None
         self._plane_words_cache: dict[int, tuple[int, int]] = {}
 
@@ -353,7 +368,8 @@ class ServeEngine:
 
     def submit(self, prompt: Sequence[int], max_new: int = 32,
                quality: str | None = None,
-               deadline: float | None = None) -> int:
+               deadline: float | None = None,
+               speculate: SpecConfig | None = None) -> int:
         """Enqueue one prompt on the engine's continuous stream; returns a
         request id for :meth:`poll`.  The request is admitted into the
         first slot that frees up — immediately on the next :meth:`step`
@@ -370,15 +386,28 @@ class ServeEngine:
         out wherever it is — queued (popped) or mid-decode (evicted by an
         active-mask flip, keeping its partial tokens).
 
+        ``speculate`` turns on SELF-SPECULATIVE decoding for this request
+        (:class:`~repro.serve.scheduler.SpecConfig`): the engine drafts
+        ``k`` tokens per round at ``draft_tier`` — a cheaper plane mask
+        over the same packed weights, streamed at the draft demand floor —
+        then verifies the whole window in one dispatch at the request's
+        serving tier, accepting the longest agreeing prefix and rolling
+        the KV ``pos`` back over rejections.  Tokens are identical to
+        plain decode at the serving tier; only the dispatch mix changes.
+        The draft tier must sit strictly below the serving tier, and the
+        engine must serve per-request quality on a full-length cache.
+
         Requests that can NEVER be served raise :class:`SubmitRejected`
         (a ValueError) — oversized prompt, cache overflow, non-positive
-        deadline — instead of queueing a guaranteed hang.  LOAD-dependent
-        refusals never raise: a full ``max_queue`` or an admission-policy
-        shed returns a rid that is already terminal with
-        ``finish_reason`` ``REJECTED``/``SHED``."""
+        deadline, unusable speculation config — instead of queueing a
+        guaranteed hang.  LOAD-dependent refusals never raise: a full
+        ``max_queue`` or an admission-policy shed returns a rid that is
+        already terminal with ``finish_reason`` ``REJECTED``/``SHED``."""
         self._require_continuous()
         quality = self._resolve_quality(quality)
         requested = quality
+        if speculate is not None:
+            self._check_speculate(speculate, quality)
         s = self._ensure_session()
         if len(prompt) > s.prefill_len:
             raise SubmitRejected(
@@ -425,7 +454,40 @@ class ServeEngine:
         abs_deadline = None if deadline is None else s.now + float(deadline)
         return s.sched.submit(prompt, max_new, arrival=s.step_idx,
                               quality=quality, requested=requested,
-                              deadline=abs_deadline, arrival_t=s.now)
+                              deadline=abs_deadline, arrival_t=s.now,
+                              speculate=speculate)
+
+    def _check_speculate(self, sc: SpecConfig, quality: str | None) -> None:
+        """Reject speculation configs that could never save anything:
+        guaranteed-useless setups fail loud at submit, while a mere
+        admission-policy downgrade to the draft tier later just disables
+        drafting for the affected rounds."""
+        if not self.per_request_quality:
+            raise SubmitRejected(
+                "speculative decoding drafts at a cheaper tier of the same "
+                "packed weights, which needs a per-request-quality engine; "
+                "build it via repro.api.compress(...).engine()"
+            )
+        if self.model.cfg.window is not None:
+            raise SubmitRejected(
+                "speculative decoding needs a full-length KV cache; this "
+                "model's sliding-window ring buffer cannot roll back "
+                "rejected entries"
+            )
+        if sc.k < 1:
+            raise SubmitRejected(
+                f"speculate.k must be >= 1 drafted tokens, got {sc.k}")
+        if sc.draft_tier not in self.tier_names:
+            raise SubmitRejected(
+                f"unknown draft tier {sc.draft_tier!r}; this engine has "
+                f"{self.tier_names}"
+            )
+        if self.tier_names.index(sc.draft_tier) <= self._tier_index(quality):
+            raise SubmitRejected(
+                f"draft tier {sc.draft_tier!r} is not below serving tier "
+                f"{quality!r} on the ladder {self.tier_names}; drafting "
+                f"there could never save weight reads"
+            )
 
     def cancel(self, rid: int) -> RequestStatus:
         """Caller-initiated abort.  A queued request is removed; a live one
@@ -492,15 +554,24 @@ class ServeEngine:
         s = self._session
         if s is None or s.tokens_emitted == 0:
             return {"tokens": 0, "bytes_read": 0, "bytes_full": 0,
-                    "bytes_per_token": 0.0, "read_frac": 1.0}
+                    "bytes_per_token": 0.0, "read_frac": 1.0,
+                    "drafted": 0, "accepted": 0, "acceptance_rate": 0.0}
         bytes_read = 4 * s.plane_words_read
         bytes_full = 4 * s.plane_words_full
         return {
             "tokens": s.tokens_emitted,
             "bytes_read": bytes_read,
             "bytes_full": bytes_full,
+            # every emitted token is an accepted (verify-tier-exact) token,
+            # so for speculative streams this IS bytes per accepted token:
+            # draft reads land in the numerator, rejected drafts never
+            # reach the denominator
             "bytes_per_token": bytes_read / s.tokens_emitted,
             "read_frac": bytes_read / bytes_full if bytes_full else 1.0,
+            "drafted": s.drafted,
+            "accepted": s.accepted,
+            "acceptance_rate": (s.accepted / s.drafted
+                                if s.drafted else 0.0),
         }
 
     def step(self) -> StepInfo:
@@ -563,7 +634,27 @@ class ServeEngine:
                 s.active[slot] = 1
         live = s.sched.decoding_slots()
         demand_used: int | None = None
-        if live:
+        drafted_n = accepted_n = 0
+        # speculating slots this round: slot -> (k_eff, draft tier index).
+        # k is clamped so a round never drafts past max_new (the verify
+        # bonus token is the +1), and drafting is a no-op for requests
+        # whose serving tier was downgraded to (or below) the draft tier.
+        spec: dict[int, tuple[int, int]] = {}
+        for slot in live:
+            req = s.sched.slot_req[slot]
+            if req.speculate is None:
+                continue
+            didx = self.tier_names.index(req.speculate.draft_tier)
+            if didx <= int(s.tiers[slot]):
+                continue
+            k_eff = min(req.speculate.k, req.max_new - len(req.out) - 1)
+            if k_eff >= 1:
+                spec[slot] = (k_eff, didx)
+        if spec:
+            demand_used, rcost, drafted_n, accepted_n = self._spec_round(
+                s, spec, finished)
+            cost += rcost
+        elif live:
             demand = plane_demand(s.tiers[slot] for slot in live)
             demand_used = demand
             nxt, s.cache = self._cont_step(
@@ -588,7 +679,127 @@ class ServeEngine:
         s.now += cost
         return StepInfo(admitted=tuple(admitted), finished=tuple(finished),
                         timed_out=tuple(timed_out), live=len(live),
-                        demand=demand_used, cost=cost)
+                        demand=demand_used, cost=cost,
+                        drafted=drafted_n, accepted=accepted_n)
+
+    def _spec_round(self, s: _Session, spec: dict[int, tuple[int, int]],
+                    finished: list[int]) -> tuple[int, float, int, int]:
+        """One self-speculative draft/verify round over the live lanes.
+
+        DRAFT: k ticks of the same jitted decode program plain serving
+        uses — no new trace — with the speculating lanes' tier entries
+        temporarily set to their draft tier, so the batch demand floor
+        streams only the draft planes.  Non-speculating live lanes decode
+        normally inside the same dispatches (per-row plane masks keep
+        them exact) and their tokens are recorded each tick; drafted
+        tokens are buffered host-side and the draft-tier KV they write is
+        scratch.  Lanes whose k_eff is shorter than the round's go
+        draft-inactive early — a mask flip.
+
+        VERIFY: ONE batched dispatch at the lanes' serving tiers scores
+        every window position, overwriting the scratch KV in place, and
+        accepts each lane's longest agreeing prefix on device.  The lane
+        emits its accepted drafts plus the verify pass's bonus token —
+        always >= 1 token, every one exactly what plain serving-tier
+        decode would have produced — and rejected entries cost one
+        per-slot ``pos`` rollback (a data change inside the verify
+        program; no retrace anywhere in the round).
+
+        The cost clock is charged honestly: each draft tick advances it
+        by the draft demand floor's read fraction, the verify by ONE
+        serving-tier dispatch — not k — so deadlines and SLO admission
+        stay denominated in actual weight reads.
+
+        Returns (verify demand, round cost, drafted, accepted)."""
+        k_round = max(k for k, _ in spec.values())
+        # pos invariant: every live lane has prefill_len + emitted - 1
+        # cache entries (admission leaves pos at the prefill width with
+        # one token emitted; every emitted token since advanced it by 1)
+        start = {slot: s.prefill_len + len(s.sched.slot_req[slot].out) - 1
+                 for slot in spec}
+        anchor = {slot: int(s.cur[slot, 0]) for slot in spec}
+        drafts: dict[int, list[int]] = {slot: [] for slot in spec}
+        cost = 0.0
+        for j in range(k_round):
+            draft_active = s.active.copy()
+            draft_tiers = s.tiers.copy()
+            for slot, (k_eff, didx) in spec.items():
+                draft_active[slot] = 1 if j < k_eff else 0
+                draft_tiers[slot] = didx
+            live_now = [slot for slot in range(s.sched.n_slots)
+                        if draft_active[slot]]
+            if not live_now:
+                break  # every non-spec lane finished and k_effs exhausted
+            demand = plane_demand(int(draft_tiers[slot])
+                                  for slot in live_now)
+            with dispatch.dispatch_phase("draft"):
+                nxt, s.cache = self._cont_step(
+                    self.params, s.cache, jnp.asarray(s.cur),
+                    jnp.asarray(draft_active), jnp.asarray(draft_tiers),
+                    demand,
+                )
+            r, f = self._forward_plane_words(demand)
+            s.plane_words_read += r
+            s.plane_words_full += f
+            cost += self._dispatch_cost(demand)
+            nxt = np.asarray(nxt)
+            for slot in live_now:
+                s.cur[slot, 0] = int(nxt[slot])
+                if slot in spec:
+                    drafts[slot].append(int(nxt[slot]))  # proposed, not emitted
+                else:
+                    s.tokens_emitted += 1
+                    rid = s.sched.slot_req[slot].rid
+                    if s.sched.record(slot, int(nxt[slot]), s.step_idx,
+                                      now=s.now):
+                        s.sched.evict(slot)
+                        s.active[slot] = 0
+                        finished.append(rid)
+        w = k_round + 1
+        window = np.zeros((s.sched.n_slots, w), np.int32)
+        wlen = np.zeros((s.sched.n_slots,), np.int32)
+        smask = np.zeros((s.sched.n_slots,), np.int32)
+        starts = np.zeros((s.sched.n_slots,), np.int32)
+        for slot, (k_eff, _) in spec.items():
+            window[slot, 0] = anchor[slot]
+            window[slot, 1:1 + k_eff] = drafts[slot]
+            wlen[slot] = k_eff + 1
+            smask[slot] = 1
+            starts[slot] = start[slot]
+        vdemand = plane_demand(int(s.tiers[slot]) for slot in spec)
+        with dispatch.dispatch_phase("verify"):
+            toks, acc, s.cache = self._verify(
+                self.params, s.cache, jnp.asarray(window),
+                jnp.asarray(starts), jnp.asarray(wlen), jnp.asarray(smask),
+                jnp.asarray(s.tiers), vdemand,
+            )
+        r, f = self._forward_plane_words(vdemand)
+        s.plane_words_read += r
+        s.plane_words_full += f
+        cost += self._dispatch_cost(vdemand)
+        toks = np.asarray(toks)
+        acc = np.asarray(acc)  # the round's final host sync
+        drafted_n = accepted_n = 0
+        for slot, (k_eff, _) in spec.items():
+            a = int(acc[slot])
+            req = s.sched.slot_req[slot]
+            req.drafted += k_eff
+            req.accepted += a
+            drafted_n += k_eff
+            accepted_n += a
+            s.cur[slot, 0] = int(toks[slot, a])  # bonus token: the new cur
+            s.tokens_emitted += a + 1
+            rid = req.rid
+            done = False
+            for tok in toks[slot, :a + 1]:
+                done = s.sched.record(slot, int(tok), s.step_idx, now=s.now)
+            if done:  # a+1 <= remaining, so only the last token can finish
+                s.sched.evict(slot)
+                s.active[slot] = 0
+                finished.append(rid)
+        s.drafted += drafted_n
+        s.accepted += accepted_n
+        return vdemand, cost, drafted_n, accepted_n
 
     def poll(self, rid: int | None = None):
         """Structured request status (see

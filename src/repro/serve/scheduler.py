@@ -91,6 +91,24 @@ class QueueFullError(SubmitRejected):
 
 
 @dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Per-request self-speculative decoding knobs.
+
+    ``draft_tier`` names the quality tier the engine drafts at — a plane
+    mask over the SAME packed weights, so the draft model is free (no
+    second parameter tree, no extra HBM residency); it must sit strictly
+    BELOW the request's serving tier on the ladder or there is nothing to
+    save.  ``k`` is the draft window: tokens proposed per round before
+    one batched verify dispatch at the serving tier accepts the longest
+    agreeing prefix.  Outputs are token-identical to plain decode at the
+    serving tier either way — speculation only changes which dispatches
+    produced them."""
+
+    draft_tier: str
+    k: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
 class RequestStatus:
     """One poll's view of a request — never ``None``, never ambiguous.
 
@@ -120,6 +138,8 @@ class RequestStatus:
     finished_t: float | None
     deadline: float | None
     detail: str = ""
+    drafted: int = 0   # draft-tier tokens proposed for this request
+    accepted: int = 0  # of those, accepted by a verify dispatch
 
     @property
     def done(self) -> bool:
@@ -172,6 +192,9 @@ class Request:
     finished_t: float | None = None
     finish_reason: FinishReason | None = None
     detail: str = ""
+    speculate: SpecConfig | None = None
+    drafted: int = 0
+    accepted: int = 0
     out: list[int] = dataclasses.field(default_factory=list)
 
     @property
@@ -193,7 +216,8 @@ class Request:
             admitted=self.admitted, finished=self.finished,
             arrival_t=self.arrival_t, admitted_t=self.admitted_t,
             finished_t=self.finished_t, deadline=self.deadline,
-            detail=self.detail,
+            detail=self.detail, drafted=self.drafted,
+            accepted=self.accepted,
         )
 
 
@@ -246,13 +270,15 @@ class Scheduler:
     def submit(self, tokens: Sequence[int], max_new: int, arrival: int,
                quality: str | None = None, requested: str | None = None,
                deadline: float | None = None,
-               arrival_t: float | None = None) -> int:
+               arrival_t: float | None = None,
+               speculate: SpecConfig | None = None) -> int:
         if self.queue_full:
             raise QueueFullError(
                 f"admission queue is at its max_queue={self.max_queue} bound"
             )
         req = self._new_request(tokens, max_new, arrival, quality,
                                 requested or quality, deadline, arrival_t)
+        req.speculate = speculate
         self.queue.append(req)
         return req.rid
 

@@ -179,6 +179,53 @@ def make_cont_decode_step(model: Model) -> Callable:
     return cont_step
 
 
+def make_verify_step(model: Model) -> Callable:
+    """(params, cache, window (B, W), start (B,), wlen (B,), spec (B,),
+    tiers (B,), demand (static int)) -> (tokens (B, W), accepted (B,),
+    cache).
+
+    The verify half of self-speculative decoding, acceptance computed ON
+    DEVICE so the host syncs on (B, W) int32 tokens plus a (B,) count —
+    never on logits.  Each speculating lane's ``window`` holds its last
+    emitted token followed by the k tokens the draft-tier ticks proposed;
+    one batched forward at the lane's VERIFY tier scores every window
+    position, overwriting the cache's draft-tier KV in place.  Row j of
+    ``tokens`` is the verify tier's greedy choice after window position j,
+    and ``accepted`` is the longest prefix of drafts that match it — the
+    lane emits ``tokens[:accepted + 1]`` (accepted drafts plus the bonus
+    token the verify pass computed for free), all exactly what plain
+    verify-tier decode would have produced.
+
+    KV rollback is one data change: rejected entries are never erased,
+    the per-slot cache ``pos`` is simply set to ``start + accepted + 1``
+    so later attention masks them until they are overwritten.  Lanes with
+    ``wlen == 0`` (not speculating this round) pass through untouched.
+    Jit with ``static_argnums=(7,)``: one trace per (demand, W) pair —
+    demand is bounded by the tier count, W by the configured draft k."""
+
+    def verify(params, cache, window, start, wlen, spec, tiers, demand=0):
+        logits, cache = model.verify(
+            params, cache,
+            {"tokens": window, "start": start, "wlen": wlen, "spec": spec,
+             "tiers": tiers, "demand": demand},
+        )
+        toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, W)
+        w = window.shape[1]
+        # draft i+1 is accepted iff it matches the verify-tier choice at
+        # window position i and every earlier draft was accepted too
+        eq = (toks[:, : w - 1] == window[:, 1:]) \
+            & (jnp.arange(w - 1, dtype=jnp.int32)[None, :]
+               < (wlen - 1)[:, None])
+        accepted = jnp.sum(jnp.cumprod(eq.astype(jnp.int32), axis=1), axis=1)
+        pos = jnp.where(spec[None, :] > 0,
+                        start[None, :] + accepted[None, :] + 1,
+                        cache.kv.pos)
+        cache = cache._replace(kv=cache.kv._replace(pos=pos))
+        return toks, accepted, cache
+
+    return verify
+
+
 def make_decode_loop(model: Model) -> Callable:
     """(params, cache, first (B,1), xs (T,)) -> (tokens (T, B), cache).
 

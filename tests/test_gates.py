@@ -1,0 +1,159 @@
+"""The CI gates are code, not YAML: unit tests for benchmarks.gates.
+
+Each gate that used to live as an inline heredoc in the workflow (and
+the new speculative-decode gate) is a plain function over parsed BENCH
+records, so every failure mode — missing line, structural regression,
+baseline regression, divergent tokens — is pinned here with synthetic
+records instead of being exercised only when CI breaks for real.  Also
+pins the qsqlint CLI contract the workflow's self-check step relies on:
+--list-rules exits 0, config errors exit 2 (not 1, which means real
+violations).
+"""
+import json
+
+import pytest
+
+from benchmarks import gates
+from repro.analysis.__main__ import main as qsqlint_main
+
+PS_OK = {
+    "bench": "serve_plane_stream",
+    "lo_over_hi_bytes": 0.3333,
+    "all_hi": {"bytes_per_token": 12000.0},
+    "all_lo": {"bytes_per_token": 4000.0},
+}
+PS_BASE = {"lo_over_hi_bytes": 0.3334}
+
+OV_OK = {
+    "bench": "serve_overload",
+    "slo": 12.0,
+    "slots": 4,
+    "shed": {"4x": {"p90_latency": 10.0, "max_queue_depth": 6,
+                    "shed_rate": 0.2, "reject_rate": 0.0}},
+    "fifo": {"4x": {"p90_latency": 30.0}},
+}
+
+SP_OK = {
+    "bench": "serve_speculative",
+    "headline": "lo_k4",
+    "tokens_exact": True,
+    "hi_bytes_per_token": 16640.0,
+    "lo_k4": {"acceptance_rate": 1.0, "bytes_per_token": 13226.7},
+}
+SP_BASE = {"min_acceptance_rate": 0.75, "max_spec_over_hi_bytes": 0.85}
+
+
+def _ov(**patch4x):
+    d = json.loads(json.dumps(OV_OK))
+    d["shed"]["4x"].update(patch4x)
+    return d
+
+
+def _sp(**patch):
+    d = json.loads(json.dumps(SP_OK))
+    head = patch.pop("head", None)
+    d.update(patch)
+    if head:
+        d["lo_k4"].update(head)
+    return d
+
+
+def test_parse_bench_lines_strips_prefix_and_blanks():
+    lines = ["BENCH " + json.dumps(PS_OK), "", json.dumps(OV_OK) + "\n"]
+    recs = gates.parse_bench_lines(lines)
+    assert [r["bench"] for r in recs] == ["serve_plane_stream",
+                                         "serve_overload"]
+
+
+def test_extract_missing_bench_is_a_gate_error():
+    with pytest.raises(gates.GateError, match="no serve_overload"):
+        gates.extract([PS_OK], "serve_overload")
+
+
+def test_plane_stream_gate_passes_and_catches_regressions():
+    assert "ok" in gates.gate_plane_stream([PS_OK], PS_BASE)
+    fat = dict(PS_OK, all_lo={"bytes_per_token": 12000.0})
+    with pytest.raises(gates.GateError, match="not strictly below"):
+        gates.gate_plane_stream([fat], PS_BASE)
+    crept = dict(PS_OK, all_lo={"bytes_per_token": 4100.0})
+    with pytest.raises(gates.GateError, match="regressed past"):
+        gates.gate_plane_stream([crept], PS_BASE)
+
+
+def test_overload_gate_passes_and_catches_every_failure_mode():
+    assert "ok" in gates.gate_overload([OV_OK])
+    with pytest.raises(gates.GateError, match="blows the"):
+        gates.gate_overload([_ov(p90_latency=13.0)])
+    vac = json.loads(json.dumps(OV_OK))
+    vac["fifo"]["4x"]["p90_latency"] = 11.0
+    with pytest.raises(gates.GateError, match="vacuous"):
+        gates.gate_overload([vac])
+    with pytest.raises(gates.GateError, match="queue depth"):
+        gates.gate_overload([_ov(max_queue_depth=9)])
+    with pytest.raises(gates.GateError, match="never exercised"):
+        gates.gate_overload([_ov(shed_rate=0.0)])
+
+
+def test_speculative_gate_passes_and_catches_every_failure_mode():
+    assert "ok" in gates.gate_speculative([SP_OK], SP_BASE)
+    with pytest.raises(gates.GateError, match="diverged"):
+        gates.gate_speculative([_sp(tokens_exact=False)], SP_BASE)
+    with pytest.raises(gates.GateError, match="acceptance rate"):
+        gates.gate_speculative([_sp(head={"acceptance_rate": 0.5})],
+                               SP_BASE)
+    with pytest.raises(gates.GateError, match="not below plain hi"):
+        gates.gate_speculative([_sp(head={"bytes_per_token": 17000.0})],
+                               SP_BASE)
+    with pytest.raises(gates.GateError, match="regressed past"):
+        gates.gate_speculative([_sp(head={"bytes_per_token": 15000.0})],
+                               SP_BASE)
+
+
+def test_run_gate_writes_artifact_even_when_the_gate_fails(tmp_path):
+    base = tmp_path / "baselines"
+    base.mkdir()
+    (base / "BENCH_serve_speculative.json").write_text(json.dumps(SP_BASE))
+    bad = _sp(tokens_exact=False)
+    with pytest.raises(gates.GateError):
+        gates.run_gate("speculative", [bad], baseline_dir=base,
+                       artifact_dir=tmp_path)
+    art = tmp_path / "BENCH_serve_speculative.jsonl"
+    assert json.loads(art.read_text()) == bad
+
+
+def test_run_gate_missing_baseline_is_a_gate_error(tmp_path):
+    with pytest.raises(gates.GateError, match="missing seeded baseline"):
+        gates.run_gate("speculative", [SP_OK], baseline_dir=tmp_path)
+
+
+def test_cli_end_to_end_pass_and_fail(tmp_path, capsys):
+    lines = tmp_path / "bench-lines.jsonl"
+    lines.write_text("BENCH " + json.dumps(SP_OK) + "\n")
+    base = tmp_path / "baselines"
+    base.mkdir()
+    (base / "BENCH_serve_speculative.json").write_text(json.dumps(SP_BASE))
+    argv = ["speculative", "--bench-lines", str(lines),
+            "--baselines-dir", str(base), "--artifact-dir", str(tmp_path)]
+    assert gates.main(argv) == 0
+    assert "ok" in capsys.readouterr().out
+    lines.write_text("BENCH " + json.dumps(_sp(tokens_exact=False)) + "\n")
+    assert gates.main(argv) == 1
+    assert "GATE FAIL" in capsys.readouterr().err
+    assert gates.main(["speculative", "--bench-lines",
+                       str(tmp_path / "nope.jsonl")]) == 1
+
+
+def test_repo_baselines_satisfy_the_gate_schemas():
+    """The seeded baseline files carry every key their gate reads."""
+    ps = gates.load_baseline("BENCH_serve_plane_stream")
+    assert 0 < ps["lo_over_hi_bytes"] <= 1
+    sp = gates.load_baseline("BENCH_serve_speculative")
+    assert 0 < sp["min_acceptance_rate"] <= 1
+    assert 0 < sp["max_spec_over_hi_bytes"] < 1
+
+
+def test_qsqlint_cli_exit_codes():
+    """0 for --list-rules, 2 for a config error — never conflated with
+    1 (real violations), which CI treats as a lint failure."""
+    assert qsqlint_main(["--list-rules"]) == 0
+    assert qsqlint_main(["--select", "NOPE", "src"]) == 2
